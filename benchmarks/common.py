@@ -1,0 +1,50 @@
+"""Shared benchmark infrastructure.
+
+One module per paper table/figure; each exposes ``run(scale) -> list[Row]``.
+Rows print as ``name,us_per_call,derived`` CSV (harness contract).
+
+CPU-container caveat (DESIGN.md §2): wall-clock numbers here are proxies
+measured on 1 CPU core; TPU performance claims live in the roofline
+analysis (EXPERIMENTS.md).  The *relative* algorithm ordering and the
+recall/QPS trade-off shapes are what reproduce the paper's figures.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, List, Optional
+
+
+@dataclasses.dataclass
+class Row:
+    name: str
+    us_per_call: float
+    derived: str = ""
+
+    def csv(self) -> str:
+        return f"{self.name},{self.us_per_call:.1f},{self.derived}"
+
+
+def timed(fn: Callable, *args, n: int = 3, warmup: int = 1) -> float:
+    """Best-of-n wall microseconds per call."""
+    for _ in range(warmup):
+        fn(*args)
+    best = float("inf")
+    for _ in range(n):
+        t0 = time.perf_counter()
+        fn(*args)
+        best = min(best, time.perf_counter() - t0)
+    return best * 1e6
+
+
+SCALES = {
+    # dataset size per scale; benchmarks pick n by scale
+    "smoke": 2_000,
+    "default": 20_000,
+    "full": 100_000,
+}
+
+
+def dataset_size(scale: str) -> int:
+    return SCALES.get(scale, SCALES["default"])

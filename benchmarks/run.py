@@ -1,0 +1,71 @@
+# One function per paper table. Print ``name,us_per_call,derived`` CSV.
+"""Benchmark harness entry point (deliverable d).
+
+    PYTHONPATH=src python -m benchmarks.run [--scale smoke|default|full]
+                                            [--only fig4,fig9,...]
+
+Modules map 1:1 onto the paper's tables/figures:
+    bench_recall_qps     Figure 4  (recall vs QPS)
+    bench_index_size     Figure 5 + Table 1 (index size / QPS)
+    bench_robustness     Figure 6 + Q2 (Rand-Euclidean)
+    bench_approximation  Figure 8 + Q3 (eps-recall)
+    bench_hamming        Figure 9 + Q4 (Hamming embeddings)
+    bench_build_time     Figure 10 (build time)
+    bench_batch_mode     Figure 11 + §4.4 (batch vs single)
+    bench_kernels        Pallas kernel micro + TPU roofline claims
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+import traceback
+
+MODULES = [
+    ("fig4", "benchmarks.bench_recall_qps"),
+    ("fig5", "benchmarks.bench_index_size"),
+    ("fig6", "benchmarks.bench_robustness"),
+    ("fig8", "benchmarks.bench_approximation"),
+    ("fig9", "benchmarks.bench_hamming"),
+    ("fig10", "benchmarks.bench_build_time"),
+    ("fig11", "benchmarks.bench_batch_mode"),
+    ("kernels", "benchmarks.bench_kernels"),
+]
+
+
+def main(argv=None) -> None:
+    p = argparse.ArgumentParser()
+    p.add_argument("--scale", default="smoke",
+                   choices=["smoke", "default", "full"])
+    p.add_argument("--only", default=None,
+                   help="comma-separated subset of: "
+                        + ",".join(k for k, _ in MODULES))
+    args = p.parse_args(argv)
+    only = set(args.only.split(",")) if args.only else None
+
+    import importlib
+
+    print("name,us_per_call,derived")
+    failures = 0
+    for key, modname in MODULES:
+        if only and key not in only:
+            continue
+        t0 = time.time()
+        try:
+            mod = importlib.import_module(modname)
+            rows = mod.run(args.scale)
+            for row in rows:
+                print(row.csv())
+            print(f"# {key}: {len(rows)} rows in {time.time() - t0:.1f}s",
+                  file=sys.stderr)
+        except Exception:
+            failures += 1
+            print(f"# {key} FAILED", file=sys.stderr)
+            traceback.print_exc()
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,64 @@
+"""Config-driven parameter sweep with subprocess isolation and timeout —
+the paper's §3.3/§3.4 workflow: one YAML, many algorithm instances, built
+once and re-queried per query-args group, each run stored as its own file,
+then rendered as a website.
+
+    PYTHONPATH=src python examples/parameter_sweep.py
+"""
+
+from repro.core import results
+from repro.core.metrics import compute_all
+from repro.core.plotting import export_website
+from repro.core.runner import run_benchmark
+
+SWEEP = """
+float:
+  angular:
+    ivf:
+      constructor: IVF
+      base-args: ["@metric"]
+      run-groups:
+        small-index: {args: [[32]],  query-args: [[1, 2, 4, 8, 16, 32]]}
+        big-index:   {args: [[128]], query-args: [[1, 4, 16, 64]]}
+    hyperplane-lsh:
+      constructor: HyperplaneLSH
+      base-args: ["@metric"]
+      run-groups:
+        sweep:
+          args: [[4, 8], [10, 14], [256]]
+          query-args: [[1, 5, 11]]
+    graph:
+      constructor: KNNGraph
+      base-args: ["@metric"]
+      run-groups:
+        sweep: {args: [[16]], query-args: [[8, 16, 32, 64]]}
+"""
+
+
+def main():
+    out = "/tmp/repro_sweep"
+    records = run_benchmark(
+        "blobs-angular-10000", SWEEP, count=10, batch=True, out_dir=out,
+        isolated=False, timeout=600)
+    print(f"\n{len(records)} runs stored under {out}")
+    # metrics recomputed from stored files — no algorithm re-runs (§3.6)
+    best = {}
+    for path in results.enumerate_runs(out):
+        r = results.load(path)
+        m = compute_all(r)
+        key = r.algorithm
+        if key not in best or m["qps"] > best[key][1]["qps"]:
+            if m["k-nn"] >= 0.8:
+                best[key] = (r.instance_name + str(r.query_arguments), m)
+    print("\nfastest configuration per algorithm at recall >= 0.8:")
+    for algo, (name, m) in sorted(best.items()):
+        print(f"  {algo:12s} {name:40s} qps={m['qps']:9.0f} "
+              f"recall={m['k-nn']:.3f}")
+    site = export_website([results.load(p)
+                           for p in results.enumerate_runs(out)],
+                          "/tmp/repro_sweep_site")
+    print(f"\nwebsite: {site}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,45 @@
+"""Quickstart: benchmark three k-NN algorithms on a synthetic dataset and
+print the recall/QPS Pareto frontier — the paper's core workflow in ~20
+lines of public API.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+
+from repro.core.plotting import ascii_frontier, to_csv
+from repro.core.runner import run_benchmark
+
+CONFIG = """
+float:
+  euclidean:
+    bruteforce:
+      constructor: BruteForce
+      base-args: ["@metric"]
+    ivf:
+      constructor: IVF
+      base-args: ["@metric"]
+      run-groups:
+        sweep:
+          args: [[64]]                 # one index build...
+          query-args: [[1, 4, 16, 64]] # ...four query configurations
+    rpforest:
+      constructor: RPForest
+      base-args: ["@metric"]
+      run-groups:
+        sweep:
+          args: [[10], [64]]
+          query-args: [[1, 4]]
+"""
+
+
+def main():
+    records = run_benchmark(
+        "blobs-euclidean-10000", CONFIG, count=10, batch=True,
+        out_dir="/tmp/repro_results")
+    print()
+    print(ascii_frontier(records))
+    print()
+    print(to_csv(records, ["k-nn", "qps", "build", "indexsize"]))
+
+
+if __name__ == "__main__":
+    main()

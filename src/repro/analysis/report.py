@@ -1,0 +1,134 @@
+"""Collect dry-run JSON artifacts into the EXPERIMENTS.md §Dry-run and
+§Roofline tables.
+
+    PYTHONPATH=src python -m repro.analysis.report [--dir experiments/dryrun]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+from pathlib import Path
+
+
+def fmt_bytes(b):
+    if b is None:
+        return "-"
+    for unit in ("B", "KB", "MB", "GB", "TB"):
+        if abs(b) < 1024:
+            return f"{b:.1f}{unit}"
+        b /= 1024
+    return f"{b:.1f}PB"
+
+
+def fmt_s(x):
+    if x is None:
+        return "-"
+    if x >= 1:
+        return f"{x:.2f}s"
+    if x >= 1e-3:
+        return f"{x * 1e3:.2f}ms"
+    return f"{x * 1e6:.1f}us"
+
+
+def load_records(d: Path, suffix: str):
+    out = {}
+    for f in sorted(d.glob(f"*_{suffix}.json")):
+        rec = json.loads(f.read_text())
+        if rec.get("tag"):
+            continue                      # perf-iteration variants excluded
+        out[(rec["arch"], rec["shape"])] = rec
+    return out
+
+
+def fix_hint(rec) -> str:
+    """One sentence on what would move the dominant term down."""
+    r = rec["roofline"]
+    dom = r["dominant"]
+    arch, shape = rec["arch"], rec["shape"]
+    if dom == "memory":
+        if "train" in shape:
+            return ("shard saved activations over model axis (SP) + "
+                    "microbatch to cut remat carries")
+        if "decode" in shape or "long" in shape:
+            return "int8 KV cache + fused decode-attention kernel"
+        if "serve" in shape or "retrieval" in shape:
+            return "fuse lookup+interaction; keep embeddings bf16"
+        return "reduce activation traffic via fusion/bf16"
+    if dom == "collective":
+        if "retrieval" in shape or "serve" in shape:
+            return "hierarchical top-k merge (k per hop, not k*shards)"
+        if "prefill" in shape or "decode" in shape:
+            return ("batch-shard the vocab all-reduce; overlap cache "
+                    "update collectives with compute")
+        return "overlap all-reduce with backward; compress gradients int8"
+    return "increase arithmetic intensity (larger tiles / fused matmuls)"
+
+
+def roofline_table(records) -> str:
+    lines = [
+        "| arch | shape | t_comp | t_mem | t_coll | dominant | "
+        "MODEL_FLOPS | useful | roofline frac | what would move the "
+        "dominant term |",
+        "|---|---|---|---|---|---|---|---|---|---|",
+    ]
+    for (arch, shape), rec in sorted(records.items()):
+        r = rec["roofline"]
+        lines.append(
+            f"| {arch} | {shape} | {fmt_s(r['t_compute_s'])} | "
+            f"{fmt_s(r['t_memory_s'])} | {fmt_s(r['t_collective_s'])} | "
+            f"**{r['dominant']}** | {r['model_flops']:.2e} | "
+            f"{r['useful_ratio']:.2f} | {r['roofline_fraction']:.3f} | "
+            f"{fix_hint(rec)} |")
+    return "\n".join(lines)
+
+
+def dryrun_table(records) -> str:
+    lines = [
+        "| arch | shape | mesh | compile | args/dev | temp/dev | "
+        "HLO GFLOPs/dev | HBM GB/dev | coll MB/dev | top collective |",
+        "|---|---|---|---|---|---|---|---|---|---|",
+    ]
+    for (arch, shape), rec in sorted(records.items()):
+        m = rec["memory"]
+        r = rec["roofline"]
+        coll = r.get("coll_breakdown") or rec["collectives"]
+        coll = {k: v for k, v in coll.items() if k != "total"}
+        total = sum(coll.values())
+        top = max(coll, key=coll.get) if total else "-"
+        lines.append(
+            f"| {arch} | {shape} | {rec['mesh']} | {rec['t_compile_s']}s | "
+            f"{fmt_bytes(m['argument_bytes'])} | "
+            f"{fmt_bytes(m['temp_bytes'])} | "
+            f"{r['flops_per_chip'] / 1e9:.1f} | "
+            f"{r['bytes_per_chip'] / 1e9:.1f} | "
+            f"{total / 1e6:.1f} | {top} |")
+    return "\n".join(lines)
+
+
+def main(argv=None):
+    p = argparse.ArgumentParser()
+    p.add_argument("--dir", default="experiments/dryrun")
+    args = p.parse_args(argv)
+    d = Path(args.dir)
+    sp = load_records(d, "sp")
+    mp = load_records(d, "mp")
+    skips = []
+    skipdir = d / "skips"
+    if skipdir.exists():
+        for f in sorted(skipdir.glob("*.json")):
+            skips.append(json.loads(f.read_text()))
+
+    print("### Single-pod (16x16 = 256 chips)\n")
+    print(dryrun_table(sp))
+    print("\n### Multi-pod (2x16x16 = 512 chips)\n")
+    print(dryrun_table(mp))
+    print("\n### Skipped cells\n")
+    for s in skips:
+        print(f"- {s['arch']} x {s['shape']}: {s['skip']}")
+    print("\n### Roofline (single-pod)\n")
+    print(roofline_table(sp))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,171 @@
+"""Roofline term derivation from compiled dry-run artifacts (EXPERIMENTS.md
+§Roofline).
+
+    compute   = HLO_FLOPs_per_chip / peak_FLOPs
+    memory    = HLO_bytes_per_chip / HBM_bw
+    collective= collective_bytes_per_chip / link_bw
+
+``cost_analysis()`` on an SPMD-partitioned executable reports the per-device
+module, so terms divide by per-chip capability directly (equivalent to the
+global/chips formulation).  collective_bytes is parsed from the optimized
+HLO text: the result-shape bytes of every all-gather / all-reduce /
+reduce-scatter / all-to-all / collective-permute op.
+
+Hardware constants: TPU v5e — 197 TFLOP/s bf16, 819 GB/s HBM,
+~50 GB/s/link ICI.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+LINK_BW = 50e9
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+# e.g.  bf16[4,128,512]{2,1,0}   or   f32[]   (layout braces optional)
+_SHAPE_RE = re.compile(r"(\w+)\[([0-9,]*)\]")
+
+
+def _shape_bytes(type_str: str) -> int:
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(type_str):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, int]:
+    """Sum result-shape bytes per collective opcode over an HLO module."""
+    out = {c: 0 for c in _COLLECTIVES}
+    out["total"] = 0
+    for line in hlo_text.splitlines():
+        stripped = line.strip()
+        if "=" not in stripped:
+            continue
+        lhs, rhs = stripped.split("=", 1)
+        rhs = rhs.strip()
+        for c in _COLLECTIVES:
+            # opcode appears right after the result type, before '('
+            m = re.match(r"((?:\([^)]*\))|(?:[\w\[\]{},\s]*?))\s*"
+                         + re.escape(c) + r"(?:-start|-done)?\(", rhs)
+            if m:
+                # -done ops repeat the shape of -start; count starts only
+                if c + "-done(" in rhs:
+                    break
+                out[c] += _shape_bytes(m.group(1))
+                out["total"] += _shape_bytes(m.group(1))
+                break
+    return out
+
+
+@dataclasses.dataclass
+class Roofline:
+    flops: float                 # per chip
+    bytes_accessed: float        # per chip
+    coll_bytes: float            # per chip
+    model_flops: float           # analytic useful FLOPs (global)
+    chips: int
+    xla_flops: float = 0.0       # raw HloCostAnalysis (loop bodies x1)
+    xla_bytes: float = 0.0
+    coll_breakdown: dict = dataclasses.field(default_factory=dict)
+
+    @property
+    def t_compute(self) -> float:
+        return self.flops / PEAK_FLOPS
+
+    @property
+    def t_memory(self) -> float:
+        return self.bytes_accessed / HBM_BW
+
+    @property
+    def t_collective(self) -> float:
+        return self.coll_bytes / LINK_BW
+
+    @property
+    def dominant(self) -> str:
+        terms = {"compute": self.t_compute, "memory": self.t_memory,
+                 "collective": self.t_collective}
+        return max(terms, key=terms.get)
+
+    @property
+    def useful_ratio(self) -> float:
+        """MODEL_FLOPS / (HLO_FLOPs x chips): remat/redundancy waste."""
+        total = self.flops * self.chips
+        return self.model_flops / total if total > 0 else 0.0
+
+    @property
+    def bound_time(self) -> float:
+        return max(self.t_compute, self.t_memory, self.t_collective)
+
+    @property
+    def roofline_fraction(self) -> float:
+        """Useful-compute time / bound time — the score being pushed up."""
+        t_useful = self.model_flops / self.chips / PEAK_FLOPS
+        b = self.bound_time
+        return t_useful / b if b > 0 else float("nan")
+
+    def as_dict(self) -> dict:
+        return {
+            "flops_per_chip": self.flops,
+            "bytes_per_chip": self.bytes_accessed,
+            "coll_bytes_per_chip": self.coll_bytes,
+            "model_flops": self.model_flops,
+            "chips": self.chips,
+            "t_compute_s": self.t_compute,
+            "t_memory_s": self.t_memory,
+            "t_collective_s": self.t_collective,
+            "dominant": self.dominant,
+            "useful_ratio": self.useful_ratio,
+            "roofline_fraction": self.roofline_fraction,
+            "xla_flops_per_chip": self.xla_flops,
+            "xla_bytes_per_chip": self.xla_bytes,
+            "coll_breakdown": self.coll_breakdown,
+        }
+
+
+def from_compiled(compiled, model_flops: float, chips: int,
+                  hlo_text: str | None = None) -> Roofline:
+    """Derive per-chip roofline terms from the compiled module.
+
+    Uses the trip-count-aware walker (repro.analysis.hlo_cost), NOT the raw
+    ``cost_analysis()``: XLA's HloCostAnalysis visits while bodies once, so
+    scanned layers/loss chunks/flash blocks would be undercounted by their
+    trip counts (verified in tests/test_hlo_cost.py).  The raw XLA numbers
+    are still recorded alongside for transparency (xla_* fields).
+    """
+    from repro.analysis import hlo_cost
+
+    cost = compiled.cost_analysis()
+    if isinstance(cost, list):           # older jax returns [dict]
+        cost = cost[0]
+    text = hlo_text if hlo_text is not None else compiled.as_text()
+    walked = hlo_cost.analyze(text)
+    roof = Roofline(
+        flops=float(walked.flops),
+        bytes_accessed=float(walked.bytes),
+        coll_bytes=float(walked.coll_total),
+        model_flops=model_flops,
+        chips=chips,
+    )
+    roof.xla_flops = float(cost.get("flops", 0.0))
+    roof.xla_bytes = float(cost.get("bytes accessed", 0.0))
+    roof.coll_breakdown = dict(walked.coll)
+    return roof

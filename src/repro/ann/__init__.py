@@ -1,0 +1,21 @@
+"""JAX implementations of the paper's algorithm families (Table 2).
+
+Importing this package registers every algorithm with the core registry.
+"""
+
+from repro.ann import distances, topk
+from repro.ann.bruteforce import BruteForce
+from repro.ann.ivf import IVF
+from repro.ann.rpforest import RPForest
+from repro.ann.lsh import HyperplaneLSH, E2LSH
+from repro.ann.graph import KNNGraph
+from repro.ann.hnsw import HNSW
+from repro.ann.hamming import (BitsamplingAnnoy, BruteForceHamming,
+                               MultiIndexHashing)
+from repro.ann.sharded import ShardedBruteForce, ShardedIVF
+
+__all__ = [
+    "distances", "topk", "BruteForce", "IVF", "RPForest", "HyperplaneLSH",
+    "E2LSH", "KNNGraph", "HNSW", "BitsamplingAnnoy", "BruteForceHamming",
+    "MultiIndexHashing", "ShardedBruteForce", "ShardedIVF",
+]

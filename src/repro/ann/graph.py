@@ -1,0 +1,200 @@
+"""k-NN-graph search — the paper's graph-based family (KGraph, SWG, NSW;
+Table 2).  The paper's summary: "graph-based algorithms provide by far the
+best performance on most of the datasets".
+
+Build: exact k-NN graph (blocked brute force on device; the KGraph
+construction oracle).  Optional RNG-style edge diversification (the pruning
+heuristic HNSW/NSG use) — keeps edges whose endpoints are not closer to an
+already-kept neighbor than to the node.
+
+Query: greedy best-first beam search, TPU-adapted: the candidate pool is a
+fixed-size (ef) sorted register array updated with masked merges inside
+``lax.while_loop``; every iteration expands exactly one unexpanded pool
+entry and merges its adjacency list.  vmap batches queries.  (CPU
+implementations use a heap + visited hash set; the fixed beam + dedupe-merge
+is the dense equivalent.  We benchmark implementations, per the paper.)
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.ann import distances as D
+from repro.core.interface import BaseANN
+from repro.core.registry import register
+
+
+@register("KNNGraph")
+class KNNGraph(BaseANN):
+    supported_metrics = ("euclidean", "angular")
+
+    def __init__(self, metric: str, degree: int = 16, diversify: bool = False,
+                 extra_edges: int = 2, n_entries: int = 16, seed: int = 0):
+        super().__init__(metric)
+        self.degree = int(degree)
+        self.diversify = bool(diversify)
+        # Small-world shortcuts: a pure exact k-NN graph on clustered data is
+        # near-disconnected across clusters (exactly the paper's Q2 finding
+        # that graph methods depend on global navigability); NSW gains its
+        # long-range links from incremental insertion.  We add ``extra_edges``
+        # uniform random out-edges per node to restore navigability.
+        self.extra_edges = int(extra_edges)
+        self.n_entries = int(n_entries)
+        self.seed = int(seed)
+        self.ef = 32
+        self.name = (f"KNNGraph(deg={degree},rnd={extra_edges}"
+                     f"{',div' if diversify else ''})")
+        self._dist_comps = 0
+        self._expansions = 0
+
+    def set_query_arguments(self, ef: int) -> None:
+        self.ef = max(1, int(ef))
+
+    # ------------------------------------------------------------------ fit
+    def fit(self, X: np.ndarray) -> None:
+        from repro.data.groundtruth import exact_knn
+
+        X = np.asarray(X, np.float32)
+        if self.metric == "angular":
+            X = X / np.maximum(np.linalg.norm(X, axis=1, keepdims=True), 1e-12)
+        self._n, self._d = X.shape
+        self._Xj = jnp.asarray(X)
+        deg = min(self.degree, self._n - 1)
+        nbrs, dists = exact_knn(X, X, deg + 1, self.metric)
+        # drop self-edges (first column after sort is the point itself)
+        graph = np.where(nbrs[:, :1] == np.arange(self._n)[:, None],
+                         nbrs[:, 1:deg + 1], nbrs[:, :deg])
+        if self.diversify:
+            graph = self._diversify(X, graph, dists)
+        rng = np.random.default_rng(self.seed)
+        if self.extra_edges > 0 and self._n > deg + 1:
+            shortcuts = rng.integers(0, self._n,
+                                     size=(self._n, self.extra_edges))
+            graph = np.concatenate([graph, shortcuts], axis=1)
+        self._graph = jnp.asarray(graph.astype(np.int32))
+        # entry points: spread deterministically over the corpus
+        self._entries = jnp.asarray(
+            rng.choice(self._n, size=min(self.n_entries, self._n),
+                       replace=False).astype(np.int32))
+        self._rebuild()
+
+    def _rebuild(self):
+        self._jq = jax.jit(self._batch_search, static_argnames=("k", "ef"))
+
+    def _diversify(self, X, graph, dists):
+        """Occlusion pruning (NSG/HNSW heuristic), vectorised per node."""
+        n, deg = graph.shape
+        keep = np.full_like(graph, -1)
+        for i in range(n):
+            cand = graph[i]
+            kept: list[int] = []
+            for c in cand:
+                xc = X[c]
+                ok = True
+                for kpt in kept:
+                    # prune c if an already-kept neighbor is closer to c
+                    # than i is (c is "occluded")
+                    if np.sum((X[kpt] - xc) ** 2) < np.sum((X[i] - xc) ** 2):
+                        ok = False
+                        break
+                if ok:
+                    kept.append(int(c))
+                if len(kept) == deg:
+                    break
+            while len(kept) < deg:          # refill with originals
+                for c in cand:
+                    if int(c) not in kept:
+                        kept.append(int(c))
+                        break
+            keep[i] = kept[:deg]
+        return keep
+
+    # ---------------------------------------------------------------- query
+    def _dist_to(self, q, ids):
+        x = self._Xj[jnp.maximum(ids, 0)]
+        if self.metric == "angular":
+            d = 1.0 - x @ q
+        else:
+            diff = x - q[None, :]
+            d = jnp.sum(diff * diff, axis=-1)
+        return jnp.where(ids >= 0, d, jnp.inf)
+
+    def _search_one(self, q, *, k: int, ef: int):
+        """Beam search for one query; returns (dists [k], ids [k])."""
+        n_entry = self._entries.shape[0]
+        pool_ids = jnp.full((ef,), -1, jnp.int32)
+        pool_d = jnp.full((ef,), jnp.inf, jnp.float32)
+        pool_exp = jnp.zeros((ef,), bool)
+        e_d = self._dist_to(q, self._entries)
+        ids0 = jnp.concatenate([self._entries, pool_ids])[:ef]
+        d0 = jnp.concatenate([e_d, pool_d])[:ef]
+        order = jnp.argsort(d0)
+        state = (ids0[order], d0[order], pool_exp, jnp.int32(0))
+
+        deg = self._graph.shape[1]
+        max_iter = ef + n_entry
+
+        def cond(state):
+            _, d, exp, it = state
+            has_work = jnp.any(~exp & jnp.isfinite(d))
+            return has_work & (it < max_iter)
+
+        def body(state):
+            ids, d, exp, it = state
+            sel = jnp.argmin(jnp.where(exp, jnp.inf, d))
+            cur = ids[sel]
+            exp = exp.at[sel].set(True)
+            nbrs = self._graph[jnp.maximum(cur, 0)]          # [deg]
+            nbrs = jnp.where(cur >= 0, nbrs, -1)
+            nd = self._dist_to(q, nbrs)
+            # merge pool and neighbors; dedupe by id keeping expanded entries
+            all_ids = jnp.concatenate([ids, nbrs])
+            all_d = jnp.concatenate([d, nd])
+            all_exp = jnp.concatenate([exp, jnp.zeros((deg,), bool)])
+            # dedupe: sort by (id, -expanded); duplicate = same id as prev
+            order = jnp.lexsort((~all_exp, all_ids))
+            si = all_ids[order]
+            sd = all_d[order]
+            se = all_exp[order]
+            prev = jnp.concatenate([jnp.full((1,), -2, si.dtype), si[:-1]])
+            dup = (si == prev) | (si < 0)
+            sd = jnp.where(dup, jnp.inf, sd)
+            si = jnp.where(dup, -1, si)
+            # keep best ef by distance
+            order2 = jnp.argsort(sd)[:ef]
+            return (si[order2], sd[order2], se[order2], it + 1)
+
+        ids, d, _, it = jax.lax.while_loop(cond, body, state)
+        kk = min(k, ef)
+        return d[:kk], ids[:kk], it
+
+    def _batch_search(self, Q, *, k: int, ef: int):
+        Q = Q.astype(jnp.float32)
+        if self.metric == "angular":
+            Q = Q / jnp.maximum(jnp.linalg.norm(Q, axis=1, keepdims=True),
+                                1e-12)
+        return jax.vmap(lambda q: self._search_one(q, k=k, ef=ef))(Q)
+
+    def query(self, q: np.ndarray, k: int) -> np.ndarray:
+        _, ids, it = self._jq(jnp.asarray(q)[None, :], k=k, ef=self.ef)
+        self._expansions += int(it[0])
+        self._dist_comps += int(it[0]) * int(self._graph.shape[1]) + self._entries.shape[0]
+        return np.asarray(ids[0])
+
+    def batch_query(self, Q: np.ndarray, k: int) -> None:
+        outs = []
+        Qj = jnp.asarray(Q)
+        for s in range(0, Q.shape[0], 4096):
+            _, ids, it = self._jq(Qj[s:s + 4096], k=k, ef=self.ef)
+            outs.append(ids)
+            self._expansions += int(jnp.sum(it))
+            self._dist_comps += (int(jnp.sum(it)) * int(self._graph.shape[1])
+                                 + Q.shape[0] * self._entries.shape[0])
+        self._batch_results = jax.block_until_ready(jnp.concatenate(outs))
+
+    def get_additional(self):
+        return {"dist_comps": self._dist_comps,
+                "expansions": self._expansions}

@@ -1,0 +1,346 @@
+"""Hamming-space algorithms (paper §4 Q4 and Figure 9).
+
+  * ``BruteForceHamming``  — XOR + popcount over packed uint32 codes
+                             (exact; uses the Pallas popcount kernel in
+                             batch mode when enabled).
+  * ``BitsamplingAnnoy``   — the paper's Hamming-aware Annoy variant:
+                             tree nodes split on a *single sampled bit*
+                             (Bitsampling LSH) instead of hyperplanes, with
+                             popcount rerank.
+  * ``MultiIndexHashing``  — Norouzi et al.'s MIH: codes are split into m
+                             contiguous chunks; a query probes, per chunk,
+                             all buckets within chunk-radius r.  With
+                             r >= ceil((t+1)/m)-1 for threshold t this is
+                             the exact algorithm; we expose r as the query
+                             parameter (r large enough => exact, smaller =>
+                             approximate), matching the paper's observation
+                             that MIH parameters strongly affect QPS.
+
+All three share the dense sorted-bucket machinery from the LSH module.
+Points are packed uint32 words; bits = 32 * words.
+"""
+
+from __future__ import annotations
+
+import itertools
+from functools import partial
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.ann.lsh import _SortedBuckets
+from repro.ann.topk import topk_unique
+from repro.core.interface import BaseANN
+from repro.core.registry import register
+
+
+def _popcount_matrix(Q, X):
+    x = jax.lax.bitwise_xor(Q[:, None, :].astype(jnp.uint32),
+                            X[None, :, :].astype(jnp.uint32))
+    return jnp.sum(jax.lax.population_count(x), axis=-1).astype(jnp.int32)
+
+
+@register("BruteForceHamming")
+class BruteForceHamming(BaseANN):
+    supported_metrics = ("hamming",)
+
+    def __init__(self, metric: str, backend: str = "jnp"):
+        super().__init__(metric)
+        self.backend = backend
+        self.name = f"BruteForceHamming(backend={backend})"
+        self._dist_comps = 0
+
+    def fit(self, X: np.ndarray) -> None:
+        self._X = jnp.asarray(np.asarray(X, np.uint32))
+        self._n = X.shape[0]
+
+        @partial(jax.jit, static_argnames=("k",))
+        def _q(Q, k):
+            d = _popcount_matrix(Q, self._X)
+            neg, idx = jax.lax.top_k(-d, k)
+            return -neg, idx
+
+        self._jq = _q
+
+    def _rebuild(self):
+        @partial(jax.jit, static_argnames=("k",))
+        def _q(Q, k):
+            d = _popcount_matrix(Q, self._X)
+            neg, idx = jax.lax.top_k(-d, k)
+            return -neg, idx
+        self._jq = _q
+
+    def query(self, q, k):
+        _, idx = self._jq(jnp.asarray(q, jnp.uint32)[None, :],
+                          min(k, self._n))
+        self._dist_comps += self._n
+        return np.asarray(idx[0])
+
+    def batch_query(self, Q, k):
+        k = min(k, self._n)
+        Qj = jnp.asarray(np.asarray(Q, np.uint32))
+        if self.backend == "pallas":
+            from repro.kernels.hamming import ops as hops
+            _, idx = hops.hamming_topk(Qj, self._X, k=k)
+            self._batch_results = jax.block_until_ready(idx)
+        else:
+            outs = []
+            for s in range(0, Q.shape[0], 2048):
+                _, idx = self._jq(Qj[s:s + 2048], k)
+                outs.append(idx)
+            self._batch_results = jax.block_until_ready(
+                jnp.concatenate(outs))
+        self._dist_comps += self._n * Q.shape[0]
+
+    def get_additional(self):
+        return {"dist_comps": self._dist_comps}
+
+
+@register("BitsamplingAnnoy")
+class BitsamplingAnnoy(BaseANN):
+    """Annoy with bit-sampling splits (paper Q4's 'A (Ham.)' variant)."""
+
+    supported_metrics = ("hamming",)
+
+    def __init__(self, metric: str, n_trees: int = 10, leaf_size: int = 32,
+                 seed: int = 0):
+        super().__init__(metric)
+        self.n_trees = int(n_trees)
+        self.leaf_size = int(leaf_size)
+        self.seed = int(seed)
+        self.probe = 1
+        self.name = f"BitsamplingAnnoy(T={n_trees},leaf={leaf_size})"
+        self._dist_comps = 0
+
+    def set_query_arguments(self, probe: int) -> None:
+        self.probe = max(1, int(probe))
+
+    def fit(self, X: np.ndarray) -> None:
+        X = np.asarray(X, np.uint32)
+        self._n, self._w = X.shape
+        bits = self._w * 32
+        self._Xj = jnp.asarray(X)
+        rng = np.random.default_rng(self.seed)
+        max_depth = int(np.ceil(np.log2(
+            max(2.0, self._n / max(1, self.leaf_size))))) + 6
+
+        # Build: split on a random bit with the most even split among a few
+        # tries (data-independent bitsampling, data-guided balance).
+        trees_bits, trees_children, trees_leaves, roots = [], [], [], []
+        host_bit = lambda pts, b: (pts[:, b // 32] >> (b % 32)) & 1
+
+        for _ in range(self.n_trees):
+            node_bits: list[int] = []
+            children: list[list[int]] = []
+            leaves: list[np.ndarray] = []
+
+            def rec(ids: np.ndarray, depth: int) -> int:
+                if len(ids) <= self.leaf_size or depth >= max_depth:
+                    leaves.append(ids)
+                    return -len(leaves)
+                best_b, best_bal = None, -1.0
+                for b in rng.integers(0, bits, size=4):
+                    side = host_bit(X[ids], int(b)).astype(bool)
+                    frac = side.mean()
+                    bal = min(frac, 1 - frac)
+                    if bal > best_bal:
+                        best_bal, best_b = bal, int(b)
+                side = host_bit(X[ids], best_b).astype(bool)
+                if side.all() or (~side).all():
+                    side = rng.random(len(ids)) < 0.5
+                node = len(node_bits)
+                node_bits.append(best_b)
+                children.append([0, 0])
+                left = rec(ids[~side], depth + 1)
+                right = rec(ids[side], depth + 1)
+                children[node] = [left, right]
+                return node
+
+            roots.append(rec(np.arange(self._n), 0))
+            trees_bits.append(node_bits)
+            trees_children.append(children)
+            trees_leaves.append(leaves)
+
+        T = self.n_trees
+        max_nodes = max(max(len(b), 1) for b in trees_bits)
+        max_leaves = max(len(l) for l in trees_leaves)
+        bits_arr = np.zeros((T, max_nodes), np.int32)
+        child_arr = np.zeros((T, max_nodes, 2), np.int32)
+        leaf_arr = np.full((T, max_leaves, self.leaf_size), -1, np.int32)
+        for t in range(T):
+            for i, (b, ch) in enumerate(zip(trees_bits[t], trees_children[t])):
+                bits_arr[t, i], child_arr[t, i] = b, ch
+            for l, ids in enumerate(trees_leaves[t]):
+                leaf_arr[t, l, :len(ids)] = ids[:self.leaf_size]
+        self._bits = jnp.asarray(bits_arr)
+        self._children = jnp.asarray(child_arr)
+        self._leaves = jnp.asarray(leaf_arr)
+        self._roots = jnp.asarray(np.asarray(roots, np.int32))
+        self._depth = max_depth
+        self._rebuild()
+
+    def _rebuild(self):
+        self._jq = jax.jit(self._query_block, static_argnames=("k", "probe"))
+
+    def _descend(self, Q, cur):
+        T = self.n_trees
+        tree_ids = jnp.arange(T)[None, :]
+        others = []
+        for _ in range(self._depth):
+            is_leaf = cur < 0
+            node = jnp.maximum(cur, 0)
+            b = self._bits[tree_ids, node]                     # [bq, T]
+            wsel = jnp.take_along_axis(
+                Q.astype(jnp.uint32), (b // 32).astype(jnp.int32), axis=1)
+            bit = (wsel >> (b % 32).astype(jnp.uint32)) & 1
+            side = bit.astype(jnp.int32)
+            nxt = self._children[tree_ids, node, side]
+            other = self._children[tree_ids, node, 1 - side]
+            others.append(jnp.where(is_leaf, cur, other))
+            cur = jnp.where(is_leaf, cur, nxt)
+        return cur, others
+
+    def _query_block(self, Q, *, k: int, probe: int):
+        bq = Q.shape[0]
+        T = self.n_trees
+        start = jnp.broadcast_to(self._roots[None, :], (bq, T))
+        leaf, others = self._descend(Q, start)
+        leaves = [leaf]
+        # probe deepest not-taken branches (bit splits have no margins)
+        for p in range(min(probe - 1, len(others))):
+            alt, _ = self._descend(Q, others[-(p + 1)])
+            leaves.append(alt)
+        tree_ids = jnp.arange(T)[None, :]
+        cands = []
+        for lf in leaves:
+            lidx = jnp.maximum(-lf - 1, 0)
+            pts = self._leaves[tree_ids, lidx]
+            pts = jnp.where((lf < 0)[..., None], pts, -1)
+            cands.append(pts.reshape(bq, -1))
+        cand = jnp.concatenate(cands, axis=1)
+        safe = jnp.maximum(cand, 0)
+        x = self._Xj[safe]                                     # [bq, C, w]
+        xor = jax.lax.bitwise_xor(x, Q[:, None, :].astype(jnp.uint32))
+        d = jnp.sum(jax.lax.population_count(xor), axis=-1).astype(jnp.float32)
+        d = jnp.where(cand >= 0, d, jnp.inf)
+        return topk_unique(d, cand, min(k, cand.shape[1]))
+
+    def query(self, q, k):
+        _, ids = self._jq(jnp.asarray(q, jnp.uint32)[None, :], k=k,
+                          probe=self.probe)
+        self._dist_comps += self.n_trees * self.probe * self.leaf_size
+        return np.asarray(ids[0])
+
+    def batch_query(self, Q, k):
+        outs = []
+        Qj = jnp.asarray(np.asarray(Q, np.uint32))
+        for s in range(0, Q.shape[0], 2048):
+            _, ids = self._jq(Qj[s:s + 2048], k=k, probe=self.probe)
+            outs.append(ids)
+        self._batch_results = jax.block_until_ready(jnp.concatenate(outs))
+        self._dist_comps += Q.shape[0] * self.n_trees * self.probe * self.leaf_size
+
+    def get_additional(self):
+        return {"dist_comps": self._dist_comps}
+
+
+@register("MultiIndexHashing")
+class MultiIndexHashing(BaseANN):
+    supported_metrics = ("hamming",)
+
+    def __init__(self, metric: str, n_chunks: int = 16, cap: int = 128,
+                 seed: int = 0):
+        super().__init__(metric)
+        self.n_chunks = int(n_chunks)
+        self.cap = int(cap)
+        self.radius = 0
+        self.name = f"MIH(m={n_chunks},cap={cap})"
+        self._dist_comps = 0
+
+    def set_query_arguments(self, radius: int) -> None:
+        self.radius = int(radius)
+
+    def fit(self, X: np.ndarray) -> None:
+        X = np.asarray(X, np.uint32)
+        self._n, self._w = X.shape
+        bits = self._w * 32
+        m = self.n_chunks
+        self._chunk_bits = bits // m
+        if self._chunk_bits > 30:
+            raise ValueError("chunk too wide for int32 keys; use more chunks")
+        self._Xj = jnp.asarray(X)
+        # chunk substrings as int64 keys, one "table" per chunk
+        keys = np.zeros((m, self._n), np.int32)
+        unpacked = np.unpackbits(
+            X.view(np.uint8), bitorder="little").reshape(self._n, bits)
+        self._bit_weights = 2 ** np.arange(self._chunk_bits, dtype=np.int32)
+        for c in range(m):
+            seg = unpacked[:, c * self._chunk_bits:(c + 1) * self._chunk_bits]
+            keys[c] = seg.astype(np.int64) @ self._bit_weights
+        self._buckets = _SortedBuckets(keys)
+        self._rebuild()
+
+    def _rebuild(self):
+        self._jq = jax.jit(self._query_block, static_argnames=("k", "radius"))
+
+    def _query_chunks(self, Q):
+        """Q [b, w] uint32 -> chunk keys [b, m] int64 + bits [b, bits]."""
+        bq = Q.shape[0]
+        bits_total = self._w * 32
+        words = Q.astype(jnp.uint32)
+        shifts = jnp.arange(32, dtype=jnp.uint32)
+        bits = ((words[:, :, None] >> shifts[None, None, :]) & 1)
+        bits = bits.reshape(bq, bits_total).astype(jnp.int32)
+        w = jnp.asarray(self._bit_weights)
+        keys = [
+            jnp.sum(bits[:, c * self._chunk_bits:(c + 1) * self._chunk_bits]
+                    * w[None, :], axis=1)
+            for c in range(self.n_chunks)
+        ]
+        return jnp.stack(keys, axis=1), bits
+
+    def _query_block(self, Q, *, k: int, radius: int):
+        bq = Q.shape[0]
+        base, bits = self._query_chunks(Q)                 # [b, m]
+        # probe keys: all chunk codes within hamming radius <= radius
+        flips: list[tuple[int, ...]] = [()]
+        for r in range(1, radius + 1):
+            flips += list(itertools.combinations(range(self._chunk_bits), r))
+        probe_keys = []
+        w = jnp.asarray(self._bit_weights)
+        for f in flips:
+            delta = jnp.zeros((bq, self.n_chunks), jnp.int32)
+            for bitpos in f:
+                for c in range(self.n_chunks):
+                    qb = bits[:, c * self._chunk_bits + bitpos]
+                    delta = delta.at[:, c].add(
+                        jnp.where(qb > 0, -w[bitpos], w[bitpos]))
+            probe_keys.append(base + delta)
+        qkeys = jnp.stack(probe_keys, axis=-1)             # [b, m, P]
+        cand = self._buckets.lookup(qkeys, self.cap)
+        safe = jnp.maximum(cand, 0)
+        x = self._Xj[safe]
+        xor = jax.lax.bitwise_xor(x, Q[:, None, :].astype(jnp.uint32))
+        d = jnp.sum(jax.lax.population_count(xor), axis=-1).astype(jnp.float32)
+        d = jnp.where(cand >= 0, d, jnp.inf)
+        return topk_unique(d, cand, min(k, cand.shape[1]))
+
+    def query(self, q, k):
+        _, ids = self._jq(jnp.asarray(q, jnp.uint32)[None, :], k=k,
+                          radius=self.radius)
+        self._dist_comps += self.n_chunks * self.cap
+        return np.asarray(ids[0])
+
+    def batch_query(self, Q, k):
+        outs = []
+        Qj = jnp.asarray(np.asarray(Q, np.uint32))
+        for s in range(0, Q.shape[0], 1024):
+            _, ids = self._jq(Qj[s:s + 1024], k=k, radius=self.radius)
+            outs.append(ids)
+        self._batch_results = jax.block_until_ready(jnp.concatenate(outs))
+        self._dist_comps += Q.shape[0] * self.n_chunks * self.cap
+
+    def get_additional(self):
+        return {"dist_comps": self._dist_comps}

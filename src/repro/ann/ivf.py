@@ -1,0 +1,130 @@
+"""IVF — inverted file index with a k-means coarse quantizer (the FAISS-IVF
+analogue from the paper's Table 2, "other: inverted file").
+
+TPU adaptation (DESIGN.md §2.5): inverted lists are stored *cluster-major*
+(corpus sorted by assigned centroid, plus offsets), and a probe reads a
+fixed-size padded window of each probed list with a validity mask — turning
+the CPU's pointer-chasing list scan into dense gathers + masked top-k that
+lower cleanly onto TPU.
+
+Parameters:  n_clusters (build), n_probes (query).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.ann import distances as D
+from repro.ann.kmeans import kmeans
+from repro.ann.topk import topk_with_ids
+from repro.core.interface import BaseANN
+from repro.core.registry import register
+
+
+@register("IVF")
+class IVF(BaseANN):
+    supported_metrics = ("euclidean", "angular")
+
+    def __init__(self, metric: str, n_clusters: int = 100, n_iters: int = 10,
+                 seed: int = 0):
+        super().__init__(metric)
+        self.n_clusters = int(n_clusters)
+        self.n_iters = int(n_iters)
+        self.seed = int(seed)
+        self.n_probes = 1
+        self.name = f"IVF(C={n_clusters})"
+        self._dist_comps = 0
+
+    # ------------------------------------------------------------------ fit
+    def fit(self, X: np.ndarray) -> None:
+        X = np.asarray(X, np.float32)
+        if self.metric == "angular":
+            X = X / np.maximum(np.linalg.norm(X, axis=1, keepdims=True), 1e-12)
+        self._n, self._d = X.shape
+        C = min(self.n_clusters, self._n)
+        centers, assign = kmeans(X, C, n_iters=self.n_iters, seed=self.seed)
+        order = np.argsort(assign, kind="stable")
+        sizes = np.bincount(assign, minlength=C)
+        starts = np.zeros(C + 1, np.int64)
+        np.cumsum(sizes, out=starts[1:])
+        self._centers = jnp.asarray(centers)
+        self._X = jnp.asarray(X[order])
+        self._ids = jnp.asarray(order.astype(np.int32))
+        self._starts = jnp.asarray(starts[:-1].astype(np.int32))
+        self._sizes = jnp.asarray(sizes.astype(np.int32))
+        self._pad = int(sizes.max())
+        self._sizes_np = sizes
+        self._starts_np = starts
+        if self.metric == "euclidean":
+            self._xsq = jnp.sum(self._X ** 2, axis=1)
+        self._rebuild()
+
+    def _rebuild(self):
+        self._jq = jax.jit(self._query_block, static_argnames=("k", "nprobe"))
+
+    def set_query_arguments(self, n_probes: int) -> None:
+        self.n_probes = int(n_probes)
+
+    # ---------------------------------------------------------------- query
+    def _query_block(self, Q, *, k: int, nprobe: int):
+        """Q [b, d] -> (dists [b,k], ids [b,k]).  Fully jittable."""
+        Q = Q.astype(jnp.float32)
+        if self.metric == "angular":
+            Q = Q / jnp.maximum(jnp.linalg.norm(Q, axis=1, keepdims=True),
+                                1e-12)
+        # 1. coarse quantizer: nprobe nearest centroids
+        cd = D.sq_l2_matrix(Q, self._centers)            # [b, C]
+        _, probes = jax.lax.top_k(-cd, nprobe)           # [b, P]
+        # 2. padded window gather of each probed list
+        starts = self._starts[probes]                    # [b, P]
+        sizes = self._sizes[probes]                      # [b, P]
+        offs = jnp.arange(self._pad, dtype=jnp.int32)    # [M]
+        cand = starts[..., None] + offs[None, None, :]   # [b, P, M]
+        valid = offs[None, None, :] < sizes[..., None]
+        cand = jnp.minimum(cand, self._n - 1).reshape(Q.shape[0], -1)
+        valid = valid.reshape(Q.shape[0], -1)            # [b, P*M]
+        # 3. exact distances on the candidate set
+        x = self._X[cand]                                # [b, P*M, d]
+        if self.metric == "euclidean":
+            qsq = jnp.sum(Q * Q, axis=1, keepdims=True)
+            cross = jnp.einsum("bnd,bd->bn", x, Q)
+            d = qsq - 2.0 * cross + self._xsq[cand]
+        else:
+            d = 1.0 - jnp.einsum("bnd,bd->bn", x, Q)
+        d = jnp.where(valid, d, jnp.inf)
+        ids = jnp.where(valid, self._ids[cand], -1)
+        vals, out_ids = topk_with_ids(d, ids, min(k, d.shape[1]))
+        return vals, out_ids
+
+    def query(self, q: np.ndarray, k: int) -> np.ndarray:
+        nprobe = min(self.n_probes, self.n_clusters)
+        _, ids = self._jq(jnp.asarray(q)[None, :], k=k, nprobe=nprobe)
+        self._count_probes(np.asarray(q)[None, :], nprobe)
+        return np.asarray(ids[0])
+
+    def batch_query(self, Q: np.ndarray, k: int) -> None:
+        nprobe = min(self.n_probes, self.n_clusters)
+        # block queries so [b, P*M, d] stays bounded
+        per_block = max(1, 64_000_000 // max(nprobe * self._pad * self._d, 1))
+        outs = []
+        Qj = jnp.asarray(Q)
+        for s in range(0, Q.shape[0], per_block):
+            _, ids = self._jq(Qj[s:s + per_block], k=k, nprobe=nprobe)
+            outs.append(ids)
+        self._batch_results = jax.block_until_ready(jnp.concatenate(outs))
+        self._count_probes(Q, nprobe)
+
+    def _count_probes(self, Q, nprobe):
+        # distance computations = centroid scan + probed list sizes
+        cd = D.sq_l2_matrix(jnp.asarray(Q, jnp.float32), self._centers)
+        _, probes = jax.lax.top_k(-cd, nprobe)
+        probed = self._sizes_np[np.asarray(probes)].sum()
+        self._dist_comps += int(probed) + Q.shape[0] * self._centers.shape[0]
+
+    def get_additional(self):
+        return {"dist_comps": self._dist_comps,
+                "max_list_size": self._pad,
+                "n_lists": int(self._centers.shape[0])}

@@ -1,0 +1,74 @@
+"""Mini k-means in JAX (Lloyd's iterations, k-means++-style seeding) — the
+coarse quantizer behind the IVF index (FAISS-IVF analogue).
+
+Runs entirely on device; blocked assignment so n x C never exceeds memory.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.ann import distances as D
+
+
+def kmeanspp_init(X: np.ndarray, n_clusters: int, rng: np.random.Generator,
+                  sample_cap: int = 16384) -> np.ndarray:
+    """k-means++ seeding on a subsample (standard practice for IVF)."""
+    n = X.shape[0]
+    if n > sample_cap:
+        X = X[rng.choice(n, sample_cap, replace=False)]
+        n = sample_cap
+    centers = np.empty((n_clusters, X.shape[1]), np.float32)
+    centers[0] = X[rng.integers(n)]
+    d2 = np.sum((X - centers[0]) ** 2, axis=1)
+    for c in range(1, n_clusters):
+        probs = d2 / max(d2.sum(), 1e-12)
+        centers[c] = X[rng.choice(n, p=probs)]
+        d2 = np.minimum(d2, np.sum((X - centers[c]) ** 2, axis=1))
+    return centers
+
+
+@jax.jit
+def _assign(X, centers):
+    d = D.sq_l2_matrix(X, centers)
+    return jnp.argmin(d, axis=1)
+
+
+@jax.jit
+def _update(X, assign, n_clusters_arr):
+    n_clusters = n_clusters_arr.shape[0]
+    sums = jax.ops.segment_sum(X, assign, num_segments=n_clusters)
+    counts = jax.ops.segment_sum(jnp.ones((X.shape[0],), jnp.float32), assign,
+                                 num_segments=n_clusters)
+    return sums / jnp.maximum(counts, 1.0)[:, None], counts
+
+
+def kmeans(
+    X: np.ndarray,
+    n_clusters: int,
+    n_iters: int = 10,
+    seed: int = 0,
+    block: int = 262144,
+) -> tuple[np.ndarray, np.ndarray]:
+    """Return (centers [C, d], assignment [n])."""
+    rng = np.random.default_rng(seed)
+    Xf = np.asarray(X, np.float32)
+    centers = jnp.asarray(kmeanspp_init(Xf, n_clusters, rng))
+    Xj = jnp.asarray(Xf)
+    marker = jnp.zeros((n_clusters,))
+    assign = None
+    for _ in range(n_iters):
+        parts = [_assign(Xj[s:s + block], centers)
+                 for s in range(0, Xf.shape[0], block)]
+        assign = jnp.concatenate(parts)
+        new_centers, counts = _update(Xj, assign, marker)
+        # keep empty clusters where they were (FAISS does random re-init;
+        # stationarity is fine for benchmark purposes)
+        centers = jnp.where(counts[:, None] > 0, new_centers, centers)
+    parts = [_assign(Xj[s:s + block], centers)
+             for s in range(0, Xf.shape[0], block)]
+    assign = jnp.concatenate(parts)
+    return np.asarray(centers), np.asarray(assign)

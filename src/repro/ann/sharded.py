@@ -1,0 +1,349 @@
+"""Distributed ANN serving: the corpus sharded over a device mesh with a
+global top-k merge (DESIGN.md §5).  This is what turns the paper's
+single-node in-memory benchmark into a multi-pod system.
+
+Exactness invariant: a sharded brute-force query returns *identical* results
+(up to distance ties) to the single-device index, because
+
+    topk_k( union_s topk_k(shard_s) ) == topk_k(corpus)
+
+— each shard's local top-k retains every global top-k element residing on
+that shard.  The merge is a hierarchical all_gather over the mesh axes
+(intra-pod first, then across pods), implemented with shard_map so the
+collective schedule is explicit.
+
+IVF variant (ShardedIVF): the coarse quantizer (small) is replicated;
+whole inverted lists are partitioned across shards (round-robin by size
+for balance), each shard probes only the lists it owns, and the same
+hierarchical merge applies.  This mirrors FAISS's distributed IVF
+sharding; with nprobe = n_clusters it degenerates to exact sharded brute
+force (tested).
+"""
+
+from __future__ import annotations
+
+from functools import partial
+from typing import Optional, Sequence
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax.experimental.shard_map import shard_map
+
+from repro.ann import distances as D
+from repro.ann.topk import topk_smallest, topk_with_ids
+from repro.core.interface import BaseANN
+from repro.core.registry import register
+
+
+def local_topk_kernel(q, x, ids, xsq, k: int, metric: str):
+    """Per-shard exact top-k: q [b,d], x [ns,d] -> ([b,k] d, [b,k] ids)."""
+    if metric == "euclidean":
+        qn = jnp.sum(q * q, axis=1, keepdims=True)
+        d = qn - 2.0 * (q @ x.T) + xsq[None, :]
+    elif metric == "angular":
+        d = 1.0 - q @ x.T
+    else:
+        xor = jax.lax.bitwise_xor(q[:, None, :].astype(jnp.uint32),
+                                  x[None, :, :].astype(jnp.uint32))
+        d = jnp.sum(jax.lax.population_count(xor), axis=-1).astype(jnp.float32)
+    vals, pos = topk_smallest(d, min(k, x.shape[0]))
+    return vals, ids[pos]
+
+
+def make_sharded_topk(mesh: Mesh, shard_axes: Sequence[str], k: int,
+                      metric: str):
+    """Build the jitted sharded query function for a given mesh.
+
+    Corpus rows are sharded over ``shard_axes`` (e.g. ("pod","data","model")
+    flattened); queries are replicated; the output is the exact global
+    top-k, replicated.
+    """
+    axes = tuple(shard_axes)
+
+    def fn(q, x, ids, xsq):
+        vals, out_ids = local_topk_kernel(q, x, ids, xsq, k, metric)
+        # hierarchical merge: innermost axis first (cheapest links last hop
+        # is the pod axis: only 2k * pods entries cross the DCI)
+        for ax in reversed(axes):
+            vals = jax.lax.all_gather(vals, ax, axis=1, tiled=True)
+            out_ids = jax.lax.all_gather(out_ids, ax, axis=1, tiled=True)
+            vals, out_ids = topk_with_ids(vals, out_ids, k)
+        return vals, out_ids
+
+    in_specs = (
+        P(),                      # queries replicated
+        P(axes),                  # corpus rows sharded
+        P(axes),                  # global ids sharded alongside
+        P(axes),                  # squared norms sharded alongside
+    )
+    out_specs = (P(), P())
+    shmapped = shard_map(fn, mesh=mesh, in_specs=in_specs,
+                         out_specs=out_specs, check_rep=False)
+    return jax.jit(shmapped)
+
+
+@register("ShardedBruteForce")
+class ShardedBruteForce(BaseANN):
+    """Exact brute force over a sharded corpus.  On a 1-device host this
+    degenerates to BruteForce; on a mesh it is the multi-pod serving path
+    (dry-run: launch/bench_ann.py)."""
+
+    supported_metrics = ("euclidean", "angular", "hamming")
+
+    def __init__(self, metric: str, mesh: Optional[Mesh] = None,
+                 shard_axes: Optional[Sequence[str]] = None):
+        super().__init__(metric)
+        if mesh is None:
+            mesh = jax.make_mesh((jax.device_count(),), ("data",))
+            shard_axes = ("data",)
+        self.mesh = mesh
+        self.shard_axes = tuple(shard_axes or mesh.axis_names)
+        self.name = f"ShardedBruteForce(axes={','.join(self.shard_axes)})"
+        self._dist_comps = 0
+
+    def _n_shards(self) -> int:
+        return int(np.prod([self.mesh.shape[a] for a in self.shard_axes]))
+
+    def fit(self, X: np.ndarray) -> None:
+        n_shards = self._n_shards()
+        n = X.shape[0]
+        pad = (-n) % n_shards
+        if self.metric == "hamming":
+            X = np.asarray(X, np.uint32)
+            Xp = np.concatenate([X, np.zeros((pad,) + X.shape[1:], X.dtype)])
+        else:
+            X = np.asarray(X, np.float32)
+            if self.metric == "angular":
+                X = X / np.maximum(np.linalg.norm(X, axis=1, keepdims=True),
+                                   1e-12)
+            # pad with +inf-distance sentinels (ids -1 keep them out)
+            Xp = np.concatenate([X, np.zeros((pad, X.shape[1]), X.dtype)])
+        ids = np.concatenate([np.arange(n, dtype=np.int32),
+                              np.full(pad, -1, np.int32)])
+        xsq = (Xp.astype(np.float32) ** 2).sum(1) if self.metric == "euclidean" \
+            else np.zeros(len(Xp), np.float32)
+        # sentinel rows must never win: give them infinite norm
+        if pad and self.metric == "euclidean":
+            xsq[n:] = np.inf
+        self._pad = pad
+        self._n = n
+        spec = NamedSharding(self.mesh, P(self.shard_axes))
+        self._X = jax.device_put(Xp, spec)
+        self._ids = jax.device_put(ids, spec)
+        self._xsq = jax.device_put(xsq, spec)
+        self._fns = {}
+
+    def _rebuild(self):
+        self._fns = {}
+
+    def _fn(self, k):
+        if k not in self._fns:
+            self._fns[k] = make_sharded_topk(self.mesh, self.shard_axes, k,
+                                             self.metric)
+        return self._fns[k]
+
+    def _mask_pad(self, vals, ids):
+        if self.metric != "euclidean" and self._pad:
+            # angular/hamming sentinels could win; drop id==-1 entries
+            vals = jnp.where(ids >= 0, vals, jnp.inf)
+            vals, pos = topk_smallest(vals, vals.shape[-1])
+            ids = jnp.take_along_axis(ids, pos, axis=-1)
+        return vals, ids
+
+    def query(self, q: np.ndarray, k: int) -> np.ndarray:
+        dt = jnp.uint32 if self.metric == "hamming" else jnp.float32
+        vals, ids = self._fn(min(k, self._n))(
+            jnp.asarray(q, dt)[None, :], self._X, self._ids, self._xsq)
+        vals, ids = self._mask_pad(vals, ids)
+        self._dist_comps += self._n
+        return np.asarray(ids[0])
+
+    def batch_query(self, Q: np.ndarray, k: int) -> None:
+        dt = jnp.uint32 if self.metric == "hamming" else jnp.float32
+        fn = self._fn(min(k, self._n))
+        outs = []
+        Qj = jnp.asarray(np.asarray(Q), dt)
+        for s in range(0, Q.shape[0], 4096):
+            vals, ids = fn(Qj[s:s + 4096], self._X, self._ids, self._xsq)
+            _, ids = self._mask_pad(vals, ids)
+            outs.append(ids)
+        self._batch_results = jax.block_until_ready(jnp.concatenate(outs))
+        self._dist_comps += self._n * Q.shape[0]
+
+    def get_additional(self):
+        return {"dist_comps": self._dist_comps,
+                "n_shards": self._n_shards()}
+
+
+@register("ShardedIVF")
+class ShardedIVF(BaseANN):
+    """Distributed IVF: whole inverted lists partitioned across the mesh.
+
+    fit(): k-means on the host driver; clusters are assigned to shards
+    round-robin by descending size (greedy balance); each shard stores its
+    own cluster-major sub-corpus (padded to the max shard length).
+    query(): replicated coarse quantizer -> top-nprobe lists; every shard
+    scans the probed lists IT OWNS (unowned lists have size 0 locally) and
+    the exact hierarchical top-k merge combines shard results.
+    """
+
+    supported_metrics = ("euclidean", "angular")
+
+    def __init__(self, metric: str, n_clusters: int = 100,
+                 mesh: Optional[Mesh] = None,
+                 shard_axes: Optional[Sequence[str]] = None,
+                 n_iters: int = 10, seed: int = 0):
+        super().__init__(metric)
+        if mesh is None:
+            mesh = jax.make_mesh((jax.device_count(),), ("data",))
+            shard_axes = ("data",)
+        self.mesh = mesh
+        self.shard_axes = tuple(shard_axes or mesh.axis_names)
+        self.n_clusters = int(n_clusters)
+        self.n_iters = int(n_iters)
+        self.seed = int(seed)
+        self.n_probes = 1
+        self.name = f"ShardedIVF(C={n_clusters})"
+        self._dist_comps = 0
+
+    def set_query_arguments(self, n_probes: int) -> None:
+        self.n_probes = max(1, int(n_probes))
+
+    def _n_shards(self) -> int:
+        return int(np.prod([self.mesh.shape[a] for a in self.shard_axes]))
+
+    # ------------------------------------------------------------------ fit
+    def fit(self, X: np.ndarray) -> None:
+        from repro.ann.kmeans import kmeans
+
+        X = np.asarray(X, np.float32)
+        if self.metric == "angular":
+            X = X / np.maximum(np.linalg.norm(X, axis=1, keepdims=True),
+                               1e-12)
+        self._n, self._d = X.shape
+        C = min(self.n_clusters, self._n)
+        centers, assign = kmeans(X, C, n_iters=self.n_iters, seed=self.seed)
+        sizes = np.bincount(assign, minlength=C)
+        S = self._n_shards()
+        # greedy balance: biggest cluster to currently-lightest shard
+        owner = np.zeros(C, np.int32)
+        load = np.zeros(S, np.int64)
+        for c in np.argsort(-sizes):
+            s = int(np.argmin(load))
+            owner[c] = s
+            load[s] += sizes[c]
+        L = int(load.max()) if S > 0 else 0
+        L = max(L, 1)
+
+        xs = np.zeros((S, L, self._d), np.float32)
+        ids = np.full((S, L), -1, np.int32)
+        starts = np.zeros((S, C), np.int32)
+        lsizes = np.zeros((S, C), np.int32)
+        cursor = np.zeros(S, np.int64)
+        order = np.argsort(assign, kind="stable")
+        sorted_assign = assign[order]
+        cstart = np.searchsorted(sorted_assign, np.arange(C))
+        for c in range(C):
+            s = owner[c]
+            rows = order[cstart[c]:cstart[c] + sizes[c]]
+            lo = int(cursor[s])
+            starts[s, c] = lo
+            lsizes[s, c] = sizes[c]
+            xs[s, lo:lo + sizes[c]] = X[rows]
+            ids[s, lo:lo + sizes[c]] = rows
+            cursor[s] += sizes[c]
+
+        spec = NamedSharding(self.mesh, P(self.shard_axes))
+        self._centers = jnp.asarray(centers)
+        self._xs = jax.device_put(xs, spec)
+        self._ids = jax.device_put(ids, spec)
+        self._starts = jax.device_put(starts, spec)
+        self._sizes = jax.device_put(lsizes, spec)
+        self._pad = int(sizes.max())
+        self._sizes_np = sizes
+        self._fns = {}
+
+    def _rebuild(self):
+        self._fns = {}
+
+    def _make_fn(self, k: int, nprobe: int):
+        axes = self.shard_axes
+        metric = self.metric
+        centers = self._centers
+        M = self._pad
+
+        def fn(q, xs, ids, starts, sizes):
+            # local block: xs [1, L, d], ids [1, L], starts/sizes [1, C]
+            x, idl = xs[0], ids[0]
+            st, sz = starts[0], sizes[0]
+            cd = D.sq_l2_matrix(q, centers)
+            _, probes = jax.lax.top_k(-cd, nprobe)          # [b, P]
+            lo = st[probes]                                 # [b, P]
+            ln = sz[probes]
+            offs = jnp.arange(M, dtype=jnp.int32)
+            cand = lo[..., None] + offs[None, None, :]
+            valid = offs[None, None, :] < ln[..., None]
+            cand = jnp.minimum(cand, x.shape[0] - 1).reshape(q.shape[0], -1)
+            valid = valid.reshape(q.shape[0], -1)
+            xc = x[cand]
+            if metric == "euclidean":
+                diff = xc - q[:, None, :]
+                d = jnp.sum(diff * diff, axis=-1)
+            else:
+                d = 1.0 - jnp.einsum("bnd,bd->bn", xc, q)
+            d = jnp.where(valid, d, jnp.inf)
+            out_ids = jnp.where(valid, idl[cand], -1)
+            vals, out_ids = topk_with_ids(d, out_ids, min(k, d.shape[1]))
+            for ax in reversed(axes):
+                vals = jax.lax.all_gather(vals, ax, axis=1, tiled=True)
+                out_ids = jax.lax.all_gather(out_ids, ax, axis=1,
+                                             tiled=True)
+                vals, out_ids = topk_with_ids(vals, out_ids, k)
+            return vals, out_ids
+
+        shmapped = shard_map(
+            fn, mesh=self.mesh,
+            in_specs=(P(), P(axes), P(axes), P(axes), P(axes)),
+            out_specs=(P(), P()), check_rep=False)
+        return jax.jit(shmapped)
+
+    def _fn(self, k, nprobe):
+        key = (k, nprobe)
+        if key not in self._fns:
+            self._fns[key] = self._make_fn(k, nprobe)
+        return self._fns[key]
+
+    def _prep_q(self, Q):
+        Q = jnp.asarray(np.asarray(Q, np.float32))
+        if self.metric == "angular":
+            Q = Q / jnp.maximum(jnp.linalg.norm(Q, axis=1, keepdims=True),
+                                1e-12)
+        return Q
+
+    def query(self, q: np.ndarray, k: int) -> np.ndarray:
+        nprobe = min(self.n_probes, int(self._centers.shape[0]))
+        fn = self._fn(min(k, self._n), nprobe)
+        _, ids = fn(self._prep_q(np.asarray(q)[None, :]), self._xs,
+                    self._ids, self._starts, self._sizes)
+        self._dist_comps += int(self._centers.shape[0]) + nprobe * self._pad
+        return np.asarray(ids[0])
+
+    def batch_query(self, Q: np.ndarray, k: int) -> None:
+        nprobe = min(self.n_probes, int(self._centers.shape[0]))
+        fn = self._fn(min(k, self._n), nprobe)
+        Qj = self._prep_q(Q)
+        outs = []
+        for s in range(0, Q.shape[0], 2048):
+            _, ids = fn(Qj[s:s + 2048], self._xs, self._ids, self._starts,
+                        self._sizes)
+            outs.append(ids)
+        self._batch_results = jax.block_until_ready(jnp.concatenate(outs))
+        self._dist_comps += Q.shape[0] * (
+            int(self._centers.shape[0]) + nprobe * self._pad)
+
+    def get_additional(self):
+        return {"dist_comps": self._dist_comps,
+                "n_shards": self._n_shards(), "max_list": self._pad}

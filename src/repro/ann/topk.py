@@ -1,0 +1,66 @@
+"""Top-k utilities shared by all algorithms.
+
+All helpers operate on *distances* (smaller is better) and keep (dist, id)
+pairs together.  ``merge_topk`` is associative and commutative up to ties —
+the property the distributed merge tree relies on (tested with hypothesis).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def topk_smallest(d: jnp.ndarray, k: int) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """(values, indices) of the k smallest entries along the last axis."""
+    neg, idx = jax.lax.top_k(-d, k)
+    return -neg, idx
+
+
+def topk_with_ids(d: jnp.ndarray, ids: jnp.ndarray, k: int):
+    """Top-k smallest of d (last axis), returning the matching ids."""
+    vals, pos = topk_smallest(d, k)
+    return vals, jnp.take_along_axis(ids, pos, axis=-1)
+
+
+def merge_topk(d_a, i_a, d_b, i_b, k: int):
+    """Merge two (dist, id) candidate sets into the k best."""
+    d = jnp.concatenate([d_a, d_b], axis=-1)
+    i = jnp.concatenate([i_a, i_b], axis=-1)
+    return topk_with_ids(d, i, k)
+
+
+def dedupe_ids(d: jnp.ndarray, ids: jnp.ndarray):
+    """Mask duplicate ids (keep the first by distance) by setting their
+    distance to +inf and id to -1.  Works along the last axis.
+
+    Strategy: sort by (id, dist); an entry is a duplicate if it has the same
+    id as its predecessor in that order.  Restores no particular order —
+    callers always re-top-k afterwards.
+    """
+    # sort primarily by id, secondarily by distance
+    order = jnp.lexsort((d, ids))
+    ds = jnp.take_along_axis(d, order, axis=-1)
+    is_ = jnp.take_along_axis(ids, order, axis=-1)
+    prev = jnp.concatenate(
+        [jnp.full(is_.shape[:-1] + (1,), -2, is_.dtype), is_[..., :-1]], axis=-1)
+    dup = (is_ == prev) | (is_ < 0)
+    ds = jnp.where(dup, jnp.inf, ds)
+    is_ = jnp.where(dup, -1, is_)
+    return ds, is_
+
+
+def topk_unique(d: jnp.ndarray, ids: jnp.ndarray, k: int):
+    """Top-k smallest with duplicate ids removed (first win)."""
+    ds, is_ = dedupe_ids(d, ids)
+    return topk_with_ids(ds, is_, k)
+
+
+def np_topk(d: np.ndarray, k: int):
+    k = min(k, d.shape[-1])
+    part = np.argpartition(d, k - 1, axis=-1)[..., :k]
+    pd = np.take_along_axis(d, part, axis=-1)
+    order = np.argsort(pd, axis=-1, kind="stable")
+    return (np.take_along_axis(pd, order, axis=-1),
+            np.take_along_axis(part, order, axis=-1))

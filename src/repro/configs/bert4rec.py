@@ -1,0 +1,27 @@
+"""bert4rec [recsys]: embed_dim=64 n_blocks=2 n_heads=2 seq_len=200
+interaction=bidir-seq [arXiv:1904.06690].  Item vocabulary: ML-20M (26744).
+
+This is the arch where the paper's technique is DIRECTLY integrated: the
+retrieval_cand shape scores the user vector against 10^6 candidates via the
+sharded ANN top-k (repro.models.recsys.retrieval_topk)."""
+
+from repro.configs.registry import ArchSpec, register_arch
+from repro.configs.shapes import RECSYS_SHAPES
+from repro.models.recsys import Bert4RecConfig
+
+
+def make_config() -> Bert4RecConfig:
+    return Bert4RecConfig()
+
+
+def make_smoke_config() -> Bert4RecConfig:
+    return Bert4RecConfig(name="bert4rec-smoke", n_items=100, embed_dim=16,
+                          n_blocks=2, n_heads=2, seq_len=20, d_ff=32)
+
+
+register_arch(ArchSpec(
+    arch_id="bert4rec", family="recsys",
+    make_config=make_config, make_smoke_config=make_smoke_config,
+    shapes=RECSYS_SHAPES,
+    notes="Encoder-only; serve_* shapes run the encoder (no decode step).",
+))

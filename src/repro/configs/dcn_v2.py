@@ -1,0 +1,22 @@
+"""dcn-v2 [recsys]: n_dense=13 n_sparse=26 embed_dim=16 n_cross_layers=3
+mlp=1024-1024-512 interaction=cross [arXiv:2008.13535]."""
+
+from repro.configs.registry import ArchSpec, register_arch
+from repro.configs.shapes import RECSYS_SHAPES
+from repro.models.recsys import DCNv2Config
+
+
+def make_config() -> DCNv2Config:
+    return DCNv2Config()
+
+
+def make_smoke_config() -> DCNv2Config:
+    return DCNv2Config(name="dcn-v2-smoke", vocabs=tuple([64] * 26),
+                       embed_dim=4, n_cross=2, mlp=(32, 16), table_pad=1)
+
+
+register_arch(ArchSpec(
+    arch_id="dcn-v2", family="recsys",
+    make_config=make_config, make_smoke_config=make_smoke_config,
+    shapes=RECSYS_SHAPES,
+))

@@ -1,0 +1,26 @@
+"""dlrm-mlperf [recsys]: n_dense=13 n_sparse=26 embed_dim=128
+bot_mlp=13-512-256-128 top_mlp=1024-1024-512-256-1 interaction=dot —
+MLPerf DLRM benchmark config, Criteo 1TB table sizes [arXiv:1906.00091]."""
+
+from repro.configs.registry import ArchSpec, register_arch
+from repro.configs.shapes import RECSYS_SHAPES
+from repro.models.recsys import DLRMConfig
+
+
+def make_config() -> DLRMConfig:
+    return DLRMConfig()
+
+
+def make_smoke_config() -> DLRMConfig:
+    return DLRMConfig(name="dlrm-smoke", vocabs=tuple([64] * 26),
+                      embed_dim=8, bot_mlp=(13, 16, 8), top_mlp=(16, 1),
+                      table_pad=1)
+
+
+register_arch(ArchSpec(
+    arch_id="dlrm-mlperf", family="recsys",
+    make_config=make_config, make_smoke_config=make_smoke_config,
+    shapes=RECSYS_SHAPES,
+    notes=("Embedding tables total 188M rows x 128 dims = 96 GB fp32; "
+           "row-sharded over 'model' via sharded_embed_lookup."),
+))

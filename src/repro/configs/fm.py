@@ -1,0 +1,22 @@
+"""fm [recsys]: n_sparse=39 embed_dim=10 interaction=fm-2way — pairwise
+<v_i, v_j> x_i x_j via the O(nk) sum-square trick [Rendle, ICDM'10]."""
+
+from repro.configs.registry import ArchSpec, register_arch
+from repro.configs.shapes import RECSYS_SHAPES
+from repro.models.recsys import FMConfig
+
+
+def make_config() -> FMConfig:
+    return FMConfig()
+
+
+def make_smoke_config() -> FMConfig:
+    return FMConfig(name="fm-smoke", vocabs=tuple([32] * 39), embed_dim=4,
+                    table_pad=1)
+
+
+register_arch(ArchSpec(
+    arch_id="fm", family="recsys",
+    make_config=make_config, make_smoke_config=make_smoke_config,
+    shapes=RECSYS_SHAPES,
+))

@@ -1,0 +1,36 @@
+"""pna [gnn]: n_layers=4 d_hidden=75 aggregators=mean-max-min-std
+scalers=id-amp-atten [arXiv:2004.05718].
+
+d_feat varies per shape (1433 Cora-like, 100 ogb-products, synthetic for
+minibatch/molecule); the registry exposes per-shape config builders.
+"""
+
+import jax.numpy as jnp
+
+from repro.configs.registry import ArchSpec, register_arch
+from repro.configs.shapes import GNN_SHAPES
+from repro.models.gnn import PNAConfig
+
+
+def make_config(d_feat: int = 100, n_out: int = 47,
+                readout: str = "node") -> PNAConfig:
+    return PNAConfig(
+        name="pna", d_feat=d_feat, d_hidden=75, n_layers=4, n_out=n_out,
+        aggregators=("mean", "max", "min", "std"),
+        scalers=("identity", "amplification", "attenuation"),
+        readout=readout, dtype=jnp.float32)
+
+
+def make_smoke_config() -> PNAConfig:
+    return PNAConfig(name="pna-smoke", d_feat=16, d_hidden=12, n_layers=2,
+                     n_out=4)
+
+
+register_arch(ArchSpec(
+    arch_id="pna", family="gnn",
+    make_config=make_config, make_smoke_config=make_smoke_config,
+    shapes=GNN_SHAPES,
+    skips={},
+    notes=("ANN technique inapplicable to message passing "
+           "(DESIGN.md §Arch-applicability); implemented without it."),
+))

@@ -1,0 +1,75 @@
+"""Architecture registry: ``--arch <id>`` resolution for launchers, the
+dry-run harness, and tests.
+
+Each arch module registers an ArchSpec with:
+    make_config()        full published configuration
+    make_smoke_config()  reduced same-family config for CPU smoke tests
+    shapes               dict of shape-name -> shape params
+    skips                shape-name -> reason (recorded, not silently dropped)
+    family               "lm" | "gnn" | "recsys"
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import importlib
+from typing import Callable, Dict, Optional
+
+_ARCHS: Dict[str, "ArchSpec"] = {}
+
+_MODULES = [
+    "repro.configs.gemma3_27b",
+    "repro.configs.phi4_mini_3_8b",
+    "repro.configs.qwen1_5_32b",
+    "repro.configs.moonshot_v1_16b_a3b",
+    "repro.configs.deepseek_v2_236b",
+    "repro.configs.pna",
+    "repro.configs.dcn_v2",
+    "repro.configs.dlrm_mlperf",
+    "repro.configs.fm",
+    "repro.configs.bert4rec",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class ArchSpec:
+    arch_id: str
+    family: str
+    make_config: Callable[[], object]
+    make_smoke_config: Callable[[], object]
+    shapes: dict
+    skips: dict = dataclasses.field(default_factory=dict)
+    notes: str = ""
+
+
+def register_arch(spec: ArchSpec) -> ArchSpec:
+    _ARCHS[spec.arch_id] = spec
+    return spec
+
+
+def get_arch(arch_id: str) -> ArchSpec:
+    _load()
+    if arch_id not in _ARCHS:
+        raise KeyError(f"unknown arch {arch_id!r}; known: {sorted(_ARCHS)}")
+    return _ARCHS[arch_id]
+
+
+def all_archs() -> Dict[str, ArchSpec]:
+    _load()
+    return dict(_ARCHS)
+
+
+def all_cells():
+    """Every (arch, shape) cell, including skipped ones (with reasons)."""
+    _load()
+    cells = []
+    for arch_id, spec in sorted(_ARCHS.items()):
+        for shape_name in spec.shapes:
+            cells.append((arch_id, shape_name,
+                          spec.skips.get(shape_name)))
+    return cells
+
+
+def _load():
+    for m in _MODULES:
+        importlib.import_module(m)

@@ -1,0 +1,209 @@
+"""The experiment loop (paper §3.4, Figure 2).
+
+Two phases per algorithm instance:
+
+  1. *preprocessing phase*: ``fit(X)`` is timed -> build_time; the index
+     size is measured afterwards.
+  2. *query phase*: for each expanded ``query-args`` group, the instance is
+     reconfigured via ``set_query_arguments`` and the full query set is run
+     (single-query mode: one timed call per query; batch mode §3.5: one
+     timed ``batch_query`` for the whole set, results materialised off the
+     clock via ``get_batch_results``).
+
+Isolation: the paper runs every instance in its own Docker container.  Here
+each instance can run in a forked subprocess (``isolated=True``) — same
+crash/timeout containment and clean teardown semantics, no Docker dependency
+(the paper's "local mode").  Memory use of the index is measured as the
+RSS delta around fit() in that subprocess, alongside the structural
+``index_size()``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import multiprocessing as mp
+import time
+import traceback
+from typing import Any, Callable, Dict, List, Optional, Sequence
+
+import numpy as np
+
+from repro.core.config import Definition, instantiate
+from repro.core.metrics import RunRecord
+from repro.data.datasets import Dataset
+
+
+@dataclasses.dataclass
+class ExperimentSettings:
+    count: int = 10                   # k
+    batch_mode: bool = False
+    repetitions: int = 1              # best-of-n for the query phase
+    timeout: Optional[float] = None   # seconds for build+queries, isolated only
+    isolated: bool = False            # subprocess isolation (Docker analogue)
+    recompute_distances: bool = True
+
+
+def _rss_kb() -> float:
+    try:
+        with open("/proc/self/status") as fh:
+            for line in fh:
+                if line.startswith("VmRSS"):
+                    return float(line.split()[1])
+    except OSError:
+        pass
+    return float("nan")
+
+
+def run_definition(
+    definition: Definition,
+    dataset: Dataset,
+    settings: ExperimentSettings,
+) -> List[RunRecord]:
+    """Run one algorithm instance through the full experiment loop."""
+    if settings.isolated:
+        return _run_isolated(definition, dataset, settings)
+    return _run_local(definition, dataset, settings)
+
+
+def _run_local(definition, dataset, settings) -> List[RunRecord]:
+    algo = instantiate(definition)
+    try:
+        return _experiment_loop(algo, definition, dataset, settings)
+    finally:
+        algo.done()
+
+
+def _experiment_loop(algo, definition, dataset, settings) -> List[RunRecord]:
+    X, Q = dataset.train, dataset.test
+    k = settings.count
+
+    rss_before = _rss_kb()
+    t0 = time.perf_counter()
+    algo.fit(X)
+    build_time = time.perf_counter() - t0
+    rss_after = _rss_kb()
+
+    index_size_kb = algo.index_size()
+    records: List[RunRecord] = []
+
+    qgroups: Sequence[tuple] = definition.query_argument_groups or ((),)
+    for qargs in qgroups:
+        if qargs:
+            algo.set_query_arguments(*qargs)
+        best: Optional[Dict[str, Any]] = None
+        for _ in range(max(1, settings.repetitions)):
+            res = _query_phase(algo, Q, k, settings.batch_mode)
+            if best is None or res["total_time"] < best["total_time"]:
+                best = res
+        assert best is not None
+        neighbors = _pad_neighbors(best["results"], k)
+        distances = _distances_for(dataset, neighbors) \
+            if settings.recompute_distances else np.full(neighbors.shape, np.nan,
+                                                         np.float32)
+        attrs = dict(algo.get_additional())
+        attrs["rss_delta_kb"] = rss_after - rss_before
+        records.append(
+            RunRecord(
+                algorithm=definition.algorithm,
+                instance_name=algo.name or definition.instance_name,
+                query_arguments=tuple(qargs),
+                dataset=dataset.name,
+                count=k,
+                batch_mode=settings.batch_mode,
+                neighbors=neighbors,
+                distances=distances,
+                gt_neighbors=dataset.neighbors[:, :max(k, 1)],
+                gt_distances=dataset.distances[:, :max(k, 1)],
+                query_times=best["query_times"],
+                total_time=best["total_time"],
+                build_time=build_time,
+                index_size_kb=index_size_kb,
+                attrs=attrs,
+            )
+        )
+    return records
+
+
+def _query_phase(algo, Q: np.ndarray, k: int, batch: bool) -> Dict[str, Any]:
+    if batch:
+        t0 = time.perf_counter()
+        algo.batch_query(Q, k)
+        total = time.perf_counter() - t0
+        # Materialisation happens OFF the clock (paper §3.5: opaque result +
+        # additional call "will stop the clock").
+        results = algo.get_batch_results()
+        return {"results": results, "total_time": total,
+                "query_times": np.empty(0, np.float64)}
+    times = np.empty(len(Q), np.float64)
+    results = []
+    t0 = time.perf_counter()
+    for i, q in enumerate(Q):
+        s = time.perf_counter()
+        results.append(np.asarray(algo.query(q, k)))
+        times[i] = time.perf_counter() - s
+    total = time.perf_counter() - t0
+    return {"results": results, "total_time": total, "query_times": times}
+
+
+def _pad_neighbors(results: Any, k: int) -> np.ndarray:
+    """Normalise per-query results to an [nq, k] int64 array, -1 padded."""
+    if isinstance(results, np.ndarray) and results.ndim == 2:
+        out = results.astype(np.int64)
+        if out.shape[1] >= k:
+            return out[:, :k]
+        pad = np.full((out.shape[0], k - out.shape[1]), -1, np.int64)
+        return np.concatenate([out, pad], axis=1)
+    rows = []
+    for r in results:
+        r = np.asarray(r, np.int64).ravel()[:k]
+        if r.size < k:
+            r = np.concatenate([r, np.full(k - r.size, -1, np.int64)])
+        rows.append(r)
+    return np.stack(rows) if rows else np.empty((0, k), np.int64)
+
+
+def _distances_for(dataset: Dataset, neighbors: np.ndarray) -> np.ndarray:
+    """Framework-side re-computation of result distances (paper §3.6)."""
+    from repro.ann import distances as D
+
+    return D.pairwise_rows(dataset.test, dataset.train, neighbors,
+                           dataset.metric)
+
+
+# --------------------------------------------------------------------------
+# subprocess isolation (the Docker-container analogue)
+# --------------------------------------------------------------------------
+
+def _child(conn, definition, dataset, settings):
+    try:
+        settings = dataclasses.replace(settings, isolated=False)
+        records = run_definition(definition, dataset, settings)
+        conn.send(("ok", records))
+    except Exception:
+        conn.send(("error", traceback.format_exc()))
+    finally:
+        conn.close()
+
+
+def _run_isolated(definition, dataset, settings) -> List[RunRecord]:
+    # spawn, not fork: jax's internal threads deadlock forked children
+    ctx = mp.get_context("spawn")
+    parent, child = ctx.Pipe()
+    proc = ctx.Process(target=_child, args=(child, definition, dataset, settings))
+    proc.start()
+    child.close()
+    timeout = settings.timeout
+    if parent.poll(timeout):
+        status, payload = parent.recv()
+        proc.join()
+        if status == "error":
+            raise RuntimeError(
+                f"isolated run of {definition.instance_name} failed:\n{payload}")
+        return payload
+    # Timeout exceeded: terminate the container-equivalent (paper §3.4:
+    # "perform a blocking, timed wait on the container, and will terminate
+    # it if the user-configurable timeout is exceeded").
+    proc.terminate()
+    proc.join()
+    raise TimeoutError(
+        f"{definition.instance_name} exceeded timeout of {timeout}s")

@@ -1,0 +1,130 @@
+"""The paper's standard programmatic interface for k-NN algorithms (§3.1).
+
+Every algorithm under benchmark implements :class:`BaseANN`.  The framework —
+never the algorithm — performs all timing and quality-measure computation
+(§3: "All the timing and quality measure computation is conducted within our
+framework").  Algorithms therefore only return candidate indices; distances
+returned by an algorithm are treated as advisory and re-computed by the
+results layer.
+
+The interface mirrors ann-benchmarks' wrapper protocol:
+
+  fit(X)                    -- preprocessing phase: build the index.
+  set_query_arguments(...)  -- reconfigure query-time parameters without
+                               rebuilding (the paper's ``query-args``).
+  query(q, k)               -- single query -> up to k candidate row ids.
+  batch_query(Q, k)         -- batch mode (§3.5): whole query set at once.
+                               May stash an opaque result; the framework
+                               calls get_batch_results() off the clock
+                               (paper: "akin to getAdditional()").
+  get_batch_results()       -- materialise batch results after the clock.
+  get_additional()          -- extra per-run info, e.g. number of distance
+                               computations (Table 1's N).
+  index_size()              -- size of the built data structure in kB.
+  done()                    -- release resources.
+"""
+
+from __future__ import annotations
+
+import abc
+from typing import Any, Dict, Optional, Sequence
+
+import numpy as np
+
+
+class BaseANN(abc.ABC):
+    """Abstract base class for all benchmarked k-NN implementations."""
+
+    #: human-readable name, overridden per instance with parameters baked in.
+    name: str = "BaseANN"
+    #: metrics this algorithm supports ("euclidean", "angular", "hamming").
+    supported_metrics: Sequence[str] = ("euclidean", "angular")
+    #: whether batch_query has a fused device path (vs looping over query()).
+    supports_batch: bool = True
+
+    def __init__(self, metric: str):
+        if metric not in self.supported_metrics:
+            raise ValueError(
+                f"{type(self).__name__} does not support metric {metric!r} "
+                f"(supported: {list(self.supported_metrics)})"
+            )
+        self.metric = metric
+        self._batch_results: Optional[Any] = None
+
+    # ---------------------------------------------------------------- build
+    @abc.abstractmethod
+    def fit(self, X: np.ndarray) -> None:
+        """Preprocessing phase: build the index for dataset X [n, d]."""
+
+    # ---------------------------------------------------------------- query
+    def set_query_arguments(self, *args: Any) -> None:
+        """Reconfigure query parameters on an already-built index."""
+        # Default: no query-time parameters.
+
+    @abc.abstractmethod
+    def query(self, q: np.ndarray, k: int) -> np.ndarray:
+        """Return up to k candidate indices for a single query point."""
+
+    def batch_query(self, Q: np.ndarray, k: int) -> None:
+        """Batch mode: answer every query in Q.  Results are stashed and
+        retrieved off the clock via get_batch_results()."""
+        self._batch_results = np.stack([self.query(q, k) for q in Q])
+
+    def get_batch_results(self) -> np.ndarray:
+        """Materialise the result of the last batch_query as an [nq, <=k]
+        integer array (may contain -1 padding for short answers)."""
+        if self._batch_results is None:
+            raise RuntimeError("batch_query() has not been called")
+        out = np.asarray(self._batch_results)
+        self._batch_results = None
+        return out
+
+    # ------------------------------------------------------------- metadata
+    def get_additional(self) -> Dict[str, Any]:
+        """Extra information about the last query run.  The convention from
+        the paper: ``dist_comps`` = number of exact distance computations."""
+        return {}
+
+    def index_size(self) -> float:
+        """Size of the built data structure in kB.  Default: sum of all
+        numpy/jax array attributes reachable from ``self`` (one level)."""
+        total = 0
+        for v in vars(self).values():
+            total += _nbytes(v)
+        return total / 1024.0
+
+    def done(self) -> None:
+        """Release any resources held by the index."""
+
+    # ---------------------------------------------------- serialization
+    # Index checkpointing (launch/serve.py, examples/serve_ann.py): jitted
+    # closures are not picklable; drop them on save and let subclasses
+    # rebuild via _rebuild() on load.
+    def __getstate__(self):
+        return {k: v for k, v in self.__dict__.items()
+                if not callable(v) and k != "_fns"}
+
+    def __setstate__(self, state):
+        self.__dict__.update(state)
+        self._rebuild()
+
+    def _rebuild(self) -> None:
+        """Recreate jitted query closures after unpickling."""
+
+    def __str__(self) -> str:  # pragma: no cover - cosmetic
+        return self.name
+
+
+def _nbytes(v: Any) -> int:
+    if isinstance(v, np.ndarray):
+        return v.nbytes
+    if hasattr(v, "nbytes") and not isinstance(v, (bytes, bytearray)):
+        try:
+            return int(v.nbytes)
+        except Exception:
+            return 0
+    if isinstance(v, (list, tuple)):
+        return sum(_nbytes(x) for x in v)
+    if isinstance(v, dict):
+        return sum(_nbytes(x) for x in v.values())
+    return 0

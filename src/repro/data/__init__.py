@@ -1,0 +1,4 @@
+from repro.data.datasets import Dataset, get_dataset, register_dataset
+from repro.data.groundtruth import exact_knn
+
+__all__ = ["Dataset", "get_dataset", "register_dataset", "exact_knn"]

@@ -1,0 +1,23 @@
+"""Pallas TPU kernels for the framework's compute hot-spots.
+
+Each kernel lives in its own subpackage with three files:
+
+    <name>.py   pl.pallas_call + explicit BlockSpec VMEM tiling (TPU target)
+    ops.py      jit'd public wrapper (shape padding, dtype plumbing,
+                interpret-mode switch for CPU validation)
+    ref.py      pure-jnp oracle the tests assert against
+
+Kernels:
+    distance/    tiled L2/IP/cosine distance matrix (MXU matmul + epilogue)
+    topk_scan/   fused distance + running top-k corpus scan (never
+                 materialises the full distance matrix in HBM)
+    hamming/     XOR + popcount distances over packed uint32 codes
+    embedbag/    embedding-bag gather-reduce (recsys hot path)
+    decode_attn/ single-token decode attention with online softmax
+"""
+
+import os
+
+# CPU container: kernels run in interpret mode.  On real TPU runtimes set
+# REPRO_PALLAS_INTERPRET=0.
+INTERPRET = os.environ.get("REPRO_PALLAS_INTERPRET", "1") != "0"

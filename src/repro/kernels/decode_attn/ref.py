@@ -1,0 +1,18 @@
+"""Pure-jnp oracle for decode attention."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def decode_attention_ref(q, k, v, lengths):
+    """q [B,G,dh], k/v [B,S,dh], lengths [B] -> [B,G,dh]."""
+    scale = 1.0 / (q.shape[-1] ** 0.5)
+    s = jnp.einsum("bgd,bsd->bgs", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    mask = jnp.arange(k.shape[1])[None, None, :] < lengths[:, None, None]
+    s = jnp.where(mask, s, -1e30)
+    p = jnp.exp(s - jnp.max(s, axis=-1, keepdims=True))
+    p = p / jnp.sum(p, axis=-1, keepdims=True)
+    return jnp.einsum("bgs,bsd->bgd", p,
+                      v.astype(jnp.float32)).astype(q.dtype)

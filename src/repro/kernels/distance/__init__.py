@@ -1,0 +1,4 @@
+from repro.kernels.distance.ops import distance_matrix
+from repro.kernels.distance.ref import distance_matrix_ref
+
+__all__ = ["distance_matrix", "distance_matrix_ref"]

@@ -1,0 +1,4 @@
+from repro.kernels.embedbag.ops import embedding_bag
+from repro.kernels.embedbag.ref import embedding_bag_ref
+
+__all__ = ["embedding_bag", "embedding_bag_ref"]

@@ -1,0 +1,11 @@
+"""Pure-jnp oracle for embedding-bag: gather + segment_sum."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def embedding_bag_ref(indices, bags, weights, table, *, n_bags: int):
+    rows = table[indices] * weights[:, None]
+    return jax.ops.segment_sum(rows, bags, num_segments=n_bags)

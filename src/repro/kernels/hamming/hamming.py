@@ -1,0 +1,81 @@
+"""Fused Hamming distance + top-k kernel over packed uint32 codes.
+
+The paper's Q4 finding (Hamming-aware implementations are 2-3x faster) rests
+on popcount distance computation.  TPU mapping: codes live as uint32 lanes;
+a (bq, bn) tile XORs query and corpus words broadcast in VMEM and reduces
+with the VPU's population_count — no MXU involvement, entirely
+bandwidth/VPU bound.  Top-k selection reuses the scan-merge from
+topk_scan (k rounds of min/argmin per tile).
+
+Grid: (nq/bq, n/bn), corpus axis sequential.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.topk_scan.topk_scan import _merge_topk_rounds, NEG_ONE
+
+
+def _hamming_kernel(q_ref, x_ref, nvalid_ref, vals_ref, idx_ref, *,
+                    k: int, bn: int):
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        vals_ref[...] = jnp.full_like(vals_ref, jnp.inf)
+        idx_ref[...] = jnp.full_like(idx_ref, NEG_ONE)
+
+    q = q_ref[...]                                     # [bq, w] uint32
+    x = x_ref[...]                                     # [bn, w] uint32
+    xor = jax.lax.bitwise_xor(q[:, None, :], x[None, :, :])
+    d = jnp.sum(jax.lax.population_count(xor), axis=-1).astype(jnp.float32)
+    bq = d.shape[0]
+    base = j * bn
+    ids = base + jax.lax.broadcasted_iota(jnp.int32, d.shape, 1)
+    # mask out padded corpus rows
+    d = jnp.where(ids < nvalid_ref[0, 0], d, jnp.inf)
+
+    cand_d = jnp.concatenate([vals_ref[...], d], axis=1)
+    cand_i = jnp.concatenate([idx_ref[...], ids], axis=1)
+    out_d, out_i = _merge_topk_rounds(cand_d, cand_i, k)
+    vals_ref[...] = out_d
+    idx_ref[...] = out_i
+
+
+@functools.partial(jax.jit, static_argnames=("k", "bq", "bn", "interpret"))
+def hamming_topk_pallas(Q, X, n_valid, *, k: int, bq: int = 64,
+                        bn: int = 512, interpret: bool = True):
+    nq, w = Q.shape
+    n = X.shape[0]
+    assert nq % bq == 0 and n % bn == 0
+    grid = (nq // bq, n // bn)
+    kernel = functools.partial(_hamming_kernel, k=k, bn=bn)
+    vals, idx = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bq, w), lambda i, j: (i, 0)),
+            pl.BlockSpec((bn, w), lambda i, j: (j, 0)),
+            pl.BlockSpec((1, 1), lambda i, j: (0, 0),
+                         memory_space=pltpu.SMEM),
+        ],
+        out_specs=[
+            pl.BlockSpec((bq, k), lambda i, j: (i, 0)),
+            pl.BlockSpec((bq, k), lambda i, j: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((nq, k), jnp.float32),
+            jax.ShapeDtypeStruct((nq, k), jnp.int32),
+        ],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "arbitrary"),
+        ),
+        interpret=interpret,
+    )(Q, X, n_valid)
+    return vals, idx

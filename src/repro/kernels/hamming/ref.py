@@ -1,0 +1,14 @@
+"""Pure-jnp oracle for the Hamming top-k kernel."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def hamming_topk_ref(Q, X, *, k: int):
+    xor = jax.lax.bitwise_xor(Q[:, None, :].astype(jnp.uint32),
+                              X[None, :, :].astype(jnp.uint32))
+    d = jnp.sum(jax.lax.population_count(xor), axis=-1).astype(jnp.float32)
+    neg, idx = jax.lax.top_k(-d, k)
+    return -neg, idx.astype(jnp.int32)

@@ -1,0 +1,4 @@
+from repro.kernels.topk_scan.ops import distance_topk
+from repro.kernels.topk_scan.ref import distance_topk_ref
+
+__all__ = ["distance_topk", "distance_topk_ref"]

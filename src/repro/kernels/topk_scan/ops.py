@@ -1,0 +1,50 @@
+"""Public wrapper for the fused distance+top-k scan kernel."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.kernels import INTERPRET
+from repro.kernels.topk_scan.topk_scan import topk_scan_pallas
+
+_METRIC_TO_MODE = {"euclidean": "l2sq", "angular": "cos", "ip": "ip"}
+
+
+def distance_topk(Q, X, *, k: int, metric: str = "euclidean",
+                  bq: int = 128, bn: int = 1024,
+                  interpret: bool | None = None):
+    """(dists [nq,k], ids [nq,k]) of the k nearest corpus rows per query.
+
+    ``metric="angular"`` expects pre-normalised inputs (the index layer
+    normalises at fit time).  Padded corpus rows are excluded via +inf
+    squared-norm sentinels (l2) / masked ids (cos, ip).
+    """
+    interpret = INTERPRET if interpret is None else interpret
+    mode = _METRIC_TO_MODE[metric]
+    nq, d = Q.shape
+    n = X.shape[0]
+    bq = min(bq, max(8, nq))
+    bn = min(bn, max(128, n))
+    pad_q = (-nq) % bq
+    pad_n = (-n) % bn
+    Qp = jnp.pad(jnp.asarray(Q, jnp.float32), ((0, pad_q), (0, 0)))
+    Xp = jnp.pad(jnp.asarray(X, jnp.float32), ((0, pad_n), (0, 0)))
+    qsq = jnp.sum(Qp * Qp, axis=1, keepdims=True)
+    xsq = jnp.sum(Xp * Xp, axis=1)[None, :]
+    if pad_n:
+        # sentinel distances: +inf for l2; for ip/cos ids are masked below
+        mask = jnp.arange(Xp.shape[0]) >= n
+        xsq = jnp.where(mask[None, :], jnp.inf, xsq)
+    vals, idx = topk_scan_pallas(Qp, Xp, qsq, xsq, mode=mode,
+                                 k=min(k, n), bq=bq, bn=bn,
+                                 interpret=interpret)
+    vals, idx = vals[:nq], idx[:nq]
+    if pad_n and mode != "l2sq":
+        valid = (idx >= 0) & (idx < n)
+        vals = jnp.where(valid, vals, jnp.inf)
+        idx = jnp.where(valid, idx, -1)
+        # re-sort so masked entries sink to the end
+        order = jnp.argsort(vals, axis=1)
+        vals = jnp.take_along_axis(vals, order, axis=1)
+        idx = jnp.take_along_axis(idx, order, axis=1)
+    return vals, idx

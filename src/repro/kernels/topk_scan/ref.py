@@ -1,0 +1,14 @@
+"""Pure-jnp oracle for the fused distance+top-k scan."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.distance.ref import distance_matrix_ref
+
+
+def distance_topk_ref(Q, X, *, k: int, mode: str = "l2sq"):
+    d = distance_matrix_ref(Q, X, mode=mode)
+    neg, idx = jax.lax.top_k(-d, k)
+    return -neg, idx.astype(jnp.int32)

@@ -1,0 +1,486 @@
+"""Cell builders: (architecture x input-shape) -> a lowerable step.
+
+``build_cell(arch_id, shape_name, mesh, **overrides)`` returns a CellPlan:
+    fn             the step function (closed over config + mesh)
+    args           ShapeDtypeStruct pytree (no allocation — weak-type
+                   correct stand-ins, the shannon/kernels pattern)
+    in_shardings   NamedSharding pytree matching args
+    out_shardings  NamedSharding pytree or None entries (compiler choice)
+    meta           dict for EXPERIMENTS.md (arch, shape, notes, model flops)
+
+Overrides are the §Perf hillclimbing hooks (remat policy, MoE path, KV
+cache dtype, loss chunk, flash block sizes...).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.registry import get_arch
+from repro.configs.shapes import subgraph_budget
+from repro.dist.sharding import named_sharding, spec_tree_to_shardings
+from repro.train.optim import adamw
+
+
+@dataclasses.dataclass
+class CellPlan:
+    arch: str
+    shape: str
+    fn: Callable
+    args: tuple
+    in_shardings: Any
+    out_shardings: Any
+    meta: dict
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def _batch_sharding(mesh, *axes):
+    return named_sharding(mesh, *axes)
+
+
+def _specs_to_shardings(spec_tree, mesh):
+    from repro.dist.sharding import is_axes_leaf
+    return jax.tree.map(
+        lambda axes: named_sharding(mesh, *axes), spec_tree,
+        is_leaf=is_axes_leaf)
+
+
+def _opt_shardings(param_shardings, mesh):
+    from repro.train.optim import AdamWState
+    return AdamWState(step=named_sharding(mesh),
+                      mu=param_shardings, nu=param_shardings)
+
+
+def model_flops_lm(cfg, n_tokens: int, kind: str) -> float:
+    """MODEL_FLOPS = 6*N*D (dense) / 6*N_active*D (MoE), decode: 2*N per tok
+    + attention read."""
+    from repro.models.transformer import LMConfig
+    # active params: embeddings excluded (standard convention)
+    d = cfg.d_model
+    attn = cfg.n_layers * (
+        (cfg.n_heads + 2 * cfg.n_kv_heads) * cfg.d_head * d
+        + cfg.n_heads * cfg.d_head * d) if cfg.attn == "gqa" else (
+        cfg.n_layers * ((cfg.mla.q_lora or d) * cfg.n_heads
+                        * (cfg.mla.qk_nope + cfg.mla.qk_rope) / max(cfg.mla.q_lora, 1) * (cfg.mla.q_lora and 1 or 1)))
+    if cfg.attn == "mla":
+        m = cfg.mla
+        per_layer = (d * (m.q_lora or 0)
+                     + (m.q_lora or d) * cfg.n_heads * (m.qk_nope + m.qk_rope)
+                     + d * (m.kv_lora + m.qk_rope)
+                     + m.kv_lora * cfg.n_heads * (m.qk_nope + m.v_head)
+                     + cfg.n_heads * m.v_head * d)
+        attn = cfg.n_layers * per_layer
+    if cfg.moe_cfg is not None:
+        mc = cfg.moe_cfg
+        n_moe = cfg.n_layers - mc.first_k_dense
+        ffn = (mc.first_k_dense * 3 * d * cfg.d_ff
+               + n_moe * 3 * d * mc.d_ff_expert * (mc.top_k + mc.n_shared))
+    else:
+        ffn = cfg.n_layers * 3 * d * cfg.d_ff
+    active = attn + ffn + d * cfg.vocab   # + unembed
+    mult = 6 if kind == "train" else 2
+    return mult * active * n_tokens
+
+
+# ====================================================================== LM
+def _build_lm(spec, shape_name, shape, mesh, ov):
+    from repro.models import transformer as T
+
+    cfg: Any = spec.make_config()
+    repl = {}
+    if cfg.moe_cfg is not None:
+        repl["moe_path"] = ov.get("moe_path", "ep")
+    for key in ("remat", "loss_chunk", "dtype", "flash_block_q",
+                "flash_block_k", "flash_block_skip", "seq_shard"):
+        if key in ov:
+            repl[key] = ov[key]
+    if repl:
+        cfg = dataclasses.replace(cfg, **repl)
+
+    params_shape = jax.eval_shape(
+        lambda: T.init(jax.random.PRNGKey(0), cfg))
+    p_shard = _specs_to_shardings(T.param_specs(cfg), mesh)
+    B, S = shape["global_batch"], shape["seq_len"]
+    kind = shape["kind"]
+    meta = {"model_flops": model_flops_lm(cfg, B * S if kind != "decode"
+                                          else B, kind)}
+
+    if kind == "train":
+        opt = adamw(1e-4)
+        opt_shape = jax.eval_shape(opt.init, params_shape)
+        o_shard = _opt_shardings(p_shard, mesh)
+        accum = int(ov.get("grad_accum", 1))
+        if accum > 1:
+            # §Perf lever: microbatch the global batch inside the step
+            base = T.make_train_step(cfg, adamw(1e-4), mesh)
+
+            def step(params, opt_state, batch, _accum=accum):
+                def loss_of(p, mb):
+                    return T.loss_fn(p, cfg, mb, mesh)
+
+                def micro(carry, mb):
+                    gsum, lsum = carry
+                    l, g = jax.value_and_grad(loss_of)(params, mb)
+                    return (jax.tree.map(jnp.add, gsum, g), lsum + l), None
+
+                mb_batch = jax.tree.map(
+                    lambda x: x.reshape((_accum, x.shape[0] // _accum)
+                                        + x.shape[1:]), batch)
+                zeros = jax.tree.map(
+                    lambda p: jnp.zeros(p.shape, jnp.float32), params)
+                (gsum, lsum), _ = jax.lax.scan(micro, (zeros, 0.0),
+                                               mb_batch)
+                grads = jax.tree.map(lambda g: g / _accum, gsum)
+                params2, opt_state = opt.update(grads, opt_state, params)
+                return params2, opt_state, {"loss": lsum / _accum}
+        else:
+            step = T.make_train_step(cfg, opt, mesh)
+        args = (params_shape, opt_shape,
+                {"tokens": _sds((B, S), jnp.int32),
+                 "labels": _sds((B, S), jnp.int32)})
+        bspec = _batch_sharding(mesh, "batch", None)
+        in_sh = (p_shard, o_shard, {"tokens": bspec, "labels": bspec})
+        out_sh = (p_shard, o_shard, {"loss": named_sharding(mesh)})
+        return CellPlan(spec.arch_id, shape_name, step, args, in_sh, out_sh,
+                        meta)
+
+    if kind == "prefill":
+        def step(params, tokens):
+            return T.prefill_step(params, cfg, tokens, mesh)
+        args = (params_shape, _sds((B, S), jnp.int32))
+        cache_sh = _specs_to_shardings(
+            T.cache_specs(cfg, model_shards=mesh.shape.get("model", 1)),
+            mesh)
+        in_sh = (p_shard, _batch_sharding(mesh, "batch", None))
+        out_sh = (_batch_sharding(mesh, "batch", "vocab"), cache_sh)
+        return CellPlan(spec.arch_id, shape_name, step, args, in_sh, out_sh,
+                        meta)
+
+    # decode
+    kv_dtype = ov.get("kv_dtype")
+    cache_shape = jax.eval_shape(lambda: T.init_cache(cfg, B, S))
+    if kv_dtype is not None:
+        cache_shape = jax.tree.map(
+            lambda s: jax.ShapeDtypeStruct(s.shape, kv_dtype), cache_shape)
+
+    def step(params, token, caches, cache_len):
+        if kv_dtype is not None:
+            caches = jax.tree.map(lambda c: c.astype(cfg.dtype), caches)
+        logits, new_caches = T.serve_step(params, cfg, token, caches,
+                                          cache_len, mesh)
+        if kv_dtype is not None:
+            new_caches = jax.tree.map(lambda c: c.astype(kv_dtype),
+                                      new_caches)
+        return logits, new_caches
+
+    # batch too small to shard (long_500k B=1): shard cache seq instead
+    n_batch = 1
+    for a in ("pod", "data"):
+        if a in mesh.axis_names:
+            n_batch *= mesh.shape[a]
+    shard_seq = (B % n_batch) != 0
+    cache_sh = _specs_to_shardings(
+        T.cache_specs(cfg, shard_seq=shard_seq,
+                      model_shards=mesh.shape.get("model", 1)), mesh)
+    tok_sh = (named_sharding(mesh, None, None) if shard_seq
+              else _batch_sharding(mesh, "batch", None))
+    logit_sh = (named_sharding(mesh, None, "vocab") if shard_seq
+                else _batch_sharding(mesh, "batch", "vocab"))
+    args = (params_shape, _sds((B, 1), jnp.int32), cache_shape,
+            _sds((), jnp.int32))
+    in_sh = (p_shard, tok_sh, cache_sh, named_sharding(mesh))
+    out_sh = (logit_sh, cache_sh)
+    return CellPlan(spec.arch_id, shape_name, step, args, in_sh, out_sh,
+                    meta)
+
+
+# ===================================================================== GNN
+_GNN_FEATS = {"full_graph_sm": (1433, 7), "ogb_products": (100, 47),
+              "minibatch_lg": (602, 41), "molecule": (64, 11)}
+
+
+def _build_gnn(spec, shape_name, shape, mesh, ov):
+    from repro.models import gnn
+
+    d_feat, n_out = _GNN_FEATS[shape_name]
+    readout = "graph" if shape["kind"] == "molecule" else "node"
+    cfg = spec.make_config(d_feat=d_feat, n_out=n_out, readout=readout)
+    if "node_shard" in ov:
+        cfg = dataclasses.replace(cfg, node_shard=ov["node_shard"])
+    params_shape = jax.eval_shape(lambda: gnn.init(jax.random.PRNGKey(0),
+                                                   cfg))
+    p_shard = _specs_to_shardings(gnn.param_specs(cfg), mesh)
+    opt = adamw(1e-3)
+    opt_shape = jax.eval_shape(opt.init, params_shape)
+    o_shard = _opt_shardings(p_shard, mesh)
+    step = gnn.make_train_step(cfg, opt, mesh)
+
+    # pad the edge list so it shards evenly over (pod x data); padded
+    # edges point at a phantom node (index N) whose loss mask is False.
+    def _pad_edges(E):
+        return ((E + 511) // 512) * 512
+
+    if shape["kind"] == "molecule":
+        Bg, Nn, Ne = shape["batch"], shape["n_nodes"], shape["n_edges"]
+        N, E = Bg * Nn + 1, _pad_edges(Bg * Ne)
+        batch = {"feats": _sds((N, d_feat), jnp.float32),
+                 "src": _sds((E,), jnp.int32),
+                 "dst": _sds((E,), jnp.int32),
+                 "graph_ids": _sds((N,), jnp.int32),
+                 "n_graphs": Bg + 1,          # last graph = phantom sink
+                 "labels": _sds((Bg + 1,), jnp.int32),
+                 "mask": _sds((Bg + 1,), jnp.bool_)}
+    elif shape["kind"] == "minibatch":
+        N, E = subgraph_budget(shape["batch_nodes"], shape["fanout"])
+        N, E = N + 1, _pad_edges(E)
+        batch = {"feats": _sds((N, d_feat), jnp.float32),
+                 "src": _sds((E,), jnp.int32),
+                 "dst": _sds((E,), jnp.int32),
+                 "labels": _sds((N,), jnp.int32),
+                 "mask": _sds((N,), jnp.bool_)}
+    else:
+        N, E = shape["n_nodes"] + 1, _pad_edges(shape["n_edges"])
+        batch = {"feats": _sds((N, d_feat), jnp.float32),
+                 "src": _sds((E,), jnp.int32),
+                 "dst": _sds((E,), jnp.int32),
+                 "labels": _sds((N,), jnp.int32),
+                 "mask": _sds((N,), jnp.bool_)}
+
+    edge_sh = _batch_sharding(mesh, "batch")
+    node_sh = named_sharding(mesh)          # replicated features
+    b_shard = {}
+    for key, v in batch.items():
+        if key in ("src", "dst"):
+            b_shard[key] = edge_sh
+        elif key == "n_graphs":
+            continue
+        else:
+            b_shard[key] = node_sh
+    if "n_graphs" in batch:
+        n_graphs = batch.pop("n_graphs")
+        step_inner = step
+
+        def step(params, opt_state, b, _n=n_graphs, _s=step_inner):
+            b = dict(b)
+            b["n_graphs"] = _n
+            return _s(params, opt_state, b)
+
+    # PNA FLOPs: edges * d * d (pre) + nodes * d_in*d (post) per layer, x3 train
+    d = cfg.d_hidden
+    n_mix = len(cfg.aggregators) * len(cfg.scalers)
+    fwd = cfg.n_layers * (2 * E * d * d + 2 * N * d * (n_mix + 1) * d) \
+        + 2 * N * d_feat * d + 2 * N * d * n_out
+    meta = {"model_flops": 3 * fwd}
+    args = (params_shape, opt_shape, batch)
+    in_sh = (p_shard, o_shard, b_shard)
+    out_sh = (p_shard, o_shard, {"loss": named_sharding(mesh)})
+    return CellPlan(spec.arch_id, shape_name, step, args, in_sh, out_sh,
+                    meta)
+
+
+# ================================================================== RECSYS
+def _build_recsys(spec, shape_name, shape, mesh, ov):
+    from repro.models import recsys as R
+
+    cfg = spec.make_config()
+    arch = spec.arch_id
+    if arch == "fm" and "fused_lookup" in ov:
+        cfg = dataclasses.replace(cfg, fused_lookup=ov["fused_lookup"])
+    kind = shape["kind"]
+    B = shape["batch"]
+
+    if arch == "dlrm-mlperf":
+        init_fn, spec_fn = R.dlrm_init, R.dlrm_specs
+        fwd = lambda p, b, m: R.dlrm_forward(p, cfg, b["dense"],
+                                             b["sparse"], m)
+        loss = lambda p, b, m: R.dlrm_loss(p, cfg, b, m)
+        n_fields = cfg.n_sparse
+        mk_batch = lambda B: {"dense": _sds((B, cfg.n_dense), jnp.float32),
+                              "sparse": _sds((B, n_fields), jnp.int32),
+                              "label": _sds((B,), jnp.float32)}
+        dense_flops = (sum(a * b for a, b in zip(cfg.bot_mlp, cfg.bot_mlp[1:]))
+                       + (cfg.bot_mlp[-1] + 351) * cfg.top_mlp[0]
+                       + sum(a * b for a, b in
+                             zip(cfg.top_mlp, cfg.top_mlp[1:]))
+                       + 27 * 27 * cfg.embed_dim)
+    elif arch == "dcn-v2":
+        init_fn, spec_fn = R.dcnv2_init, R.dcnv2_specs
+        fwd = lambda p, b, m: R.dcnv2_forward(p, cfg, b["dense"],
+                                              b["sparse"], m)
+        loss = lambda p, b, m: R.dcnv2_loss(p, cfg, b, m)
+        n_fields = len(cfg.vocabs)
+        mk_batch = lambda B: {"dense": _sds((B, cfg.n_dense), jnp.float32),
+                              "sparse": _sds((B, n_fields), jnp.int32),
+                              "label": _sds((B,), jnp.float32)}
+        d = cfg.d_in
+        dense_flops = (cfg.n_cross * d * d + d * cfg.mlp[0]
+                       + sum(a * b for a, b in zip(cfg.mlp, cfg.mlp[1:])))
+    elif arch == "fm":
+        init_fn, spec_fn = R.fm_init, R.fm_specs
+        fwd = lambda p, b, m: R.fm_forward(p, cfg, b["sparse"], m)
+        loss = lambda p, b, m: R.fm_loss(p, cfg, b, m)
+        n_fields = len(cfg.vocabs)
+        mk_batch = lambda B: {"sparse": _sds((B, n_fields), jnp.int32),
+                              "label": _sds((B,), jnp.float32)}
+        dense_flops = 3 * n_fields * cfg.embed_dim
+    else:  # bert4rec
+        return _build_bert4rec(spec, shape_name, shape, mesh, ov, cfg)
+
+    params_shape = jax.eval_shape(lambda: init_fn(jax.random.PRNGKey(0),
+                                                  cfg))
+    p_shard = _specs_to_shardings(spec_fn(cfg), mesh)
+    bspec1 = _batch_sharding(mesh, "batch")
+    bspec2 = _batch_sharding(mesh, "batch", None)
+
+    def batch_shardings(batch):
+        return {k: (bspec1 if v.ndim == 1 else bspec2)
+                for k, v in batch.items()}
+
+    # lookups dominate memory traffic: 2 bytes moved per table row read
+    meta = {"model_flops": 2 * B * dense_flops,
+            "lookup_rows": B * n_fields}
+
+    if kind == "train":
+        opt = adamw(1e-3)
+        opt_shape = jax.eval_shape(opt.init, params_shape)
+        o_shard = _opt_shardings(p_shard, mesh)
+
+        def step(params, opt_state, batch):
+            l, grads = jax.value_and_grad(
+                lambda p: loss(p, batch, mesh))(params)
+            params, opt_state = opt.update(grads, opt_state, params)
+            return params, opt_state, {"loss": l}
+
+        batch = mk_batch(B)
+        meta["model_flops"] *= 3
+        args = (params_shape, opt_shape, batch)
+        in_sh = (p_shard, o_shard, batch_shardings(batch))
+        out_sh = (p_shard, o_shard, {"loss": named_sharding(mesh)})
+        return CellPlan(arch, shape_name, step, args, in_sh, out_sh, meta)
+
+    if kind == "serve":
+        def step(params, batch):
+            return fwd(params, batch, mesh)
+        batch = mk_batch(B)
+        batch.pop("label")
+        args = (params_shape, batch)
+        in_sh = (p_shard, batch_shardings(batch))
+        out_sh = bspec1
+        return CellPlan(arch, shape_name, step, args, in_sh, out_sh, meta)
+
+    # retrieval: score n_candidates rows (user fixed, item field varies),
+    # exact top-k — batched scoring, not a loop.
+    C = shape["n_candidates"]
+
+    def step(params, batch):
+        logit = fwd(params, batch, mesh)
+        vals, idx = jax.lax.top_k(logit, 100)
+        return vals, idx
+    batch = mk_batch(C)
+    batch.pop("label")
+    meta["model_flops"] = 2 * C * dense_flops
+    meta["lookup_rows"] = C * n_fields
+    args = (params_shape, batch)
+    in_sh = (p_shard, batch_shardings(batch))
+    out_sh = (named_sharding(mesh), named_sharding(mesh))
+    return CellPlan(arch, shape_name, step, args, in_sh, out_sh, meta)
+
+
+def _build_bert4rec(spec, shape_name, shape, mesh, ov, cfg):
+    from repro.models import recsys as R
+
+    params_shape = jax.eval_shape(
+        lambda: R.bert4rec_init(jax.random.PRNGKey(0), cfg))
+    p_shard = _specs_to_shardings(R.bert4rec_specs(cfg), mesh)
+    B = shape["batch"]
+    S = cfg.seq_len
+    d = cfg.embed_dim
+    # fwd FLOPs per sequence: 2 flops/param-touch (qkvo = 4d^2, ffn =
+    # 2*d*d_ff) + attention scores/values (2 * 2*S^2*d per block)
+    enc_flops = (cfg.n_blocks * (8 * d * d + 4 * d * cfg.d_ff) * S
+                 + 4 * S * S * d * cfg.n_blocks)
+    kind = shape["kind"]
+    n_batch = 1
+    for a in ("pod", "data"):
+        if a in mesh.axis_names:
+            n_batch *= mesh.shape[a]
+    bspec = (_batch_sharding(mesh, "batch", None) if B % n_batch == 0
+             else named_sharding(mesh, None, None))
+
+    if kind == "train":
+        opt = adamw(1e-3)
+        opt_shape = jax.eval_shape(opt.init, params_shape)
+        o_shard = _opt_shardings(p_shard, mesh)
+
+        def step(params, opt_state, batch):
+            l, grads = jax.value_and_grad(
+                lambda p: R.bert4rec_loss(p, cfg, batch, mesh))(params)
+            params, opt_state = opt.update(grads, opt_state, params)
+            return params, opt_state, {"loss": l}
+        batch = {"items": _sds((B, S), jnp.int32),
+                 "labels": _sds((B, S), jnp.int32)}
+        meta = {"model_flops": 3 * B * (enc_flops + 2 * S * d * cfg.vocab)}
+        args = (params_shape, opt_shape, batch)
+        in_sh = (p_shard, o_shard, {"items": bspec, "labels": bspec})
+        out_sh = (p_shard, o_shard, {"loss": named_sharding(mesh)})
+        return CellPlan(spec.arch_id, shape_name, step, args, in_sh, out_sh,
+                        meta)
+
+    if kind == "serve":
+        def step(params, batch):
+            return R.bert4rec_user_repr(params, cfg, batch["items"], mesh)
+        batch = {"items": _sds((B, S), jnp.int32)}
+        meta = {"model_flops": B * enc_flops}
+        args = (params_shape, batch)
+        in_sh = (p_shard, {"items": bspec})
+        out_sh = bspec
+        return CellPlan(spec.arch_id, shape_name, step, args, in_sh, out_sh,
+                        meta)
+
+    # retrieval: THE paper-technique cell — user vector vs 1M candidates
+    # through the sharded ANN top-k merge.  Candidates padded to shard
+    # evenly (pipeline fills pad rows with -inf-scoring sentinels).
+    C = ((shape["n_candidates"] + 511) // 512) * 512
+    merge = ov.get("merge", "hier")
+    cand_dtype = jnp.bfloat16 if ov.get("cand_dtype") == "bf16" \
+        else jnp.float32
+
+    def step(params, batch):
+        uv = R.bert4rec_user_repr(params, cfg, batch["items"], mesh)
+        return R.retrieval_topk(uv.astype(cand_dtype), batch["cand_embed"],
+                                k=100, mesh=mesh, merge=merge)
+    batch = {"items": _sds((B, S), jnp.int32),
+             "cand_embed": _sds((C, d), cand_dtype)}
+    meta = {"model_flops": B * enc_flops + 2 * B * C * d,
+            "note": "ANN sharded top-k serving path"}
+    args = (params_shape, batch)
+    in_sh = (p_shard, {"items": bspec,
+                       "cand_embed": _batch_sharding(mesh, "rows", None)})
+    out_sh = (named_sharding(mesh), named_sharding(mesh))
+    return CellPlan(spec.arch_id, shape_name, step, args, in_sh, out_sh,
+                    meta)
+
+
+# =================================================================== entry
+def build_cell(arch_id: str, shape_name: str, mesh: Mesh,
+               **overrides) -> CellPlan:
+    spec = get_arch(arch_id)
+    if shape_name not in spec.shapes:
+        raise KeyError(f"{arch_id} has no shape {shape_name}")
+    if shape_name in spec.skips:
+        raise ValueError(
+            f"SKIP {arch_id} x {shape_name}: {spec.skips[shape_name]}")
+    shape = spec.shapes[shape_name]
+    if spec.family == "lm":
+        return _build_lm(spec, shape_name, shape, mesh, overrides)
+    if spec.family == "gnn":
+        return _build_gnn(spec, shape_name, shape, mesh, overrides)
+    return _build_recsys(spec, shape_name, shape, mesh, overrides)

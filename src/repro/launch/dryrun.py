@@ -1,0 +1,145 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run (deliverable e): lower + compile EVERY
+(architecture x input shape) cell on the production meshes and record
+memory_analysis / cost_analysis / collective schedule for §Dry-run and
+§Roofline.
+
+The XLA_FLAGS line above MUST stay the first statement — jax locks the
+device count at first init.  Do NOT import this module from tests or
+benchmarks (they must see 1 device).
+
+Usage:
+    PYTHONPATH=src python -m repro.launch.dryrun --arch gemma3-27b \
+        --shape train_4k [--multi-pod] [--out experiments/dryrun]
+    PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod]
+    PYTHONPATH=src python -m repro.launch.dryrun --list
+"""
+
+import argparse
+import json
+import sys
+import time
+import traceback
+from pathlib import Path
+
+
+def run_cell(arch: str, shape: str, multi_pod: bool, out_dir: Path,
+             overrides: dict, tag: str = "") -> dict:
+    import jax
+    from repro.launch.mesh import make_production_mesh
+    from repro.launch.cells import build_cell
+    from repro.analysis import roofline as R
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    chips = len(mesh.devices.flatten())
+    t0 = time.time()
+    plan = build_cell(arch, shape, mesh, **overrides)
+    record = {
+        "arch": arch, "shape": shape,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "chips": chips, "overrides": {k: str(v) for k, v in overrides.items()},
+        "tag": tag,
+    }
+    with mesh:
+        jitted = jax.jit(plan.fn, in_shardings=plan.in_shardings,
+                         out_shardings=plan.out_shardings)
+        lowered = jitted.lower(*plan.args)
+        record["t_lower_s"] = round(time.time() - t0, 1)
+        t1 = time.time()
+        compiled = lowered.compile()
+        record["t_compile_s"] = round(time.time() - t1, 1)
+        mem = compiled.memory_analysis()
+        print(mem)            # proves it fits (bytes per device)
+        cost = compiled.cost_analysis()
+        print({k: v for k, v in (cost[0] if isinstance(cost, list)
+                                 else cost).items()
+               if k in ("flops", "bytes accessed")})
+        hlo = compiled.as_text()
+        roof = R.from_compiled(compiled, plan.meta.get("model_flops", 0.0),
+                               chips, hlo_text=hlo)
+    record["memory"] = {
+        "argument_bytes": getattr(mem, "argument_size_in_bytes", None),
+        "output_bytes": getattr(mem, "output_size_in_bytes", None),
+        "temp_bytes": getattr(mem, "temp_size_in_bytes", None),
+        "generated_code_bytes": getattr(mem, "generated_code_size_in_bytes",
+                                        None),
+    }
+    record["collectives"] = R.collective_bytes(hlo)
+    record["roofline"] = roof.as_dict()
+    record["meta"] = {k: v for k, v in plan.meta.items()}
+    out_dir.mkdir(parents=True, exist_ok=True)
+    suffix = ("_mp" if multi_pod else "_sp") + (f"_{tag}" if tag else "")
+    path = out_dir / f"{arch}__{shape}{suffix}.json"
+    path.write_text(json.dumps(record, indent=1, default=str))
+    print(f"[dryrun OK] {arch} x {shape} ({record['mesh']}) "
+          f"compile={record['t_compile_s']}s dominant="
+          f"{record['roofline']['dominant']} -> {path}")
+    return record
+
+
+def main(argv=None):
+    p = argparse.ArgumentParser()
+    p.add_argument("--arch")
+    p.add_argument("--shape")
+    p.add_argument("--multi-pod", action="store_true")
+    p.add_argument("--all", action="store_true")
+    p.add_argument("--list", action="store_true")
+    p.add_argument("--out", default="experiments/dryrun")
+    p.add_argument("--tag", default="")
+    p.add_argument("--override", action="append", default=[],
+                   help="key=value perf override (e.g. kv_dtype=int8)")
+    args = p.parse_args(argv)
+
+    from repro.configs.registry import all_cells
+
+    overrides = {}
+    for kv in args.override:
+        k, v = kv.split("=", 1)
+        if v in ("int8",):
+            import jax.numpy as jnp
+            v = jnp.int8
+        elif v in ("True", "False"):
+            v = v == "True"
+        elif v.isdigit():
+            v = int(v)
+        overrides[k] = v
+
+    out_dir = Path(args.out)
+    if args.list:
+        for arch, shape, skip in all_cells():
+            print(f"{arch:24s} {shape:16s} "
+                  + (f"SKIP: {skip}" if skip else "run"))
+        return
+
+    cells = []
+    if args.all:
+        for arch, shape, skip in all_cells():
+            if skip:
+                print(f"[dryrun SKIP] {arch} x {shape}: {skip}")
+                (out_dir / "skips").mkdir(parents=True, exist_ok=True)
+                (out_dir / "skips" / f"{arch}__{shape}.json").write_text(
+                    json.dumps({"arch": arch, "shape": shape,
+                                "skip": skip}))
+                continue
+            cells.append((arch, shape))
+    else:
+        cells = [(args.arch, args.shape)]
+
+    failures = []
+    for arch, shape in cells:
+        try:
+            run_cell(arch, shape, args.multi_pod, out_dir, overrides,
+                     args.tag)
+        except Exception:
+            failures.append((arch, shape))
+            print(f"[dryrun FAIL] {arch} x {shape}", file=sys.stderr)
+            traceback.print_exc()
+    if failures:
+        print(f"{len(failures)} failures: {failures}", file=sys.stderr)
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,22 @@
+"""Production mesh construction (assignment-mandated signature).
+
+A FUNCTION, not a module-level constant, so importing this module never
+touches jax device state.
+"""
+
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh():
+    """Whatever devices the current process actually has (1 on this CPU
+    container; 512 under the dry-run's forced host-device count)."""
+    n = jax.device_count()
+    return jax.make_mesh((n,), ("data",))

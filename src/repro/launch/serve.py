@@ -1,0 +1,91 @@
+"""ANN serving launcher: build an index over a dataset and serve batched
+query streams, reporting the paper's metrics (recall vs QPS) live.
+
+    PYTHONPATH=src python -m repro.launch.serve --dataset blobs-euclidean-20000 \
+        --algorithm IVF --args 64 --query-args 8 --batch-size 512
+
+This is the "production" face of the benchmark framework: the same
+BaseANN implementations behind the experiment loop serve request batches,
+with index checkpointing (save/load) so restarts skip the build phase.
+"""
+
+from __future__ import annotations
+
+import argparse
+import pickle
+import time
+from pathlib import Path
+
+import numpy as np
+
+from repro.core.registry import resolve
+from repro.data import get_dataset
+
+
+def main(argv=None):
+    p = argparse.ArgumentParser()
+    p.add_argument("--dataset", default="blobs-euclidean-20000")
+    p.add_argument("--algorithm", default="IVF")
+    p.add_argument("--args", nargs="*", default=[])
+    p.add_argument("--query-args", nargs="*", default=[])
+    p.add_argument("--count", type=int, default=10)
+    p.add_argument("--batch-size", type=int, default=256)
+    p.add_argument("--n-batches", type=int, default=8)
+    p.add_argument("--index-cache", default=None)
+    args = p.parse_args(argv)
+
+    ds = get_dataset(args.dataset)
+    cls = resolve(args.algorithm)
+    ctor_args = [_coerce(a) for a in args.args]
+    algo = cls(ds.metric, *ctor_args)
+
+    cache = Path(args.index_cache) if args.index_cache else None
+    if cache and cache.exists():
+        algo = pickle.loads(cache.read_bytes())
+        print(f"[serve] restored index from {cache}")
+    else:
+        t0 = time.perf_counter()
+        algo.fit(ds.train)
+        print(f"[serve] built index in {time.perf_counter() - t0:.2f}s "
+              f"({algo.index_size():.0f} kB)")
+        if cache:
+            cache.write_bytes(pickle.dumps(algo))
+
+    if args.query_args:
+        algo.set_query_arguments(*[_coerce(a) for a in args.query_args])
+
+    rng = np.random.default_rng(0)
+    total_q, total_t = 0, 0.0
+    for b in range(args.n_batches):
+        idx = rng.integers(0, len(ds.test), args.batch_size)
+        Q = ds.test[idx]
+        t0 = time.perf_counter()
+        algo.batch_query(Q, args.count)
+        dt = time.perf_counter() - t0
+        res = algo.get_batch_results()
+        # recall against ground truth for the sampled queries
+        thr = ds.distances[idx, args.count - 1]
+        from repro.ann import distances as D
+        dists = D.pairwise_rows(Q, ds.train, res[:, :args.count], ds.metric)
+        rec = float(np.mean(np.sum(
+            dists <= thr[:, None] + 1e-3, axis=1) / args.count))
+        total_q += len(Q)
+        total_t += dt
+        print(f"  batch {b}: {len(Q) / dt:9.0f} QPS  recall@{args.count} "
+              f"= {rec:.3f}")
+    print(f"[serve] aggregate {total_q / total_t:.0f} QPS over "
+          f"{total_q} queries")
+
+
+def _coerce(a: str):
+    try:
+        return int(a)
+    except ValueError:
+        try:
+            return float(a)
+        except ValueError:
+            return a
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,137 @@
+"""Training launcher: ``--arch <id>`` + smoke/full scale selection.
+
+On this CPU container it trains the REDUCED config end-to-end (the ~100M
+example driver lives in examples/train_retrieval.py); on a real TPU fleet
+the same flags with ``--scale full`` drive the production mesh.  Checkpoint/
+auto-resume, straggler watchdog and optional gradient compression come from
+repro.train.loop.
+
+    PYTHONPATH=src python -m repro.launch.train --arch bert4rec \
+        --steps 50 --ckpt-dir /tmp/ck [--resume] [--compress-grads]
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.registry import get_arch
+from repro.train.loop import TrainLoopConfig, make_accum_train_step, run
+from repro.train.optim import adamw, warmup_cosine
+from repro.dist.compression import init_error_state
+
+
+def lm_batches(cfg, batch, seq, accum, seed=0):
+    rng = np.random.default_rng(seed)
+    while True:
+        toks = rng.integers(0, cfg.vocab, (accum, batch, seq + 1))
+        yield {"tokens": jnp.asarray(toks[..., :-1], jnp.int32),
+               "labels": jnp.asarray(toks[..., 1:], jnp.int32)}
+
+
+def gnn_batches(cfg, accum, seed=0):
+    from repro.data.graphs import random_graph
+
+    g = random_graph(512, 4096, cfg.d_feat, cfg.n_out, seed=seed)
+    src, dst = g.edge_list()
+
+    def tile(x):
+        return jnp.broadcast_to(jnp.asarray(x)[None], (accum,) + x.shape)
+    batch = {"feats": tile(g.feats), "src": tile(src), "dst": tile(dst),
+             "labels": tile(g.labels),
+             "mask": tile(np.ones(g.n_nodes, bool))}
+    while True:
+        yield batch
+
+
+def recsys_batches(arch, cfg, batch, accum, seed=0):
+    rng = np.random.default_rng(seed)
+    while True:
+        if arch == "bert4rec":
+            items = rng.integers(1, cfg.n_items, (accum, batch, cfg.seq_len))
+            mask = rng.random((accum, batch, cfg.seq_len)) < 0.2
+            yield {"items": jnp.asarray(items, jnp.int32),
+                   "labels": jnp.asarray(
+                       np.where(mask, items, -100), jnp.int32)}
+        else:
+            out = {"sparse": jnp.asarray(rng.integers(
+                0, 32, (accum, batch, len(cfg.vocabs))), jnp.int32),
+                "label": jnp.asarray(
+                    rng.integers(0, 2, (accum, batch)), jnp.float32)}
+            if arch in ("dlrm-mlperf", "dcn-v2"):
+                out["dense"] = jnp.asarray(rng.standard_normal(
+                    (accum, batch, cfg.n_dense)), jnp.float32)
+            yield out
+
+
+def main(argv=None):
+    p = argparse.ArgumentParser()
+    p.add_argument("--arch", required=True)
+    p.add_argument("--steps", type=int, default=30)
+    p.add_argument("--batch", type=int, default=8)
+    p.add_argument("--seq", type=int, default=64)
+    p.add_argument("--grad-accum", type=int, default=1)
+    p.add_argument("--lr", type=float, default=1e-3)
+    p.add_argument("--ckpt-dir", default=None)
+    p.add_argument("--ckpt-every", type=int, default=10)
+    p.add_argument("--compress-grads", action="store_true")
+    p.add_argument("--scale", choices=["smoke", "full"], default="smoke")
+    args = p.parse_args(argv)
+
+    spec = get_arch(args.arch)
+    cfg = (spec.make_smoke_config() if args.scale == "smoke"
+           else spec.make_config())
+    opt = adamw(warmup_cosine(args.lr, args.steps // 10 + 1, args.steps))
+
+    if spec.family == "lm":
+        from repro.models import transformer as T
+
+        def loss_fn(params, mb):
+            return T.loss_fn(params, cfg, mb)
+        init = lambda: T.init(jax.random.PRNGKey(0), cfg)
+        batches = lm_batches(cfg, args.batch, args.seq, args.grad_accum)
+    elif spec.family == "gnn":
+        from repro.models import gnn
+
+        def loss_fn(params, mb):
+            return gnn.loss_fn(params, cfg, mb)
+        init = lambda: gnn.init(jax.random.PRNGKey(0), cfg)
+        batches = gnn_batches(cfg, args.grad_accum)
+    else:
+        from repro.models import recsys as R
+        loss_map = {"dlrm-mlperf": (R.dlrm_init, R.dlrm_loss),
+                    "dcn-v2": (R.dcnv2_init, R.dcnv2_loss),
+                    "fm": (R.fm_init, R.fm_loss),
+                    "bert4rec": (R.bert4rec_init, R.bert4rec_loss)}
+        init_f, loss_f = loss_map[args.arch]
+
+        def loss_fn(params, mb):
+            return loss_f(params, cfg, mb)
+        init = lambda: init_f(jax.random.PRNGKey(0), cfg)
+        batches = recsys_batches(args.arch, cfg, args.batch,
+                                 args.grad_accum)
+
+    step = jax.jit(make_accum_train_step(
+        loss_fn, opt, args.grad_accum, compress=args.compress_grads))
+
+    def init_state():
+        params = init()
+        return params, opt.init(params), (
+            init_error_state(params) if args.compress_grads else {})
+
+    loop_cfg = TrainLoopConfig(
+        total_steps=args.steps, ckpt_dir=args.ckpt_dir,
+        ckpt_every=args.ckpt_every, grad_accum=args.grad_accum,
+        compress_grads=args.compress_grads)
+    params, _, history = run(cfg=loop_cfg, init_state=init_state,
+                             step_fn=step, batches=batches)
+    print(f"final loss: {history[-1]['loss']:.4f}")
+
+
+if __name__ == "__main__":
+    main()

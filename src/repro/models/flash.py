@@ -1,0 +1,117 @@
+"""Blocked attention with online softmax, in pure jnp (lax.scan).
+
+Why not materialise scores: prefill_32k has S=32768 — [B,H,S,S] fp32 scores
+are ~4 TB/device-group, so the dry-run would OOM at compile.  This is the
+XLA-level flash attention: an outer scan over query blocks and an inner scan
+over KV blocks keep only a (bq, bk) tile of scores live.  On real TPU the
+Pallas splash kernel would replace this; the XLA version keeps the CPU-target
+dry-run honest (same FLOPs, same O(S) memory).
+
+Supports GQA grouping, causal masking, sliding windows, and logit softcap.
+Causal/window block skipping is intentionally NOT done here — it is one of
+the §Perf iterations (EXPERIMENTS.md) so the before/after is measurable.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+_NEG = -1e30
+
+
+def flash_attention(
+    q: jnp.ndarray,            # [B, S, KV, G, dh]
+    k: jnp.ndarray,            # [B, T, KV, dh]
+    v: jnp.ndarray,            # [B, T, KV, dh]
+    q_pos: jnp.ndarray,        # [S]
+    k_pos: jnp.ndarray,        # [T]
+    *,
+    causal: bool = True,
+    window: Optional[int] = None,
+    softcap: float = 0.0,
+    bq: int = 512,
+    bk: int = 1024,
+    block_skip: bool = False,
+) -> jnp.ndarray:
+    """Returns [B, S, KV, G, dh] attention output."""
+    B, S, KV, G, dh = q.shape
+    T = k.shape[1]
+    dv = v.shape[-1]
+    bq = pick_block(S, bq)
+    bk = pick_block(T, bk)
+    nq, nk = S // bq, T // bk
+    scale = dh ** -0.5
+
+    qb = q.reshape(B, nq, bq, KV, G, dh).transpose(1, 0, 3, 4, 2, 5)
+    # qb [nq, B, KV, G, bq, dh]
+    kb = k.reshape(B, nk, bk, KV, dh).transpose(1, 0, 3, 2, 4)
+    vb = v.reshape(B, nk, bk, KV, dv).transpose(1, 0, 3, 2, 4)
+    # kb/vb [nk, B, KV, bk, dh]
+    qpb = q_pos.reshape(nq, bq)
+    kpb = k_pos.reshape(nk, bk)
+
+    def kv_step(carry, inp):
+        m, l, acc, qi, qp = carry
+        kj, vj, kp = inp
+        s = jnp.einsum("bKgqd,bKkd->bKgqk", qi.astype(jnp.float32),
+                       kj.astype(jnp.float32)) * scale
+        if softcap > 0:
+            s = softcap * jnp.tanh(s / softcap)
+        mask = jnp.ones((bq, bk), bool)
+        if causal:
+            mask &= kp[None, :] <= qp[:, None]
+        if window is not None:
+            mask &= kp[None, :] > qp[:, None] - window
+        s = jnp.where(mask[None, None, None, :, :], s, _NEG)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        alpha = jnp.exp(m - m_new)
+        l_new = l * alpha + jnp.sum(p, axis=-1, keepdims=True)
+        acc_new = acc * alpha + jnp.einsum(
+            "bKgqk,bKkd->bKgqd", p, vj.astype(jnp.float32))
+        return (m_new, l_new, acc_new, qi, qp), None
+
+    def q_block(qi, qp, kb_sel, vb_sel, kpb_sel):
+        m0 = jnp.full((B, KV, G, bq, 1), _NEG, jnp.float32)
+        l0 = jnp.zeros((B, KV, G, bq, 1), jnp.float32)
+        a0 = jnp.zeros((B, KV, G, bq, dv), jnp.float32)
+        (m, l, acc, _, _), _ = jax.lax.scan(
+            kv_step, (m0, l0, a0, qi, qp), (kb_sel, vb_sel, kpb_sel))
+        out = acc / jnp.maximum(l, 1e-30)
+        return out.astype(q.dtype)                 # [B,KV,G,bq,dv]
+
+    if not block_skip:
+        # paper-faithful baseline: every q block scans every kv block
+        outs = jax.lax.map(lambda args: q_block(*args, kb, vb, kpb),
+                           (qb, qpb))
+    else:
+        # §Perf iteration: causal/window block skipping — each q block
+        # scans only the kv blocks its mask can reach (python-unrolled q
+        # loop so the inner scans get their own, smaller trip counts)
+        blocks = []
+        for i in range(nq):
+            q_lo = i * bq
+            q_hi = q_lo + bq - 1
+            k_hi_blk = (q_hi // bk) + 1 if causal else nk
+            k_lo_blk = max(0, (q_lo - window) // bk) if window else 0
+            k_hi_blk = min(max(k_hi_blk, k_lo_blk + 1), nk)
+            blocks.append(q_block(qb[i], qpb[i],
+                                  kb[k_lo_blk:k_hi_blk],
+                                  vb[k_lo_blk:k_hi_blk],
+                                  kpb[k_lo_blk:k_hi_blk]))
+        outs = jnp.stack(blocks)
+    # outs [nq, B, KV, G, bq, dv] -> [B, S, KV, G, dv]
+    return outs.transpose(1, 0, 4, 2, 3, 5).reshape(B, S, KV, G, dv)
+
+
+def pick_block(size: int, target: int) -> int:
+    """Largest divisor of ``size`` that is <= target (block shapes must
+    tile the sequence exactly)."""
+    b = min(target, size)
+    while size % b != 0:
+        b -= 1
+    return b

@@ -1,0 +1,368 @@
+"""Shared model layers (functional, dict-param style — flax is unavailable
+offline, and explicit pytrees keep checkpoint/sharding logic transparent).
+
+Every layer is a pair (init_xxx, xxx_apply); params are plain dicts of
+jnp arrays; logical sharding axes for each parameter are produced by the
+matching ``xxx_specs`` helper and resolved against the active mesh by
+repro.dist.sharding.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.dist.sharding import constrain
+
+
+def trunc_normal(key, shape, scale, dtype):
+    return (jax.random.truncated_normal(key, -2.0, 2.0, shape, jnp.float32)
+            * scale).astype(dtype)
+
+
+# ---------------------------------------------------------------- rmsnorm
+def init_rmsnorm(d, dtype):
+    return {"scale": jnp.ones((d,), dtype)}
+
+
+def rmsnorm(params, x, eps: float = 1e-6):
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(x32 * x32, axis=-1, keepdims=True)
+    out = x32 * jax.lax.rsqrt(var + eps)
+    return (out * params["scale"].astype(jnp.float32)).astype(x.dtype)
+
+
+def rmsnorm_specs():
+    return {"scale": (None,)}
+
+
+# ------------------------------------------------------------------ dense
+def init_dense(key, d_in, d_out, dtype, bias=False, scale=None):
+    scale = scale if scale is not None else (d_in ** -0.5)
+    p = {"w": trunc_normal(key, (d_in, d_out), scale, dtype)}
+    if bias:
+        p["b"] = jnp.zeros((d_out,), dtype)
+    return p
+
+
+def dense(params, x):
+    y = x @ params["w"]
+    if "b" in params:
+        y = y + params["b"]
+    return y
+
+
+def dense_specs(in_axis=None, out_axis=None, bias=False):
+    s = {"w": (in_axis, out_axis)}
+    if bias:
+        s["b"] = (out_axis,)
+    return s
+
+
+# ------------------------------------------------------------------- rope
+def rope_cache(positions: jnp.ndarray, dim: int, theta: float):
+    """positions [*] -> (cos, sin) [*, dim/2] fp32."""
+    freqs = 1.0 / (theta ** (jnp.arange(0, dim, 2, dtype=jnp.float32) / dim))
+    angles = positions.astype(jnp.float32)[..., None] * freqs
+    return jnp.cos(angles), jnp.sin(angles)
+
+
+def apply_rope(x: jnp.ndarray, cos: jnp.ndarray, sin: jnp.ndarray):
+    """x [..., S, H, dim]; cos/sin [S, dim/2] (broadcast over heads)."""
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    cos = cos[:, None, :]              # [S, d/2] -> [S, 1(heads), d/2]
+    sin = sin[:, None, :]
+    while cos.ndim < x1.ndim:          # prepend batch dims -> [1, S, 1, d/2]
+        cos = cos[None]
+        sin = sin[None]
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], -1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------- GQA attention
+@dataclasses.dataclass(frozen=True)
+class AttnConfig:
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_head: int
+    rope_theta: float = 10_000.0
+    qkv_bias: bool = False
+    softcap: float = 0.0
+    qk_norm: bool = False
+    flash_block_q: int = 512
+    flash_block_k: int = 1024
+    flash_block_skip: bool = False
+
+
+def init_attention(key, cfg: AttnConfig, dtype):
+    ks = jax.random.split(key, 4)
+    H, KV, dh, d = cfg.n_heads, cfg.n_kv_heads, cfg.d_head, cfg.d_model
+    p = {
+        "wq": init_dense(ks[0], d, H * dh, dtype, cfg.qkv_bias),
+        "wk": init_dense(ks[1], d, KV * dh, dtype, cfg.qkv_bias),
+        "wv": init_dense(ks[2], d, KV * dh, dtype, cfg.qkv_bias),
+        "wo": init_dense(ks[3], H * dh, d, dtype,
+                         scale=(H * dh) ** -0.5),
+    }
+    if cfg.qk_norm:
+        p["qnorm"] = init_rmsnorm(dh, dtype)
+        p["knorm"] = init_rmsnorm(dh, dtype)
+    return p
+
+
+def attention_specs(cfg: AttnConfig):
+    s = {
+        "wq": dense_specs("fsdp", "heads", cfg.qkv_bias),
+        "wk": dense_specs("fsdp", "heads", cfg.qkv_bias),
+        "wv": dense_specs("fsdp", "heads", cfg.qkv_bias),
+        "wo": dense_specs("heads", "fsdp"),
+    }
+    if cfg.qk_norm:
+        s["qnorm"] = rmsnorm_specs()
+        s["knorm"] = rmsnorm_specs()
+    return s
+
+
+def _attn_mask(q_pos, k_pos, window: Optional[int]):
+    """Causal (+ optional sliding window) mask [Sq, Sk] bool (True=keep)."""
+    causal = k_pos[None, :] <= q_pos[:, None]
+    if window is not None:
+        causal &= k_pos[None, :] > q_pos[:, None] - window
+    return causal
+
+
+def attention(params, cfg: AttnConfig, x, positions, *, window=None,
+              mesh=None, kv_cache=None, cache_len=None):
+    """x [B,S,d].  Training/prefill when kv_cache is None; decode otherwise.
+
+    kv_cache: (k [B,W,KV,dh], v [B,W,KV,dh]) ring/linear buffer with
+    cache_len valid entries; returns (out, new_cache).
+    """
+    B, S, d = x.shape
+    H, KV, dh = cfg.n_heads, cfg.n_kv_heads, cfg.d_head
+    q = dense(params["wq"], x).reshape(B, S, H, dh)
+    k = dense(params["wk"], x).reshape(B, S, KV, dh)
+    v = dense(params["wv"], x).reshape(B, S, KV, dh)
+    if cfg.qk_norm:
+        q = rmsnorm(params["qnorm"], q)
+        k = rmsnorm(params["knorm"], k)
+    cos, sin = rope_cache(positions, dh, cfg.rope_theta)
+    q = apply_rope(q, cos, sin)
+    k = apply_rope(k, cos, sin)
+    q = constrain(q, mesh, "batch", None, "heads", None)
+    k = constrain(k, mesh, "batch", None, "kv_heads", None)
+
+    g = H // KV
+    if kv_cache is not None:
+        # Ring-buffer cache: W == sliding window for local layers, W ==
+        # max_seq for global layers.  RoPE is applied at write time, so
+        # slots only need a validity mask, not re-positioning.
+        ck, cv = kv_cache
+        W = ck.shape[1]
+        assert S == 1, "decode step handles one token"
+        slot = cache_len % W
+        ck = jax.lax.dynamic_update_slice(ck, k, (0, slot, 0, 0))
+        cv = jax.lax.dynamic_update_slice(cv, v, (0, slot, 0, 0))
+        slot_ids = jnp.arange(W)
+        # last position written to slot s: t - ((t - s) mod W); < 0 => empty
+        k_pos = cache_len - ((cache_len - slot_ids) % W)
+        mask = (k_pos >= 0)[None, :]                  # [Sq=1, W]
+        qg = q.reshape(B, S, KV, g, dh)
+        scores = jnp.einsum("bsKgh,btKh->bKgst", qg.astype(jnp.float32),
+                            ck.astype(jnp.float32)) / (dh ** 0.5)
+        if cfg.softcap > 0:
+            scores = cfg.softcap * jnp.tanh(scores / cfg.softcap)
+        scores = jnp.where(mask[None, None, None, :, :], scores, -1e30)
+        probs = jax.nn.softmax(scores, axis=-1).astype(x.dtype)
+        ctx = jnp.einsum("bKgst,btKh->bsKgh", probs, cv)
+        new_cache = (ck, cv)
+    else:
+        # prefill / training: blocked flash attention (O(S) memory)
+        from repro.models.flash import flash_attention
+
+        qg = q.reshape(B, S, KV, g, dh)
+        ctx = flash_attention(qg, k, v, positions, positions, causal=True,
+                              window=window, softcap=cfg.softcap,
+                              bq=cfg.flash_block_q, bk=cfg.flash_block_k,
+                              block_skip=cfg.flash_block_skip)
+        # expose (k, v) so prefill can collect the cache; forward() paths
+        # that don't need it discard (DCE removes the computation).
+        new_cache = (k, v)
+    ctx = ctx.reshape(B, S, H * dh)
+    out = dense(params["wo"], ctx)
+    out = constrain(out, mesh, "batch", None, "embed")
+    return out, new_cache
+
+
+# ------------------------------------------------------------- SwiGLU MLP
+def init_mlp(key, d_model, d_ff, dtype):
+    ks = jax.random.split(key, 3)
+    return {
+        "gate": init_dense(ks[0], d_model, d_ff, dtype),
+        "up": init_dense(ks[1], d_model, d_ff, dtype),
+        "down": init_dense(ks[2], d_ff, d_model, dtype,
+                           scale=d_ff ** -0.5),
+    }
+
+
+def mlp_specs():
+    return {"gate": dense_specs("fsdp", "mlp"),
+            "up": dense_specs("fsdp", "mlp"),
+            "down": dense_specs("mlp", "fsdp")}
+
+
+def mlp(params, x, mesh=None):
+    mid = (None,) * (x.ndim - 2)       # rank-2 [T,d] or rank-3 [B,S,d]
+    h = jax.nn.silu(dense(params["gate"], x)) * dense(params["up"], x)
+    h = constrain(h, mesh, "batch", *mid, "mlp")
+    out = dense(params["down"], h)
+    return constrain(out, mesh, "batch", *mid, "embed")
+
+
+# --------------------------------------------------------------- MLA attn
+@dataclasses.dataclass(frozen=True)
+class MLAConfig:
+    d_model: int
+    n_heads: int
+    q_lora: int          # 0 = dense q projection
+    kv_lora: int
+    qk_nope: int
+    qk_rope: int
+    v_head: int
+    rope_theta: float = 10_000.0
+    flash_block_q: int = 512
+    flash_block_k: int = 1024
+    flash_block_skip: bool = False
+
+
+def init_mla(key, cfg: MLAConfig, dtype):
+    ks = jax.random.split(key, 8)
+    H = cfg.n_heads
+    p = {}
+    if cfg.q_lora:
+        p["q_down"] = init_dense(ks[0], cfg.d_model, cfg.q_lora, dtype)
+        p["q_norm"] = init_rmsnorm(cfg.q_lora, dtype)
+        p["q_up"] = init_dense(ks[1], cfg.q_lora,
+                               H * (cfg.qk_nope + cfg.qk_rope), dtype)
+    else:
+        p["q_proj"] = init_dense(ks[1], cfg.d_model,
+                                 H * (cfg.qk_nope + cfg.qk_rope), dtype)
+    p["kv_down"] = init_dense(ks[2], cfg.d_model,
+                              cfg.kv_lora + cfg.qk_rope, dtype)
+    p["kv_norm"] = init_rmsnorm(cfg.kv_lora, dtype)
+    p["k_up"] = init_dense(ks[3], cfg.kv_lora, H * cfg.qk_nope, dtype)
+    p["v_up"] = init_dense(ks[4], cfg.kv_lora, H * cfg.v_head, dtype)
+    p["wo"] = init_dense(ks[5], H * cfg.v_head, cfg.d_model, dtype,
+                         scale=(H * cfg.v_head) ** -0.5)
+    return p
+
+
+def mla_specs(cfg: MLAConfig):
+    s = {
+        "kv_down": dense_specs("fsdp", None),
+        "kv_norm": rmsnorm_specs(),
+        "k_up": dense_specs("fsdp", "heads"),
+        "v_up": dense_specs("fsdp", "heads"),
+        "wo": dense_specs("heads", "fsdp"),
+    }
+    if cfg.q_lora:
+        s["q_down"] = dense_specs("fsdp", None)
+        s["q_norm"] = rmsnorm_specs()
+        s["q_up"] = dense_specs("fsdp", "heads")
+    else:
+        s["q_proj"] = dense_specs("fsdp", "heads")
+    return s
+
+
+def mla_attention(params, cfg: MLAConfig, x, positions, *, mesh=None,
+                  latent_cache=None, cache_len=None):
+    """DeepSeek-V2 multi-head latent attention.
+
+    Training/prefill: decompressed form (standard MHA over recovered K/V).
+    Decode (latent_cache [B, S, kv_lora + qk_rope]): *absorbed* form — the
+    cache stays compressed; q_nope is absorbed through k_up so scores are
+    taken directly against the latent (this is the memory win that makes
+    long_500k feasible; DESIGN.md §4).
+    """
+    B, S, d = x.shape
+    H = cfg.n_heads
+    if cfg.q_lora:
+        q = dense(params["q_up"],
+                  rmsnorm(params["q_norm"], dense(params["q_down"], x)))
+    else:
+        q = dense(params["q_proj"], x)
+    q = q.reshape(B, S, H, cfg.qk_nope + cfg.qk_rope)
+    q_nope, q_rope = jnp.split(q, [cfg.qk_nope], axis=-1)
+    cos, sin = rope_cache(positions, cfg.qk_rope, cfg.rope_theta)
+    q_rope = apply_rope(q_rope, cos, sin)
+
+    ckv = dense(params["kv_down"], x)                      # [B,S,kv+rope]
+    c_kv, k_rope = jnp.split(ckv, [cfg.kv_lora], axis=-1)
+    c_kv = rmsnorm(params["kv_norm"], c_kv)
+    k_rope = apply_rope(k_rope[:, :, None, :], cos, sin)[:, :, 0, :]
+
+    if latent_cache is None:
+        # decompressed training path via blocked flash attention: fold the
+        # shared rope key into per-head keys, concat [nope|rope] per head.
+        from repro.models.flash import flash_attention
+
+        k_nope = dense(params["k_up"], c_kv).reshape(B, S, H, cfg.qk_nope)
+        v = dense(params["v_up"], c_kv).reshape(B, S, H, cfg.v_head)
+        k_full = jnp.concatenate(
+            [k_nope,
+             jnp.broadcast_to(k_rope[:, :, None, :],
+                              (B, S, H, cfg.qk_rope))], axis=-1)
+        q_full = jnp.concatenate([q_nope, q_rope], axis=-1)
+        ctx = flash_attention(
+            q_full[:, :, :, None, :],          # KV=H heads, G=1
+            k_full, v, positions, positions, causal=True,
+            bq=cfg.flash_block_q, bk=cfg.flash_block_k,
+            block_skip=cfg.flash_block_skip)
+        ctx = ctx[:, :, :, 0, :]
+        out = dense(params["wo"], ctx.reshape(B, S, H * cfg.v_head))
+        # expose the latent cache for prefill collection
+        return constrain(out, mesh, "batch", None, "embed"), (c_kv, k_rope)
+
+    # ---------------- absorbed decode path ----------------
+    assert S == 1
+    cache, crope = latent_cache                            # [B,W,kv],[B,W,rope]
+    cache = jax.lax.dynamic_update_slice(cache, c_kv, (0, cache_len, 0))
+    crope = jax.lax.dynamic_update_slice(crope, k_rope, (0, cache_len, 0))
+    W = cache.shape[1]
+    # absorb: q_eff[h] = q_nope[h] @ k_up[:, h]^T  -> latent space
+    k_up = params["k_up"]["w"].reshape(cfg.kv_lora, H, cfg.qk_nope)
+    q_eff = jnp.einsum("bshn,lhn->bshl", q_nope.astype(jnp.float32),
+                       k_up.astype(jnp.float32))           # [B,1,H,kv_lora]
+    scale = (cfg.qk_nope + cfg.qk_rope) ** -0.5
+    scores = (jnp.einsum("bshl,btl->bhst", q_eff,
+                         cache.astype(jnp.float32))
+              + jnp.einsum("bshr,btr->bhst", q_rope.astype(jnp.float32),
+                           crope.astype(jnp.float32))) * scale
+    valid = jnp.arange(W)[None, :] <= cache_len
+    scores = jnp.where(valid[:, None, None, :], scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1)
+    ctx_latent = jnp.einsum("bhst,btl->bshl", probs,
+                            cache.astype(jnp.float32))     # [B,1,H,kv_lora]
+    v_up = params["v_up"]["w"].reshape(cfg.kv_lora, H, cfg.v_head)
+    ctx = jnp.einsum("bshl,lhv->bshv", ctx_latent,
+                     v_up.astype(jnp.float32)).astype(x.dtype)
+    out = dense(params["wo"], ctx.reshape(B, S, H * cfg.v_head))
+    return (constrain(out, mesh, "batch", None, "embed"),
+            (cache, crope))
+
+
+# ------------------------------------------------------------------- loss
+def cross_entropy(logits, labels, *, ignore_index: int = -100):
+    """Mean CE over valid positions; logits [..., V], labels [...] int."""
+    logits = logits.astype(jnp.float32)
+    logz = jax.scipy.special.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(
+        logits, jnp.maximum(labels, 0)[..., None], axis=-1)[..., 0]
+    nll = logz - gold
+    valid = labels != ignore_index
+    return jnp.sum(jnp.where(valid, nll, 0.0)) / jnp.maximum(
+        jnp.sum(valid), 1)

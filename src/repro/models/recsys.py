@@ -1,0 +1,430 @@
+"""RecSys architectures: DLRM (MLPerf config), DCN-v2, FM, BERT4Rec.
+
+The embedding LOOKUP is the hot path (assignment note): single-hot
+categorical lookups go through ``repro.dist.collectives.sharded_embed_lookup``
+(row-sharded tables over the 'model' axis, masked local gather + psum);
+multi-hot bags use the Pallas embedding-bag kernel on TPU and
+gather+segment_sum otherwise.
+
+Serving integration with the paper's technique (DESIGN.md §4): the
+``retrieval_cand`` shape scores one query against 10^6 candidates — this IS
+the ANN-benchmarks problem, and ``retrieval_topk`` routes it through the
+same sharded top-k merge the ANN serving stack uses.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.dist.collectives import sharded_embed_lookup
+from repro.dist.sharding import constrain
+from repro.models.layers import (cross_entropy, dense, dense_specs,
+                                 init_dense, init_rmsnorm, rmsnorm,
+                                 trunc_normal)
+
+# MLPerf DLRM Criteo-1TB embedding table cardinalities (26 tables).
+CRITEO_1TB_VOCABS = (
+    39884406, 39043, 17289, 7420, 20263, 3, 7120, 1543, 63, 38532951,
+    2953546, 403346, 10, 2208, 11938, 155, 4, 976, 14, 39979771, 25641295,
+    39664984, 585935, 12972, 108, 36,
+)
+# Kaggle-Criteo-like capped sizes for DCN-v2 (paper used Criteo Kaggle).
+CRITEO_KAGGLE_VOCABS = tuple(min(v, 10_000_000) for v in CRITEO_1TB_VOCABS)
+
+
+def _mlp_init(key, dims: Sequence[int], dtype):
+    ks = jax.random.split(key, len(dims) - 1)
+    return [init_dense(k, a, b, dtype, bias=True)
+            for k, a, b in zip(ks, dims[:-1], dims[1:])]
+
+
+def _mlp_apply(layers, x, final_act=False):
+    for i, lp in enumerate(layers):
+        x = dense(lp, x)
+        if i < len(layers) - 1 or final_act:
+            x = jax.nn.relu(x)
+    return x
+
+
+def _mlp_specs(dims):
+    return [dense_specs(None, None, bias=True) for _ in dims[:-1]]
+
+
+def _init_tables(key, vocabs, dim, dtype, pad_to: int = 1):
+    """One [V_i, dim] table per field; rows padded to a multiple of
+    ``pad_to`` so model-axis row sharding divides evenly."""
+    ks = jax.random.split(key, len(vocabs))
+    tables = []
+    for k, v in zip(ks, vocabs):
+        vp = ((v + pad_to - 1) // pad_to) * pad_to
+        tables.append(trunc_normal(k, (vp, dim), v ** -0.5, dtype))
+    return tables
+
+
+def _lookup_fields(tables, idx, mesh):
+    """idx [B, F] -> [B, F, dim] via per-field sharded lookup."""
+    cols = [sharded_embed_lookup(t, idx[:, i], mesh)
+            for i, t in enumerate(tables)]
+    return jnp.stack(cols, axis=1)
+
+
+def _bce(logit, label):
+    logit = logit.astype(jnp.float32)
+    return jnp.mean(jnp.maximum(logit, 0) - logit * label
+                    + jnp.log1p(jnp.exp(-jnp.abs(logit))))
+
+
+# ============================================================== DLRM
+@dataclasses.dataclass(frozen=True)
+class DLRMConfig:
+    name: str = "dlrm-mlperf"
+    n_dense: int = 13
+    vocabs: Tuple[int, ...] = CRITEO_1TB_VOCABS
+    embed_dim: int = 128
+    bot_mlp: Tuple[int, ...] = (13, 512, 256, 128)
+    top_mlp: Tuple[int, ...] = (1024, 1024, 512, 256, 1)
+    dtype: object = jnp.float32
+    table_pad: int = 512             # row multiple for model-axis sharding
+
+    @property
+    def n_sparse(self):
+        return len(self.vocabs)
+
+
+def dlrm_init(rng, cfg: DLRMConfig):
+    k1, k2, k3, k4 = jax.random.split(rng, 4)
+    n_vec = cfg.n_sparse + 1
+    n_inter = n_vec * (n_vec - 1) // 2
+    top_in = cfg.bot_mlp[-1] + n_inter
+    return {
+        "tables": _init_tables(k1, cfg.vocabs, cfg.embed_dim, cfg.dtype,
+                               cfg.table_pad),
+        "bot": _mlp_init(k2, cfg.bot_mlp, cfg.dtype),
+        "top": _mlp_init(k3, (top_in,) + cfg.top_mlp, cfg.dtype),
+    }
+
+
+def dlrm_specs(cfg: DLRMConfig):
+    return {
+        "tables": [("table", None) for _ in cfg.vocabs],
+        "bot": _mlp_specs(cfg.bot_mlp),
+        "top": _mlp_specs((0,) + cfg.top_mlp),
+    }
+
+
+def dlrm_forward(params, cfg: DLRMConfig, dense_x, sparse_idx, mesh=None):
+    B = dense_x.shape[0]
+    bot = _mlp_apply(params["bot"], dense_x.astype(cfg.dtype),
+                     final_act=True)                       # [B, 128]
+    embs = _lookup_fields(params["tables"], sparse_idx, mesh)  # [B, 26, 128]
+    embs = constrain(embs, mesh, "batch", None, None)
+    allv = jnp.concatenate([bot[:, None, :], embs], axis=1)    # [B, 27, d]
+    z = jnp.einsum("bnd,bmd->bnm", allv, allv)                 # dot interact
+    iu, ju = jnp.triu_indices(allv.shape[1], k=1)
+    inter = z[:, iu, ju]                                       # [B, 351]
+    top_in = jnp.concatenate([bot, inter], axis=1)
+    return _mlp_apply(params["top"], top_in)[:, 0]             # logit [B]
+
+
+def dlrm_loss(params, cfg: DLRMConfig, batch, mesh=None):
+    logit = dlrm_forward(params, cfg, batch["dense"], batch["sparse"], mesh)
+    return _bce(logit, batch["label"].astype(jnp.float32))
+
+
+# ============================================================== DCN-v2
+@dataclasses.dataclass(frozen=True)
+class DCNv2Config:
+    name: str = "dcn-v2"
+    n_dense: int = 13
+    vocabs: Tuple[int, ...] = CRITEO_KAGGLE_VOCABS
+    embed_dim: int = 16
+    n_cross: int = 3
+    mlp: Tuple[int, ...] = (1024, 1024, 512)
+    dtype: object = jnp.float32
+    table_pad: int = 512
+
+    @property
+    def d_in(self):
+        return self.n_dense + len(self.vocabs) * self.embed_dim
+
+
+def dcnv2_init(rng, cfg: DCNv2Config):
+    ks = jax.random.split(rng, cfg.n_cross + 3)
+    d = cfg.d_in
+    return {
+        "tables": _init_tables(ks[0], cfg.vocabs, cfg.embed_dim, cfg.dtype,
+                               cfg.table_pad),
+        "cross": [init_dense(ks[1 + i], d, d, cfg.dtype, bias=True)
+                  for i in range(cfg.n_cross)],
+        "deep": _mlp_init(ks[-2], (d,) + cfg.mlp, cfg.dtype),
+        "logit": init_dense(ks[-1], cfg.mlp[-1], 1, cfg.dtype, bias=True),
+    }
+
+
+def dcnv2_specs(cfg: DCNv2Config):
+    return {
+        "tables": [("table", None) for _ in cfg.vocabs],
+        "cross": [dense_specs(None, None, bias=True)
+                  for _ in range(cfg.n_cross)],
+        "deep": _mlp_specs((0,) + cfg.mlp),
+        "logit": dense_specs(None, None, bias=True),
+    }
+
+
+def dcnv2_forward(params, cfg: DCNv2Config, dense_x, sparse_idx, mesh=None):
+    embs = _lookup_fields(params["tables"], sparse_idx, mesh)
+    x0 = jnp.concatenate(
+        [dense_x.astype(cfg.dtype), embs.reshape(embs.shape[0], -1)], axis=1)
+    x0 = constrain(x0, mesh, "batch", None)
+    x = x0
+    for lp in params["cross"]:
+        x = x0 * dense(lp, x) + x                         # x0 ⊙ (Wx+b) + x
+    h = _mlp_apply(params["deep"], x, final_act=True)
+    return dense(params["logit"], h)[:, 0]
+
+
+def dcnv2_loss(params, cfg: DCNv2Config, batch, mesh=None):
+    logit = dcnv2_forward(params, cfg, batch["dense"], batch["sparse"], mesh)
+    return _bce(logit, batch["label"].astype(jnp.float32))
+
+
+# ================================================================== FM
+@dataclasses.dataclass(frozen=True)
+class FMConfig:
+    """Rendle's factorization machine, 2-way, O(nk) sum-square trick.
+    All 39 Criteo fields treated as categorical (13 dense bucketised to 100
+    bins each — standard FM-on-Criteo preprocessing).
+
+    ``fused_lookup`` (§Perf iteration): FM only consumes field-SUMS of the
+    embeddings (Σv, Σv², Σw), all linear — so each table shard can reduce
+    its fields locally and all-reduce [B,k]+[B,k]+[B] instead of the
+    [B,F,k] per-field lookups (~F x fewer collective bytes)."""
+    name: str = "fm"
+    vocabs: Tuple[int, ...] = tuple([100] * 13) + CRITEO_KAGGLE_VOCABS
+    embed_dim: int = 10
+    dtype: object = jnp.float32
+    table_pad: int = 512
+    fused_lookup: bool = False
+
+
+def fm_init(rng, cfg: FMConfig):
+    k1, k2, k3 = jax.random.split(rng, 3)
+    return {
+        "v": _init_tables(k1, cfg.vocabs, cfg.embed_dim, cfg.dtype,
+                          cfg.table_pad),
+        "w": _init_tables(k2, cfg.vocabs, 1, cfg.dtype, cfg.table_pad),
+        "b": jnp.zeros((1,), cfg.dtype),
+    }
+
+
+def fm_specs(cfg: FMConfig):
+    return {"v": [("table", None) for _ in cfg.vocabs],
+            "w": [("table", None) for _ in cfg.vocabs],
+            "b": (None,)}
+
+
+def fm_forward(params, cfg: FMConfig, sparse_idx, mesh=None):
+    if (cfg.fused_lookup and mesh is not None
+            and "model" in mesh.axis_names and mesh.shape["model"] > 1):
+        return _fm_forward_fused(params, cfg, sparse_idx, mesh)
+    v = _lookup_fields(params["v"], sparse_idx, mesh)      # [B, F, k]
+    w = _lookup_fields(params["w"], sparse_idx, mesh)[..., 0]  # [B, F]
+    s = jnp.sum(v, axis=1)                                 # [B, k]
+    pair = 0.5 * jnp.sum(s * s - jnp.sum(v * v, axis=1), axis=-1)
+    return params["b"][0] + jnp.sum(w, axis=1) + pair
+
+
+def _fm_forward_fused(params, cfg: FMConfig, sparse_idx, mesh):
+    """Fused sharded lookup: per-shard partial field sums, ONE psum of
+    [B,k] + [B,k] + [B] instead of F per-field [B,k] reductions."""
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P
+
+    F = len(cfg.vocabs)
+    m = mesh.shape["model"]
+    ba = tuple(a for a in ("pod", "data") if a in mesh.axis_names
+               and sparse_idx.shape[0] % mesh.shape[a] == 0)
+
+    def fn(idx, *tabs):
+        vtabs, wtabs = tabs[:F], tabs[F:]
+        shard = jax.lax.axis_index("model")
+        acc_s = jnp.zeros((idx.shape[0], cfg.embed_dim), cfg.dtype)
+        acc_sq = jnp.zeros((idx.shape[0], cfg.embed_dim), cfg.dtype)
+        acc_w = jnp.zeros((idx.shape[0],), cfg.dtype)
+        for f in range(F):
+            rows = vtabs[f].shape[0]
+            local = idx[:, f] - shard * rows
+            ok = (local >= 0) & (local < rows)
+            safe = jnp.clip(local, 0, rows - 1)
+            rv = jnp.where(ok[:, None], vtabs[f][safe], 0)
+            rw = jnp.where(ok, wtabs[f][safe, 0], 0)
+            acc_s = acc_s + rv
+            acc_sq = acc_sq + rv * rv
+            acc_w = acc_w + rw
+        acc_s, acc_sq, acc_w = jax.lax.psum(
+            (acc_s, acc_sq, acc_w), "model")
+        pair = 0.5 * jnp.sum(acc_s * acc_s - acc_sq, axis=-1)
+        return acc_w + pair
+
+    logit = shard_map(
+        fn, mesh=mesh,
+        in_specs=(P(ba, None),) + (P("model", None),) * (2 * F),
+        out_specs=P(ba), check_rep=False,
+    )(sparse_idx, *params["v"], *params["w"])
+    return params["b"][0] + logit
+
+
+def fm_loss(params, cfg: FMConfig, batch, mesh=None):
+    logit = fm_forward(params, cfg, batch["sparse"], mesh)
+    return _bce(logit, batch["label"].astype(jnp.float32))
+
+
+# ============================================================ BERT4Rec
+@dataclasses.dataclass(frozen=True)
+class Bert4RecConfig:
+    name: str = "bert4rec"
+    n_items: int = 26744             # ML-20M
+    embed_dim: int = 64
+    n_blocks: int = 2
+    n_heads: int = 2
+    seq_len: int = 200
+    d_ff: int = 256
+    dtype: object = jnp.float32
+
+    @property
+    def vocab(self):
+        # +pad +mask tokens, rounded to a multiple of 128 so the vocab-
+        # sharded softmax divides any model-axis size (standard padding).
+        raw = self.n_items + 2
+        return ((raw + 127) // 128) * 128
+
+
+def bert4rec_init(rng, cfg: Bert4RecConfig):
+    ks = jax.random.split(rng, 2 + cfg.n_blocks)
+    d = cfg.embed_dim
+    params = {
+        "item_embed": trunc_normal(ks[0], (cfg.vocab, d), 0.02, cfg.dtype),
+        "pos_embed": trunc_normal(ks[1], (cfg.seq_len, d), 0.02, cfg.dtype),
+        "blocks": [],
+        "final_ln": init_rmsnorm(d, cfg.dtype),
+    }
+    for i in range(cfg.n_blocks):
+        bk = jax.random.split(ks[2 + i], 6)
+        params["blocks"].append({
+            "ln1": init_rmsnorm(d, cfg.dtype),
+            "wq": init_dense(bk[0], d, d, cfg.dtype),
+            "wk": init_dense(bk[1], d, d, cfg.dtype),
+            "wv": init_dense(bk[2], d, d, cfg.dtype),
+            "wo": init_dense(bk[3], d, d, cfg.dtype),
+            "ln2": init_rmsnorm(d, cfg.dtype),
+            "ff1": init_dense(bk[4], d, cfg.d_ff, cfg.dtype, bias=True),
+            "ff2": init_dense(bk[5], cfg.d_ff, d, cfg.dtype, bias=True),
+        })
+    return params
+
+
+def bert4rec_specs(cfg: Bert4RecConfig):
+    blocks = [{
+        "ln1": {"scale": (None,)},
+        "wq": dense_specs(None, "heads"), "wk": dense_specs(None, "heads"),
+        "wv": dense_specs(None, "heads"), "wo": dense_specs("heads", None),
+        "ln2": {"scale": (None,)},
+        "ff1": dense_specs(None, "mlp", bias=True),
+        "ff2": dense_specs("mlp", None, bias=True),
+    } for _ in range(cfg.n_blocks)]
+    return {"item_embed": ("vocab", None), "pos_embed": (None, None),
+            "blocks": blocks, "final_ln": {"scale": (None,)}}
+
+
+def bert4rec_encode(params, cfg: Bert4RecConfig, items, mesh=None):
+    """items [B, S] -> hidden [B, S, d] (bidirectional encoder)."""
+    from repro.models.flash import flash_attention
+
+    B, S = items.shape
+    x = sharded_embed_lookup(params["item_embed"], items, mesh)
+    x = x + params["pos_embed"][None, :S, :]
+    x = x.astype(cfg.dtype)
+    H = cfg.n_heads
+    dh = cfg.embed_dim // H
+    positions = jnp.arange(S)
+    for bp in params["blocks"]:
+        h = rmsnorm(bp["ln1"], x)
+        q = dense(bp["wq"], h).reshape(B, S, H, 1, dh)
+        k = dense(bp["wk"], h).reshape(B, S, H, dh)
+        v = dense(bp["wv"], h).reshape(B, S, H, dh)
+        ctx = flash_attention(q, k, v, positions, positions, causal=False)
+        x = x + dense(bp["wo"], ctx.reshape(B, S, cfg.embed_dim))
+        h = rmsnorm(bp["ln2"], x)
+        x = x + dense(bp["ff2"], jax.nn.gelu(dense(bp["ff1"], h)))
+    return rmsnorm(params["final_ln"], x)
+
+
+def bert4rec_loss(params, cfg: Bert4RecConfig, batch, mesh=None):
+    """Masked-item prediction: labels [B, S] with -100 on unmasked."""
+    hidden = bert4rec_encode(params, cfg, batch["items"], mesh)
+    logits = hidden @ params["item_embed"].T               # tied softmax
+    logits = constrain(logits, mesh, "batch", None, "vocab")
+    return cross_entropy(logits, batch["labels"])
+
+
+def bert4rec_user_repr(params, cfg: Bert4RecConfig, items, mesh=None):
+    """Last-position hidden state = user vector for retrieval."""
+    hidden = bert4rec_encode(params, cfg, items, mesh)
+    return hidden[:, -1, :]
+
+
+# ------------------------------------------------- retrieval (ANN tie-in)
+def retrieval_topk(query_vec, cand_embed, k: int = 100, mesh=None,
+                   merge: str = "hier"):
+    """Score 1 query (or a small batch) against n_candidates item vectors
+    and return the top-k by inner product — routed through the sharded
+    ANN top-k merge (the paper's technique as a serving feature).
+
+    merge="hier": per-axis merge tree (model, then data, then pod — each
+    hop gathers shards-per-axis x k candidates and re-top-ks, so the
+    expensive cross-pod hop only moves k entries per member).
+    merge="flat": single all-gather of every shard's local top-k followed
+    by one global top-k — the naive baseline the §Perf log compares
+    against.
+    """
+    from repro.ann.topk import topk_with_ids
+
+    if mesh is not None and len(mesh.devices.flatten()) > 1:
+        from jax.experimental.shard_map import shard_map
+        from jax.sharding import PartitionSpec as P
+
+        axes = tuple(a for a in ("pod", "data", "model")
+                     if a in mesh.axis_names)
+
+        def fn(q, x, ids):
+            d = -(q @ x.T)                                 # ip distance
+            vals, pos = jax.lax.top_k(-d, min(k, x.shape[0]))
+            out_ids = ids[pos]
+            vals = -vals
+            if merge == "flat":
+                for ax in reversed(axes):
+                    vals = jax.lax.all_gather(vals, ax, axis=1, tiled=True)
+                    out_ids = jax.lax.all_gather(out_ids, ax, axis=1,
+                                                 tiled=True)
+                vals, out_ids = topk_with_ids(vals, out_ids, k)
+            else:
+                for ax in reversed(axes):
+                    vals = jax.lax.all_gather(vals, ax, axis=1, tiled=True)
+                    out_ids = jax.lax.all_gather(out_ids, ax, axis=1,
+                                                 tiled=True)
+                    vals, out_ids = topk_with_ids(vals, out_ids, k)
+            return vals, out_ids
+
+        n = cand_embed.shape[0]
+        ids = jnp.arange(n, dtype=jnp.int32)
+        return shard_map(fn, mesh=mesh,
+                         in_specs=(P(), P(axes), P(axes)),
+                         out_specs=(P(), P()), check_rep=False)(
+            query_vec, cand_embed, ids)
+    d = -(query_vec @ cand_embed.T)
+    vals, idx = jax.lax.top_k(-d, min(k, cand_embed.shape[0]))
+    return -vals, idx

@@ -1,0 +1,397 @@
+"""Decoder-only transformer LM covering the five assigned LM architectures:
+dense GQA (phi4, qwen), local/global sliding-window GQA (gemma3), and MLA +
+MoE (deepseek-v2, moonshot/moonlight).
+
+Structure: layers are grouped into maximal *runs* of identical
+(attention-kind, window, moe-ness) signature; each run's parameters are
+stacked on a leading axis and executed with ``lax.scan`` (small HLO, fast
+multi-pod compiles).  gemma3's 5-local:1-global pattern yields runs
+[5L,1G]x10+[2L]; deepseek's first-dense-then-moe yields [1 dense][59 moe].
+
+Steps exposed (used by launch/dryrun.py and the trainers):
+    init(rng, cfg)                           -> params
+    forward(params, cfg, tokens, mesh)       -> logits-producing activations
+    loss_fn(params, cfg, batch, mesh)        -> scalar loss (chunked vocab CE)
+    make_train_step(cfg, optimizer, mesh)    -> jit-able train step
+    init_cache(cfg, batch, max_seq)          -> decode cache pytree
+    serve_step(params, cfg, token, cache, cache_len, mesh) -> logits, cache
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.dist.sharding import constrain
+from repro.models import layers as L
+from repro.models.moe import MoEConfig, init_moe, moe, moe_specs
+
+
+@dataclasses.dataclass(frozen=True)
+class MLAParams:
+    q_lora: int
+    kv_lora: int
+    qk_nope: int
+    qk_rope: int
+    v_head: int
+
+
+@dataclasses.dataclass(frozen=True)
+class MoEParams:
+    n_experts: int
+    top_k: int
+    d_ff_expert: int
+    n_shared: int = 0
+    first_k_dense: int = 0
+    aux_weight: float = 0.001
+
+
+@dataclasses.dataclass(frozen=True)
+class LMConfig:
+    name: str
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_head: int
+    d_ff: int
+    vocab: int
+    rope_theta: float = 10_000.0
+    qkv_bias: bool = False
+    softcap: float = 0.0
+    window: Optional[int] = None             # sliding window for local layers
+    pattern: Tuple[str, ...] = ("global",)   # periodic, e.g. ("local",)*5+("global",)
+    attn: str = "gqa"                        # "gqa" | "mla"
+    mla: Optional[MLAParams] = None
+    moe_cfg: Optional[MoEParams] = None
+    embed_scale: bool = False                # gemma multiplies by sqrt(d)
+    tie_embeddings: bool = True
+    dtype: Any = jnp.bfloat16
+    remat: bool = True
+    loss_chunk: int = 2048
+    moe_path: str = "local"                  # "local" | "ep"
+    flash_block_q: int = 512
+    flash_block_k: int = 1024
+    flash_block_skip: bool = False           # §Perf: causal/window skipping
+    seq_shard: bool = False                  # §Perf: sequence-parallel resid
+
+    def layer_signature(self, i: int):
+        kind = self.pattern[i % len(self.pattern)]
+        is_moe = (self.moe_cfg is not None
+                  and i >= self.moe_cfg.first_k_dense)
+        return (kind, is_moe)
+
+    def runs(self) -> Sequence[Tuple[Tuple[str, bool], int]]:
+        """[(signature, n_layers_in_run), ...] in layer order."""
+        out = []
+        for i in range(self.n_layers):
+            sig = self.layer_signature(i)
+            if out and out[-1][0] == sig:
+                out[-1] = (sig, out[-1][1] + 1)
+            else:
+                out.append((sig, 1))
+        return out
+
+    def attn_config(self) -> L.AttnConfig:
+        return L.AttnConfig(
+            d_model=self.d_model, n_heads=self.n_heads,
+            n_kv_heads=self.n_kv_heads, d_head=self.d_head,
+            rope_theta=self.rope_theta, qkv_bias=self.qkv_bias,
+            softcap=self.softcap, flash_block_q=self.flash_block_q,
+            flash_block_k=self.flash_block_k,
+            flash_block_skip=self.flash_block_skip)
+
+    def mla_config(self) -> L.MLAConfig:
+        assert self.mla is not None
+        return L.MLAConfig(
+            d_model=self.d_model, n_heads=self.n_heads,
+            q_lora=self.mla.q_lora, kv_lora=self.mla.kv_lora,
+            qk_nope=self.mla.qk_nope, qk_rope=self.mla.qk_rope,
+            v_head=self.mla.v_head, rope_theta=self.rope_theta,
+            flash_block_q=self.flash_block_q,
+            flash_block_k=self.flash_block_k,
+            flash_block_skip=self.flash_block_skip)
+
+    def moe_config(self) -> MoEConfig:
+        assert self.moe_cfg is not None
+        return MoEConfig(
+            d_model=self.d_model, n_experts=self.moe_cfg.n_experts,
+            top_k=self.moe_cfg.top_k, d_ff_expert=self.moe_cfg.d_ff_expert,
+            n_shared=self.moe_cfg.n_shared, path=self.moe_path)
+
+
+# ------------------------------------------------------------------ params
+def _init_layer(key, cfg: LMConfig, is_moe: bool):
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    p = {"ln1": L.init_rmsnorm(cfg.d_model, cfg.dtype),
+         "ln2": L.init_rmsnorm(cfg.d_model, cfg.dtype)}
+    if cfg.attn == "mla":
+        p["attn"] = L.init_mla(k1, cfg.mla_config(), cfg.dtype)
+    else:
+        p["attn"] = L.init_attention(k1, cfg.attn_config(), cfg.dtype)
+    if is_moe:
+        p["moe"] = init_moe(k2, cfg.moe_config(), cfg.dtype)
+    else:
+        p["mlp"] = L.init_mlp(k3, cfg.d_model, cfg.d_ff, cfg.dtype)
+    return p
+
+
+def init(rng, cfg: LMConfig):
+    keys = jax.random.split(rng, cfg.n_layers + 2)
+    params = {"embed": L.trunc_normal(keys[0], (cfg.vocab, cfg.d_model),
+                                      1.0, cfg.dtype),
+              "final_ln": L.init_rmsnorm(cfg.d_model, cfg.dtype),
+              "runs": []}
+    if not cfg.tie_embeddings:
+        params["lm_head"] = L.init_dense(keys[1], cfg.d_model, cfg.vocab,
+                                         cfg.dtype)
+    li = 0
+    for sig, n in cfg.runs():
+        stacked = [_init_layer(keys[2 + li + j], cfg, sig[1])
+                   for j in range(n)]
+        params["runs"].append(
+            jax.tree.map(lambda *xs: jnp.stack(xs), *stacked))
+        li += n
+    return params
+
+
+def param_specs(cfg: LMConfig):
+    """Pytree of logical-axis tuples mirroring init()'s output."""
+    def layer_spec(is_moe):
+        s = {"ln1": L.rmsnorm_specs(), "ln2": L.rmsnorm_specs()}
+        if cfg.attn == "mla":
+            s["attn"] = L.mla_specs(cfg.mla_config())
+        else:
+            s["attn"] = L.attention_specs(cfg.attn_config())
+        if is_moe:
+            s["moe"] = moe_specs(cfg.moe_config())
+        else:
+            s["mlp"] = L.mlp_specs()
+        # prepend the stacked layer axis
+        return jax.tree.map(lambda axes: ("stack",) + tuple(axes), s,
+                            is_leaf=lambda x: isinstance(x, tuple))
+
+    specs = {"embed": ("vocab", "fsdp"),
+             "final_ln": L.rmsnorm_specs(),
+             "runs": [layer_spec(sig[1]) for sig, _ in cfg.runs()]}
+    if not cfg.tie_embeddings:
+        specs["lm_head"] = L.dense_specs("fsdp", "vocab")
+    return specs
+
+
+# ----------------------------------------------------------------- forward
+def _block(cfg: LMConfig, sig, layer_params, x, positions, mesh,
+           cache=None, cache_len=None):
+    kind, is_moe = sig
+    window = cfg.window if kind == "local" else None
+    if cfg.seq_shard and cache is None:
+        # sequence parallelism: the residual stream (and thus the scan
+        # carry saved for backward) is sharded over the model axis on the
+        # sequence dim; GSPMD gathers around attention as needed.
+        x = constrain(x, mesh, "batch", "seq_model", "embed")
+    h = L.rmsnorm(layer_params["ln1"], x)
+    if cfg.attn == "mla":
+        h, new_cache = L.mla_attention(
+            layer_params["attn"], cfg.mla_config(), h, positions, mesh=mesh,
+            latent_cache=cache, cache_len=cache_len)
+    else:
+        h, new_cache = L.attention(
+            layer_params["attn"], cfg.attn_config(), h, positions,
+            window=window, mesh=mesh, kv_cache=cache, cache_len=cache_len)
+    x = x + h
+    h = L.rmsnorm(layer_params["ln2"], x)
+    if is_moe:
+        h, aux = moe(layer_params["moe"], cfg.moe_config(), h, mesh=mesh)
+    else:
+        h, aux = L.mlp(layer_params["mlp"], h, mesh=mesh), 0.0
+    return x + h, aux, new_cache
+
+
+def forward(params, cfg: LMConfig, tokens, mesh=None):
+    """tokens [B, S] -> (hidden [B, S, d], aux_loss)."""
+    from repro.dist.collectives import sharded_embed_lookup
+
+    B, S = tokens.shape
+    x = sharded_embed_lookup(params["embed"], tokens, mesh).astype(cfg.dtype)
+    if cfg.embed_scale:
+        x = x * jnp.asarray(cfg.d_model ** 0.5, cfg.dtype)
+    x = constrain(x, mesh, "batch", None, "embed")
+    positions = jnp.arange(S)
+    aux_total = 0.0
+    for run_params, (sig, n) in zip(params["runs"], cfg.runs()):
+        def body(carry, lp, sig=sig):
+            x, aux = carry
+            x, a, _ = _block(cfg, sig, lp, x, positions, mesh)
+            return (x, aux + a), None
+        if cfg.remat:
+            body = jax.checkpoint(body)
+        (x, aux_total), _ = jax.lax.scan(body, (x, aux_total), run_params)
+    x = L.rmsnorm(params["final_ln"], x)
+    return x, aux_total
+
+
+def _output_weight(params, cfg: LMConfig):
+    if cfg.tie_embeddings:
+        return params["embed"].T                    # [d, V]
+    return params["lm_head"]["w"]
+
+
+def chunked_lm_loss(params, cfg: LMConfig, hidden, labels, mesh=None):
+    """CE over the vocab without materialising [T, V] logits: scan over
+    token chunks, rematerialising logits in the backward pass."""
+    B, S, d = hidden.shape
+    w = _output_weight(params, cfg)                 # [d, V]
+    T = B * S
+    chunk = min(cfg.loss_chunk, T)
+    while T % chunk != 0:
+        chunk -= 1
+    xf = hidden.reshape(T // chunk, chunk, d)
+    lf = labels.reshape(T // chunk, chunk)
+
+    def chunk_fn(carry, inp):
+        xc, lc = inp
+        logits = (xc @ w).astype(jnp.float32)
+        logits = constrain(logits, mesh, None, "vocab")
+        logz = jax.scipy.special.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(
+            logits, jnp.maximum(lc, 0)[:, None], axis=-1)[:, 0]
+        valid = lc >= 0
+        nll = jnp.where(valid, logz - gold, 0.0)
+        return (carry[0] + jnp.sum(nll),
+                carry[1] + jnp.sum(valid)), None
+
+    fn = jax.checkpoint(chunk_fn) if cfg.remat else chunk_fn
+    (total, count), _ = jax.lax.scan(fn, (jnp.float32(0), jnp.int32(0)),
+                                     (xf, lf))
+    return total / jnp.maximum(count, 1)
+
+
+def loss_fn(params, cfg: LMConfig, batch, mesh=None):
+    hidden, aux = forward(params, cfg, batch["tokens"], mesh)
+    loss = chunked_lm_loss(params, cfg, hidden, batch["labels"], mesh)
+    if cfg.moe_cfg is not None:
+        loss = loss + cfg.moe_cfg.aux_weight * aux
+    return loss
+
+
+def make_train_step(cfg: LMConfig, optimizer, mesh=None):
+    def train_step(params, opt_state, batch):
+        loss, grads = jax.value_and_grad(
+            lambda p: loss_fn(p, cfg, batch, mesh))(params)
+        params, opt_state = optimizer.update(grads, opt_state, params)
+        return params, opt_state, {"loss": loss}
+    return train_step
+
+
+def prefill_step(params, cfg: LMConfig, tokens, mesh=None):
+    """Prefill: run the full sequence, return last-position logits AND the
+    populated decode caches (ring-sliced for local sliding-window runs).
+
+    Requires S % window == 0 for local runs so the last-window slice aligns
+    with ring slots (true for all assigned shapes: 32768 % 1024 == 0).
+    """
+    from repro.dist.collectives import sharded_embed_lookup
+
+    B, S = tokens.shape
+    x = sharded_embed_lookup(params["embed"], tokens, mesh).astype(cfg.dtype)
+    if cfg.embed_scale:
+        x = x * jnp.asarray(cfg.d_model ** 0.5, cfg.dtype)
+    x = constrain(x, mesh, "batch", None, "embed")
+    positions = jnp.arange(S)
+    caches = []
+    for run_params, (sig, n) in zip(params["runs"], cfg.runs()):
+        def body(x, lp, sig=sig):
+            x, _, cache = _block(cfg, sig, lp, x, positions, mesh)
+            return x, cache
+        if cfg.remat:
+            body = jax.checkpoint(body)
+        x, run_cache = jax.lax.scan(body, x, run_params)
+        kind, _ = sig
+        if cfg.attn != "mla" and kind == "local" and cfg.window \
+                and cfg.window < S:
+            assert S % cfg.window == 0, (S, cfg.window)
+            run_cache = jax.tree.map(
+                lambda c: c[:, :, -cfg.window:], run_cache)
+        caches.append(run_cache)
+    x = L.rmsnorm(params["final_ln"], x)
+    logits = (x[:, -1, :] @ _output_weight(params, cfg)).astype(jnp.float32)
+    logits = constrain(logits, mesh, "batch", "vocab")
+    return logits, caches
+
+
+# ------------------------------------------------------------------- serve
+def init_cache(cfg: LMConfig, batch: int, max_seq: int):
+    """Decode cache pytree: one stacked entry per run.
+
+    GQA: (k, v) [n, B, W, KV, dh] with W = window for local runs.
+    MLA: (latent, rope) [n, B, S, kv_lora] / [n, B, S, qk_rope].
+    """
+    caches = []
+    for sig, n in cfg.runs():
+        kind, _ = sig
+        if cfg.attn == "mla":
+            m = cfg.mla
+            caches.append((
+                jnp.zeros((n, batch, max_seq, m.kv_lora), cfg.dtype),
+                jnp.zeros((n, batch, max_seq, m.qk_rope), cfg.dtype)))
+        else:
+            W = min(cfg.window, max_seq) if (kind == "local" and cfg.window) \
+                else max_seq
+            shape = (n, batch, W, cfg.n_kv_heads, cfg.d_head)
+            caches.append((jnp.zeros(shape, cfg.dtype),
+                           jnp.zeros(shape, cfg.dtype)))
+    return caches
+
+
+def cache_specs(cfg: LMConfig, shard_seq: bool = False,
+                model_shards: int = 1):
+    """Logical axes for the cache pytree.
+
+    Default: batch over (pod,data), KV heads over model.  When kv_heads
+    don't divide the model axis (phi4 kv=8, qwen kv=40 on a 16-wide axis)
+    the cache SEQUENCE dim is sharded over model instead — the
+    flash-decoding split-K layout (partial softmax + all-reduce).
+    ``shard_seq=True`` (batch too small to shard, long_500k B=1): the seq
+    dim additionally takes the (pod,data) axes.
+    """
+    b_ax = None if shard_seq else "batch"
+    kv_ok = cfg.n_kv_heads % max(model_shards, 1) == 0
+    kv_ax = "kv_heads" if kv_ok else None
+    s_ax = "longseq" if shard_seq else (None if kv_ok else "seq_model")
+    specs = []
+    for sig, _ in cfg.runs():
+        if cfg.attn == "mla":
+            specs.append(((None, b_ax, s_ax, None),
+                          (None, b_ax, s_ax, None)))
+        else:
+            specs.append(((None, b_ax, s_ax, kv_ax, None),) * 2)
+    return specs
+
+
+def serve_step(params, cfg: LMConfig, token, caches, cache_len, mesh=None):
+    """One decode step.  token [B, 1] -> (logits [B, V], new caches)."""
+    from repro.dist.collectives import sharded_embed_lookup
+
+    B = token.shape[0]
+    x = sharded_embed_lookup(params["embed"], token, mesh).astype(cfg.dtype)
+    if cfg.embed_scale:
+        x = x * jnp.asarray(cfg.d_model ** 0.5, cfg.dtype)
+    positions = jnp.full((1,), cache_len, jnp.int32)
+    new_caches = []
+    for run_params, run_cache, (sig, n) in zip(params["runs"], caches,
+                                               cfg.runs()):
+        def body(x, inp, sig=sig):
+            lp, cache = inp
+            x, _, new_cache = _block(cfg, sig, lp, x, positions, mesh,
+                                     cache=cache, cache_len=cache_len)
+            return x, new_cache
+        x, updated = jax.lax.scan(body, x, (run_params, run_cache))
+        new_caches.append(updated)
+    x = L.rmsnorm(params["final_ln"], x)
+    logits = (x[:, 0, :] @ _output_weight(params, cfg)).astype(jnp.float32)
+    logits = constrain(logits, mesh, "batch", "vocab")
+    return logits, new_caches

@@ -1,0 +1,124 @@
+"""Optimizer substrate (optax is unavailable offline): AdamW with decoupled
+weight decay, global-norm clipping, and warmup+cosine schedules.
+
+Functional, pytree-based, jit/pjit-transparent:
+
+    opt = adamw(lr=Schedule|float, b1=.9, b2=.95, eps=1e-8, wd=0.1, clip=1.0)
+    state = opt.init(params)
+    params, state = opt.update(grads, state, params)
+
+The optimizer state inherits the parameter sharding (moments are elementwise
+→ same NamedSharding as the parameter), which the checkpoint layer relies
+on for elastic resharding.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, NamedTuple, Optional, Union
+
+import jax
+import jax.numpy as jnp
+
+Schedule = Callable[[jnp.ndarray], jnp.ndarray]
+
+
+def warmup_cosine(peak_lr: float, warmup_steps: int, total_steps: int,
+                  final_frac: float = 0.1) -> Schedule:
+    def sched(step):
+        step = step.astype(jnp.float32)
+        warm = peak_lr * step / max(1, warmup_steps)
+        t = jnp.clip((step - warmup_steps) /
+                     max(1, total_steps - warmup_steps), 0.0, 1.0)
+        cos = peak_lr * (final_frac + (1 - final_frac)
+                         * 0.5 * (1 + jnp.cos(jnp.pi * t)))
+        return jnp.where(step < warmup_steps, warm, cos)
+    return sched
+
+
+def constant_lr(lr: float) -> Schedule:
+    return lambda step: jnp.full((), lr, jnp.float32)
+
+
+class AdamWState(NamedTuple):
+    step: jnp.ndarray
+    mu: dict
+    nu: dict
+
+
+@dataclasses.dataclass(frozen=True)
+class Optimizer:
+    init: Callable
+    update: Callable
+
+
+def global_norm(tree) -> jnp.ndarray:
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32)))
+                        for l in leaves))
+
+
+def adamw(lr: Union[float, Schedule], b1: float = 0.9, b2: float = 0.95,
+          eps: float = 1e-8, weight_decay: float = 0.1,
+          clip_norm: Optional[float] = 1.0) -> Optimizer:
+    sched: Schedule = lr if callable(lr) else constant_lr(lr)
+
+    def init(params):
+        zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+        return AdamWState(step=jnp.zeros((), jnp.int32),
+                          mu=jax.tree.map(zeros, params),
+                          nu=jax.tree.map(zeros, params))
+
+    def update(grads, state: AdamWState, params):
+        step = state.step + 1
+        if clip_norm is not None:
+            gnorm = global_norm(grads)
+            scale = jnp.minimum(1.0, clip_norm / jnp.maximum(gnorm, 1e-12))
+            grads = jax.tree.map(lambda g: g * scale, grads)
+        lr_t = sched(step)
+        bc1 = 1.0 - b1 ** step.astype(jnp.float32)
+        bc2 = 1.0 - b2 ** step.astype(jnp.float32)
+
+        def upd(g, m, v, p):
+            g = g.astype(jnp.float32)
+            m = b1 * m + (1 - b1) * g
+            v = b2 * v + (1 - b2) * g * g
+            mhat = m / bc1
+            vhat = v / bc2
+            delta = mhat / (jnp.sqrt(vhat) + eps)
+            # decoupled weight decay on matrices only (ndim >= 2)
+            if p.ndim >= 2 and weight_decay > 0:
+                delta = delta + weight_decay * p.astype(jnp.float32)
+            return (p.astype(jnp.float32) - lr_t * delta).astype(p.dtype), m, v
+
+        flat_p, treedef = jax.tree.flatten(params)
+        flat_g = treedef.flatten_up_to(grads)
+        flat_m = treedef.flatten_up_to(state.mu)
+        flat_v = treedef.flatten_up_to(state.nu)
+        out = [upd(g, m, v, p)
+               for g, m, v, p in zip(flat_g, flat_m, flat_v, flat_p)]
+        new_p = treedef.unflatten([o[0] for o in out])
+        new_m = treedef.unflatten([o[1] for o in out])
+        new_v = treedef.unflatten([o[2] for o in out])
+        return new_p, AdamWState(step=step, mu=new_m, nu=new_v)
+
+    return Optimizer(init=init, update=update)
+
+
+def sgd(lr: Union[float, Schedule]) -> Optimizer:
+    """Plain SGD (used by tests as a reference and for tiny examples)."""
+    sched: Schedule = lr if callable(lr) else constant_lr(lr)
+
+    def init(params):
+        return AdamWState(step=jnp.zeros((), jnp.int32), mu={}, nu={})
+
+    def update(grads, state, params):
+        step = state.step + 1
+        lr_t = sched(step)
+        new_p = jax.tree.map(
+            lambda p, g: (p.astype(jnp.float32)
+                          - lr_t * g.astype(jnp.float32)).astype(p.dtype),
+            params, grads)
+        return new_p, AdamWState(step=step, mu={}, nu={})
+
+    return Optimizer(init=init, update=update)

@@ -1,0 +1,33 @@
+# NOTE: no XLA_FLAGS here — tests and benches must see the 1 real device;
+# only launch/dryrun.py forces the 512-device host platform (and the
+# distributed tests spawn subprocesses that set their own flags).
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import numpy as np
+import pytest
+
+
+@pytest.fixture(scope="session")
+def small_dataset():
+    from repro.data import get_dataset
+    return get_dataset("blobs-euclidean-2000")
+
+
+@pytest.fixture(scope="session")
+def small_angular():
+    from repro.data import get_dataset
+    return get_dataset("blobs-angular-2000")
+
+
+@pytest.fixture(scope="session")
+def small_hamming():
+    from repro.data import get_dataset
+    return get_dataset("random-hamming-1500-b128")
+
+
+@pytest.fixture()
+def rng():
+    return np.random.default_rng(0)

@@ -1,0 +1,109 @@
+"""Per-algorithm behaviour: recall thresholds, exactness, consistency."""
+
+import numpy as np
+import pytest
+
+from repro.core.config import Definition
+from repro.core.experiment import ExperimentSettings, run_definition
+from repro.core.metrics import recall
+
+
+def run_algo(ds, constructor, args, qargs=(), count=10, batch=True):
+    d = Definition(algorithm=constructor, constructor=constructor,
+                   module=None, arguments=(ds.metric,) + tuple(args),
+                   query_argument_groups=(tuple(qargs),) if qargs else ((),))
+    return run_definition(d, ds, ExperimentSettings(count=count,
+                                                    batch_mode=batch))[0]
+
+
+def test_bruteforce_exact(small_dataset):
+    rec = run_algo(small_dataset, "BruteForce", ())
+    assert recall(rec) == pytest.approx(1.0)
+    # ids must match ground truth up to distance ties
+    gt = small_dataset.neighbors[:, :10]
+    agree = np.mean(np.sort(rec.neighbors) == np.sort(gt))
+    assert agree > 0.97
+
+
+def test_bruteforce_pallas_backend(small_dataset):
+    rec = run_algo(small_dataset, "BruteForce", ("pallas",))
+    assert recall(rec) == pytest.approx(1.0)
+
+
+def test_ivf_recall_increases_with_probes(small_dataset):
+    lo = run_algo(small_dataset, "IVF", (40,), qargs=(1,))
+    hi = run_algo(small_dataset, "IVF", (40,), qargs=(40,))
+    assert recall(hi) >= recall(lo)
+    assert recall(hi) > 0.95      # probing all lists == exact
+    assert lo.attrs["dist_comps"] < hi.attrs["dist_comps"]
+
+
+def test_rpforest(small_dataset):
+    rec = run_algo(small_dataset, "RPForest", (10, 64), qargs=(4,))
+    assert recall(rec) > 0.8
+
+
+def test_e2lsh_probe_monotone(small_dataset):
+    lo = run_algo(small_dataset, "E2LSH", (8, 6, 2.0, 256), qargs=(1,))
+    hi = run_algo(small_dataset, "E2LSH", (8, 6, 2.0, 256), qargs=(16,))
+    assert recall(hi) >= recall(lo)
+    assert recall(hi) > 0.3
+
+
+def test_graph_beam_search(small_dataset):
+    lo = run_algo(small_dataset, "KNNGraph", (16,), qargs=(10,))
+    hi = run_algo(small_dataset, "KNNGraph", (16,), qargs=(128,))
+    assert recall(hi) >= recall(lo)
+    assert recall(hi) > 0.9
+
+
+def test_hyperplane_lsh(small_angular):
+    rec = run_algo(small_angular, "HyperplaneLSH", (8, 10, 256), qargs=(8,))
+    assert recall(rec) > 0.5
+
+
+def test_angular_algos(small_angular):
+    assert recall(run_algo(small_angular, "BruteForce", ())) == \
+        pytest.approx(1.0)
+    assert recall(run_algo(small_angular, "IVF", (30,), qargs=(30,))) > 0.95
+
+
+def test_hamming_bruteforce_exact(small_hamming):
+    rec = run_algo(small_hamming, "BruteForceHamming", ())
+    assert recall(rec) == pytest.approx(1.0)
+
+
+def test_hamming_pallas_backend(small_hamming):
+    rec = run_algo(small_hamming, "BruteForceHamming", ("pallas",))
+    assert recall(rec) == pytest.approx(1.0)
+
+
+def test_bitsampling_annoy(small_hamming):
+    rec = run_algo(small_hamming, "BitsamplingAnnoy", (10, 64), qargs=(3,))
+    assert recall(rec) > 0.6
+
+
+def test_mih_radius_monotone(small_hamming):
+    r0 = run_algo(small_hamming, "MultiIndexHashing", (16, 256), qargs=(0,))
+    r1 = run_algo(small_hamming, "MultiIndexHashing", (16, 256), qargs=(1,))
+    assert recall(r1) >= recall(r0)
+    assert recall(r1) > 0.5
+
+
+def test_single_query_matches_batch(small_dataset):
+    from repro.ann.ivf import IVF
+    algo = IVF("euclidean", 30)
+    algo.fit(small_dataset.train)
+    algo.set_query_arguments(5)
+    algo.batch_query(small_dataset.test[:8], 10)
+    batch = algo.get_batch_results()
+    for i in range(8):
+        single = algo.query(small_dataset.test[i], 10)
+        np.testing.assert_array_equal(single, batch[i])
+
+
+def test_sharded_bruteforce_matches_local(small_dataset):
+    """On 1 device the sharded path must still be exact (multi-device
+    equality is covered by tests/test_dist.py in a subprocess)."""
+    rec = run_algo(small_dataset, "ShardedBruteForce", ())
+    assert recall(rec) == pytest.approx(1.0)

@@ -1,0 +1,99 @@
+"""Config expansion semantics (paper §3.3, Figure 1)."""
+
+import pytest
+
+from repro.core.config import Definition, expand_run_group, get_definitions
+
+MEGASRCH = """
+float:
+  euclidean:
+    megasrch:
+      docker-tag: ann-benchmarks-megasrch
+      constructor: MEGASRCH
+      base-args: ["@metric"]
+      run-groups:
+        shallow-point-lake:
+          args: [["lake", 100], 200]
+          query-args: [100, [100, 200, 400]]
+        deep-point-ocean:
+          args: ["sea", 1000]
+          query-args: [[1000, 2000], [1000, 2000, 4000]]
+"""
+
+
+def test_paper_figure1_expansion():
+    """Reproduce the paper's own worked example: the megasrch entry expands
+    into exactly three algorithm instances with the documented query
+    groups."""
+    defs = get_definitions(MEGASRCH, metric="euclidean", dimension=10)
+    assert len(defs) == 3
+    by_args = {d.arguments: d for d in defs}
+    assert ("euclidean", "lake", 200) in by_args
+    assert ("euclidean", 100, 200) in by_args
+    assert ("euclidean", "sea", 1000) in by_args
+    lake = by_args[("euclidean", "lake", 200)]
+    assert lake.query_argument_groups == (
+        (100, 100), (100, 200), (100, 400))
+    sea = by_args[("euclidean", "sea", 1000)]
+    assert len(sea.query_argument_groups) == 6
+    assert (2000, 4000) in sea.query_argument_groups
+
+
+def test_expand_run_group_scalar_and_list():
+    out = expand_run_group({"args": [[1, 2], "x"]})
+    assert [o["arguments"] for o in out] == [[1, "x"], [2, "x"]]
+    out = expand_run_group({})
+    assert out == [{"arguments": [], "query_argument_groups": [[]]}]
+
+
+def test_substitution_tokens():
+    cfg = """
+float:
+  angular:
+    a:
+      constructor: A
+      base-args: ["@metric", "@dimension"]
+      run-groups:
+        g:
+          args: [["@count"]]
+"""
+    defs = get_definitions(cfg, metric="angular", dimension=96, count=13)
+    assert defs[0].arguments == ("angular", 96, 13)
+
+
+def test_disabled_and_filtering():
+    cfg = """
+float:
+  euclidean:
+    enabled-alg: {constructor: A}
+    disabled-alg: {constructor: B, disabled: true}
+"""
+    defs = get_definitions(cfg, metric="euclidean")
+    assert [d.algorithm for d in defs] == ["enabled-alg"]
+    defs = get_definitions(cfg, metric="euclidean", include_disabled=True)
+    assert len(defs) == 2
+    defs = get_definitions(cfg, metric="euclidean",
+                           algorithms=["disabled-alg"],
+                           include_disabled=True)
+    assert [d.algorithm for d in defs] == ["disabled-alg"]
+
+
+def test_any_metric_section():
+    cfg = """
+float:
+  any:
+    bf: {constructor: A}
+  euclidean:
+    ivf: {constructor: B}
+"""
+    defs = get_definitions(cfg, metric="euclidean")
+    assert sorted(d.algorithm for d in defs) == ["bf", "ivf"]
+    defs = get_definitions(cfg, metric="angular")
+    assert [d.algorithm for d in defs] == ["bf"]
+
+
+def test_instance_name():
+    d = Definition(algorithm="x", constructor="X", module=None,
+                   arguments=("euclidean", 5),
+                   query_argument_groups=((),))
+    assert "x(" in d.instance_name and "5" in d.instance_name

@@ -1,0 +1,74 @@
+"""Experiment loop (paper §3.4): phases, batch mode, isolation, timeout."""
+
+import numpy as np
+import pytest
+
+from repro.core.config import Definition
+from repro.core.experiment import ExperimentSettings, run_definition
+from repro.core.metrics import recall
+
+
+def bf_definition(qgroups=((),)):
+    return Definition(algorithm="bruteforce", constructor="BruteForce",
+                      module=None, arguments=("euclidean",),
+                      query_argument_groups=qgroups)
+
+
+def test_single_vs_batch_equal_results(small_dataset):
+    d = bf_definition()
+    single = run_definition(d, small_dataset,
+                            ExperimentSettings(count=10))[0]
+    batch = run_definition(d, small_dataset,
+                           ExperimentSettings(count=10, batch_mode=True))[0]
+    assert recall(single) == pytest.approx(1.0)
+    np.testing.assert_array_equal(single.neighbors, batch.neighbors)
+    assert batch.batch_mode and not single.batch_mode
+    assert single.query_times.size == small_dataset.test.shape[0]
+    assert batch.query_times.size == 0          # batch mode: no per-query
+
+
+def test_query_args_reuse_one_build(small_dataset):
+    d = Definition(algorithm="ivf", constructor="IVF", module=None,
+                   arguments=("euclidean", 20),
+                   query_argument_groups=((1,), (5,), (20,)))
+    records = run_definition(d, small_dataset,
+                             ExperimentSettings(count=10, batch_mode=True))
+    assert len(records) == 3
+    # one preprocessing phase: identical build times across runs
+    assert len({r.build_time for r in records}) == 1
+    recalls = [recall(r) for r in records]
+    assert recalls == sorted(recalls)            # more probes -> >= recall
+
+
+def test_distances_recomputed_by_framework(small_dataset):
+    """The framework recomputes distances itself (§3.6)."""
+    rec = run_definition(bf_definition(), small_dataset,
+                         ExperimentSettings(count=5))[0]
+    # recomputed distance of the true NN must match ground truth
+    np.testing.assert_allclose(rec.distances[:, 0],
+                               small_dataset.distances[:, 0], rtol=1e-4)
+
+
+def test_isolated_mode(small_dataset):
+    rec = run_definition(
+        bf_definition(), small_dataset,
+        ExperimentSettings(count=5, isolated=True, timeout=300))[0]
+    assert recall(rec) == pytest.approx(1.0)
+    assert "rss_delta_kb" in rec.attrs
+
+
+def test_isolated_timeout(small_dataset):
+    with pytest.raises(TimeoutError):
+        run_definition(bf_definition(), small_dataset,
+                       ExperimentSettings(count=5, isolated=True,
+                                          timeout=1e-4))
+
+
+def test_isolated_crash_contained(small_dataset):
+    bad = Definition(algorithm="bad", constructor="DoesNotExist",
+                     module=None, arguments=("euclidean",),
+                     query_argument_groups=((),))
+    with pytest.raises(RuntimeError):
+        run_definition(bad, small_dataset,
+                       ExperimentSettings(count=5, isolated=True,
+                                          timeout=60))

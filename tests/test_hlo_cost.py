@@ -1,0 +1,113 @@
+"""Trip-count-aware HLO cost walker: validated against unrolled ground
+truth (this is the empirical proof that raw cost_analysis undercounts
+scans, and that the walker corrects it)."""
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.analysis.hlo_cost import analyze
+
+
+def _compile(fn, *args):
+    return jax.jit(fn).lower(*args).compile()
+
+
+def test_xla_cost_analysis_undercounts_scans():
+    """The motivating bug: XLA visits while bodies once."""
+    def body(c, w):
+        return c @ w, None
+
+    W = jnp.zeros((8, 64, 64))
+    x = jnp.ones((64, 64))
+    scan_cost = _compile(lambda x, W: jax.lax.scan(body, x, W)[0],
+                         x, W).cost_analysis()
+    scan_cost = scan_cost[0] if isinstance(scan_cost, list) else scan_cost
+    expected = 2 * 8 * 64 ** 3
+    assert scan_cost["flops"] < expected / 4     # grossly undercounted
+
+
+@pytest.mark.parametrize("trips", [2, 8, 17])
+def test_walker_counts_scan_flops_exactly(trips):
+    def body(c, w):
+        return c @ w, None
+
+    W = jnp.zeros((trips, 32, 32))
+    x = jnp.ones((32, 32))
+    c = analyze(_compile(lambda x, W: jax.lax.scan(body, x, W)[0],
+                         x, W).as_text())
+    assert c.flops == 2 * trips * 32 ** 3
+
+
+def test_walker_nested_scans():
+    def inner(c, w):
+        return c @ w, None
+
+    def outer(c, Ws):
+        c2, _ = jax.lax.scan(inner, c, Ws)
+        return c2, None
+
+    x = jnp.ones((16, 16))
+    W = jnp.zeros((4, 3, 16, 16))
+    c = analyze(_compile(lambda x, W: jax.lax.scan(outer, x, W)[0],
+                         x, W).as_text())
+    assert c.flops == 2 * 12 * 16 ** 3
+
+
+def test_walker_matches_unrolled():
+    def body(c, w):
+        return jnp.tanh(c @ w), None
+
+    W = jnp.zeros((6, 48, 48))
+    x = jnp.ones((48, 48))
+    c_scan = analyze(_compile(
+        lambda x, W: jax.lax.scan(body, x, W)[0], x, W).as_text())
+    c_unroll = analyze(_compile(
+        lambda x, W: jax.lax.scan(body, x, W, unroll=6)[0], x, W).as_text())
+    assert c_scan.flops == c_unroll.flops
+
+
+def test_walker_bytes_are_bounded():
+    """Fused-TPU traffic model: a matmul's bytes ~ operands + result; an
+    elementwise epilogue adds nothing (assumed fused)."""
+    a = jnp.ones((256, 256))
+    plain = analyze(_compile(lambda a: a @ a, a).as_text())
+    fused = analyze(_compile(lambda a: jnp.tanh(a @ a) * 2 + 1, a).as_text())
+    base = 3 * 256 * 256 * 4
+    assert plain.bytes <= base * 1.5
+    assert fused.bytes <= plain.bytes * 1.5      # epilogue ~free
+
+
+def test_walker_dynamic_slice_window_only():
+    """Scanned weight stacks must not charge the full stack per layer."""
+    def body(c, i):
+        w = jax.lax.dynamic_slice(WSTACK, (i, 0, 0), (1, 64, 64))[0]
+        return c @ w, None
+
+    global WSTACK
+    WSTACK = jnp.zeros((32, 64, 64))
+    x = jnp.ones((64, 64))
+    c = analyze(_compile(
+        lambda x: jax.lax.scan(body, x, jnp.arange(32))[0], x).as_text())
+    full_stack_per_iter = 32 * (32 * 64 * 64 * 4)
+    assert c.bytes < full_stack_per_iter        # ~1x stack total, not 32x
+
+
+def test_walker_counts_flops_of_real_model_reasonably():
+    from repro.models import transformer as T
+
+    cfg = T.LMConfig(name="t", n_layers=6, d_model=64, n_heads=4,
+                     n_kv_heads=4, d_head=16, d_ff=128, vocab=256,
+                     dtype=jnp.float32, loss_chunk=64, remat=False)
+    params = T.init(jax.random.PRNGKey(0), cfg)
+    toks = jnp.zeros((2, 64), jnp.int32)
+    c = analyze(_compile(
+        lambda p, t: T.loss_fn(p, cfg, {"tokens": t, "labels": t}),
+        params, toks).as_text())
+    d = 64
+    per_layer = 4 * d * (4 * 16) + 3 * d * 128
+    analytic_fwd = 2 * 128 * (6 * per_layer + d * 256)
+    # walker includes attention score matmuls the estimate skips: within 2x
+    assert analytic_fwd <= c.flops <= 2.5 * analytic_fwd

@@ -1,0 +1,57 @@
+"""HNSW (the paper's headline graph algorithm): recall, hierarchy, and the
+Q2 Rand-Euclidean comparison."""
+
+import numpy as np
+import pytest
+
+from repro.core.config import Definition
+from repro.core.experiment import ExperimentSettings, run_definition
+from repro.core.metrics import recall
+
+
+def run_hnsw(ds, args=(16, 80), qargs=(32,), count=10):
+    d = Definition(algorithm="hnsw", constructor="HNSW", module=None,
+                   arguments=(ds.metric,) + args,
+                   query_argument_groups=(qargs,))
+    return run_definition(d, ds, ExperimentSettings(count=count,
+                                                    batch_mode=True))[0]
+
+
+def test_hnsw_recall(small_dataset):
+    lo = run_hnsw(small_dataset, qargs=(8,))
+    hi = run_hnsw(small_dataset, qargs=(64,))
+    assert recall(hi) >= recall(lo)
+    assert recall(hi) > 0.9
+
+
+def test_hnsw_angular(small_angular):
+    rec = run_hnsw(small_angular, qargs=(48,))
+    assert recall(rec) > 0.85
+
+
+def test_hnsw_builds_hierarchy(small_dataset):
+    from repro.ann.hnsw import HNSW
+
+    a = HNSW("euclidean", 8, 40)
+    a.fit(small_dataset.train)
+    assert a._top >= 1                      # multi-layer for n=2000
+    assert a.get_additional()["top_level"] == a._top
+    # single query matches batch
+    single = a.query(small_dataset.test[0], 5)
+    a.batch_query(small_dataset.test[:4], 5)
+    batch = a.get_batch_results()
+    np.testing.assert_array_equal(single, batch[0])
+
+
+def test_hnsw_rand_euclidean_q2():
+    """Paper Q2: at 1M scale HNSW's small-world hierarchy fails on
+    Rand-Euclidean (recall capped at .86) while KGraph solves it.  At our
+    reduced scale both solve it — the failure is scale-dependent (the
+    top-layer entry region must be FAR from the planted neighbors to
+    mislead the descent), so this test pins the *measured* behaviour and
+    documents the divergence rather than asserting the paper's number."""
+    from repro.data import get_dataset
+
+    ds = get_dataset("random-euclidean-3000")
+    rec = run_hnsw(ds, qargs=(32,))
+    assert recall(rec) > 0.8               # small-scale: solvable

@@ -1,0 +1,73 @@
+"""Quality/performance measures (paper §2.1-2.2)."""
+
+import numpy as np
+import pytest
+
+from repro.core.metrics import (METRICS, RunRecord, compute_all, recall,
+                                set_recall)
+
+
+def make_run(neighbors, distances, gt_distances, k=2, **kw):
+    neighbors = np.asarray(neighbors)
+    nq = neighbors.shape[0]
+    defaults = dict(
+        algorithm="a", instance_name="a()", query_arguments=(),
+        dataset="d", count=k, batch_mode=False,
+        neighbors=np.asarray(neighbors),
+        distances=np.asarray(distances, np.float32),
+        gt_neighbors=np.zeros((nq, k), np.int64),
+        gt_distances=np.asarray(gt_distances, np.float32),
+        query_times=np.full(nq, 0.01),
+        total_time=nq * 0.01, build_time=1.0, index_size_kb=10.0)
+    defaults.update(kw)
+    return RunRecord(**defaults)
+
+
+def test_recall_distance_based_ties():
+    """Points at exactly the threshold distance count (tie robustness —
+    the reason the paper uses distance-based recall)."""
+    # gt kth distance = 1.0; returned: one at 0.5, one at exactly 1.0
+    run = make_run([[7, 9]], [[0.5, 1.0]], [[0.5, 1.0]])
+    assert recall(run) == 1.0
+
+
+def test_recall_counts_misses():
+    run = make_run([[7, 9]], [[0.5, 3.0]], [[0.5, 1.0]])
+    assert recall(run) == 0.5
+
+
+def test_eps_recall_monotone():
+    run = make_run([[7, 9]], [[0.5, 1.09]], [[0.5, 1.0]])
+    assert recall(run, 0.0) == 0.5
+    assert recall(run, 0.1) == 1.0
+
+
+def test_padding_ignored():
+    run = make_run([[7, -1]], [[0.5, np.inf]], [[0.5, 1.0]])
+    assert recall(run) == 0.5
+
+
+def test_set_recall_id_based():
+    run = make_run([[3, 4]], [[0.1, 0.2]], [[0.1, 0.2]],
+                   gt_neighbors=np.array([[4, 5]]))
+    assert set_recall(run) == 0.5
+
+
+def test_qps_and_registry():
+    run = make_run([[1, 2]], [[0.1, 0.2]], [[0.1, 0.2]])
+    assert run.qps == pytest.approx(100.0)
+    vals = compute_all(run)
+    for name in ("k-nn", "qps", "build", "indexsize", "queriessize",
+                 "epsilon-0.01", "epsilon-0.1", "p50", "p99"):
+        assert name in vals
+    assert vals["build"] == 1.0
+    assert vals["queriessize"] == pytest.approx(10.0 / 100.0)
+
+
+def test_new_metric_registration():
+    from repro.core.metrics import register_metric
+    name = "test-metric-xyz"
+    register_metric(name, "t", "higher", 0.0)(lambda r: 42.0)
+    run = make_run([[1, 2]], [[0.1, 0.2]], [[0.1, 0.2]])
+    assert compute_all(run)[name] == 42.0
+    del METRICS[name]

@@ -1,0 +1,33 @@
+import numpy as np
+
+from repro.core.pareto import frontier
+
+
+def brute_frontier(points, x_better="higher", y_better="higher"):
+    sx = 1 if x_better == "higher" else -1
+    sy = 1 if y_better == "higher" else -1
+    out = []
+    for p in points:
+        dominated = any(
+            (sx * q[0] >= sx * p[0] and sy * q[1] >= sy * p[1]
+             and (q[0] != p[0] or q[1] != p[1]))
+            for q in points)
+        if not dominated:
+            out.append(p)
+    return sorted(set(out))
+
+
+def test_frontier_matches_bruteforce():
+    rng = np.random.default_rng(3)
+    for _ in range(20):
+        pts = [tuple(map(float, p)) for p in rng.random((15, 2))]
+        for xb in ("higher", "lower"):
+            for yb in ("higher", "lower"):
+                got = sorted(set(frontier(pts, xb, yb)))
+                want = brute_frontier(pts, xb, yb)
+                assert got == want, (xb, yb)
+
+
+def test_frontier_empty_and_single():
+    assert frontier([]) == []
+    assert frontier([(1.0, 2.0)]) == [(1.0, 2.0)]

@@ -1,0 +1,132 @@
+"""Hypothesis property tests on system invariants."""
+
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+import jax.numpy as jnp
+
+from repro.ann.topk import merge_topk, np_topk, topk_unique, topk_with_ids
+from repro.core.config import expand_run_group
+from repro.core.pareto import frontier
+
+settings.register_profile("ci", max_examples=30, deadline=None)
+settings.load_profile("ci")
+
+floats = st.floats(min_value=-100, max_value=100, allow_nan=False,
+                   width=32)
+
+
+@given(st.lists(floats, min_size=1, max_size=40), st.integers(1, 10))
+def test_topk_smallest_matches_sort(values, k):
+    d = jnp.asarray(np.array(values, np.float32))[None, :]
+    ids = jnp.arange(d.shape[1], dtype=jnp.int32)[None, :]
+    k = min(k, d.shape[1])
+    vals, _ = topk_with_ids(d, ids, k)
+    np.testing.assert_allclose(np.asarray(vals)[0],
+                               np.sort(np.array(values))[:k], rtol=1e-6)
+
+
+@given(st.lists(floats, min_size=2, max_size=30),
+       st.lists(floats, min_size=2, max_size=30), st.integers(1, 8))
+def test_merge_topk_equals_global_topk(a, b, k):
+    """The distributed-merge invariant: topk(merge(topk(A), topk(B))) ==
+    topk(A ++ B)."""
+    k = min(k, len(a), len(b))
+    da = jnp.asarray(np.array(a, np.float32))[None, :]
+    db = jnp.asarray(np.array(b, np.float32))[None, :]
+    ia = jnp.arange(len(a), dtype=jnp.int32)[None, :]
+    ib = (jnp.arange(len(b), dtype=jnp.int32) + len(a))[None, :]
+    va, xa = topk_with_ids(da, ia, k)
+    vb, xb = topk_with_ids(db, ib, k)
+    mv, _ = merge_topk(va, xa, vb, xb, k)
+    want, _ = np_topk(np.concatenate([a, b]).astype(np.float32)[None, :], k)
+    np.testing.assert_allclose(np.asarray(mv), want, rtol=1e-6)
+
+
+@given(st.lists(st.integers(0, 5), min_size=1, max_size=30))
+def test_topk_unique_no_duplicates(ids):
+    n = len(ids)
+    d = jnp.asarray(np.linspace(0, 1, n, dtype=np.float32))[None, :]
+    idj = jnp.asarray(np.array(ids, np.int32))[None, :]
+    k = min(4, n)
+    _, out = topk_unique(d, idj, k)
+    out = np.asarray(out)[0]
+    real = out[out >= 0]
+    assert len(np.unique(real)) == len(real)
+    # every distinct requested id that exists is recoverable when k is big
+    _, out_full = topk_unique(d, idj, min(n, 6))
+    got = set(np.asarray(out_full)[0])
+    assert set(ids[:1]).issubset(got | {-1}) or ids[0] in got
+
+
+@given(st.lists(st.lists(st.integers(0, 3), min_size=1, max_size=3),
+                min_size=1, max_size=4))
+def test_config_expansion_count(axes):
+    group = {"args": [list(dict.fromkeys(a)) for a in axes]}
+    out = expand_run_group(group)
+    want = 1
+    for a in group["args"]:
+        want *= len(a)
+    assert len(out) == want
+
+
+@given(st.lists(st.tuples(floats, floats), min_size=1, max_size=25))
+def test_frontier_is_subset_and_nondominated(pts):
+    front = frontier(pts, "higher", "higher")
+    assert set(front).issubset(set(pts))
+    for p in front:
+        for q in pts:
+            assert not (q[0] >= p[0] and q[1] >= p[1]
+                        and (q[0] > p[0] or q[1] > p[1]))
+
+
+@given(st.integers(1, 50), st.integers(1, 10), st.integers(2, 20))
+def test_embedding_bag_matches_loop(n_lookups, n_bags, vocab):
+    from repro.kernels.embedbag import embedding_bag
+
+    rng = np.random.default_rng(n_lookups * n_bags)
+    table = rng.standard_normal((vocab, 4)).astype(np.float32)
+    idx = rng.integers(0, vocab, n_lookups).astype(np.int32)
+    bags = rng.integers(0, n_bags, n_lookups).astype(np.int32)
+    out = np.asarray(embedding_bag(jnp.asarray(table), idx, bags,
+                                   n_bags=n_bags))
+    want = np.zeros((n_bags, 4), np.float32)
+    for i, b in zip(idx, bags):
+        want[b] += table[i]
+    np.testing.assert_allclose(out, want, rtol=1e-5, atol=1e-5)
+
+
+@given(st.lists(floats, min_size=1, max_size=64))
+def test_grad_compression_error_feedback(values):
+    """Error feedback invariant: after two steps with the same gradient g,
+    sum of dequantised outputs + residual == 2g (no signal lost)."""
+    from repro.dist.compression import compress_gradients
+
+    g = {"w": jnp.asarray(np.array(values, np.float32))}
+    e0 = {"w": jnp.zeros(len(values), jnp.float32)}
+    out1, e1 = compress_gradients(g, e0)
+    out2, e2 = compress_gradients(g, e1)
+    total = np.asarray(out1["w"]) + np.asarray(out2["w"]) \
+        + np.asarray(e2["w"])
+    np.testing.assert_allclose(total, 2 * np.array(values, np.float32),
+                               rtol=1e-3, atol=1e-2)
+
+
+@given(st.integers(2, 64), st.integers(1, 8))
+def test_recall_bounds(nq, k):
+    from repro.core.metrics import RunRecord, recall
+
+    rng = np.random.default_rng(nq * k)
+    gt_d = np.sort(rng.random((nq, k)).astype(np.float32), axis=1)
+    d = rng.random((nq, k)).astype(np.float32)
+    run = RunRecord(
+        algorithm="a", instance_name="a", query_arguments=(), dataset="d",
+        count=k, batch_mode=False,
+        neighbors=rng.integers(0, 100, (nq, k)),
+        distances=d, gt_neighbors=np.zeros((nq, k), np.int64),
+        gt_distances=gt_d, query_times=np.ones(nq), total_time=1.0,
+        build_time=0.0, index_size_kb=0.0)
+    r0 = recall(run, 0.0)
+    r1 = recall(run, 0.5)
+    assert 0.0 <= r0 <= 1.0
+    assert r1 >= r0                      # eps-recall is monotone in eps

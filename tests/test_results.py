@@ -1,0 +1,48 @@
+import numpy as np
+
+from repro.core import results
+from repro.core.metrics import RunRecord
+
+
+def make_record(dataset="ds", algo="a", qargs=(3,), batch=False):
+    return RunRecord(
+        algorithm=algo, instance_name=f"{algo}(x)", query_arguments=qargs,
+        dataset=dataset, count=5, batch_mode=batch,
+        neighbors=np.arange(10, dtype=np.int64).reshape(2, 5),
+        distances=np.linspace(0, 1, 10, dtype=np.float32).reshape(2, 5),
+        gt_neighbors=np.arange(10, dtype=np.int64).reshape(2, 5),
+        gt_distances=np.linspace(0, 1, 10, dtype=np.float32).reshape(2, 5),
+        query_times=np.array([0.1, 0.2]),
+        total_time=0.3, build_time=2.5, index_size_kb=123.0,
+        attrs={"dist_comps": 42})
+
+
+def test_roundtrip(tmp_path):
+    rec = make_record()
+    path = results.store(tmp_path, rec)
+    assert path.exists()
+    back = results.load(path)
+    assert back.algorithm == rec.algorithm
+    assert back.query_arguments == rec.query_arguments
+    assert back.attrs["dist_comps"] == 42
+    np.testing.assert_array_equal(back.neighbors, rec.neighbors)
+    np.testing.assert_allclose(back.distances, rec.distances)
+    assert back.total_time == rec.total_time
+
+
+def test_enumerate_filters(tmp_path):
+    results.store(tmp_path, make_record("d1", "a"))
+    results.store(tmp_path, make_record("d1", "b"))
+    results.store(tmp_path, make_record("d2", "a", batch=True))
+    assert len(list(results.enumerate_runs(tmp_path))) == 3
+    assert len(list(results.enumerate_runs(tmp_path, dataset="d1"))) == 2
+    assert len(list(results.enumerate_runs(tmp_path, algorithm="a"))) == 2
+    assert len(list(results.enumerate_runs(tmp_path, batch_mode=True))) == 1
+
+
+def test_rerun_overwrites(tmp_path):
+    rec = make_record()
+    p1 = results.store(tmp_path, rec)
+    p2 = results.store(tmp_path, rec)
+    assert p1 == p2
+    assert len(list(results.enumerate_runs(tmp_path))) == 1
