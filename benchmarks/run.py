@@ -31,6 +31,7 @@ MODULES = [
     ("fig10", "benchmarks.bench_build_time"),
     ("fig11", "benchmarks.bench_batch_mode"),
     ("kernels", "benchmarks.bench_kernels"),
+    ("stream", "benchmarks.bench_distance_topk"),
 ]
 
 

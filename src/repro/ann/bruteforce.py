@@ -3,9 +3,13 @@ reference implementation for correctness tests.
 
 Two device paths:
   * ``jnp``    : blocked distance-matrix + lax.top_k (default).
-  * ``pallas`` : the fused distance+top-k scan kernel (kernels/topk_scan) —
-                 never materialises the [nq, n] matrix in HBM.  This is the
-                 TPU analogue of FAISS's fused GPU k-selection (paper §4.4).
+  * ``pallas`` : the fused distance+top-k kernel — never materialises the
+                 [nq, n] matrix in HBM.  This is the TPU analogue of
+                 FAISS's fused GPU k-selection (paper §4.4).  With
+                 ``streaming=True`` it uses the streaming kernel
+                 (kernels/distance_topk): per-query-tile VMEM top-k
+                 accumulators plus query-block streaming, so both n and nq
+                 scale beyond what a [nq, n] buffer would allow.
 """
 
 from __future__ import annotations
@@ -26,13 +30,21 @@ class BruteForce(BaseANN):
     supported_metrics = ("euclidean", "angular", "hamming")
 
     def __init__(self, metric: str, backend: str = "jnp",
-                 corpus_block: int = 65536):
+                 corpus_block: int = 65536, streaming: bool = False,
+                 query_block: int = 4096):
         super().__init__(metric)
         if backend not in ("jnp", "pallas"):
             raise ValueError(f"unknown backend {backend!r}")
+        if streaming and (backend != "pallas" or metric == "hamming"):
+            raise ValueError(
+                "streaming requires backend='pallas' and a float metric "
+                "(use BruteForceHamming(streaming=True) for hamming)")
         self.backend = backend
         self.corpus_block = int(corpus_block)
-        self.name = f"BruteForce(backend={backend})"
+        self.streaming = bool(streaming)
+        self.query_block = int(query_block)
+        suffix = ",streaming" if streaming else ""
+        self.name = f"BruteForce(backend={backend}{suffix})"
         self._dist_comps = 0
 
     def fit(self, X: np.ndarray) -> None:
@@ -66,11 +78,21 @@ class BruteForce(BaseANN):
     def batch_query(self, Q: np.ndarray, k: int) -> None:
         k = min(k, self._n)
         if self.backend == "pallas" and self.metric != "hamming":
-            from repro.kernels.topk_scan import ops as topk_ops
+            if self.streaming:
+                from repro.kernels.distance_topk import stream_topk_batched
 
-            _, idx = topk_ops.distance_topk(
-                jnp.asarray(Q), self._X, k=k, metric=self.metric)
-            self._batch_results = jax.block_until_ready(idx)
+                # device arrays: the host transfer happens off the clock in
+                # get_batch_results(), matching the other device paths
+                _, idx = stream_topk_batched(
+                    Q, self._X, k=k, metric=self.metric,
+                    query_block=self.query_block, materialize=False)
+                self._batch_results = jax.block_until_ready(idx)
+            else:
+                from repro.kernels.topk_scan import ops as topk_ops
+
+                _, idx = topk_ops.distance_topk(
+                    jnp.asarray(Q), self._X, k=k, metric=self.metric)
+                self._batch_results = jax.block_until_ready(idx)
         else:
             outs = []
             Qj = jnp.asarray(Q)

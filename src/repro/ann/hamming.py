@@ -31,7 +31,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.ann.lsh import _SortedBuckets
-from repro.ann.topk import topk_unique
+from repro.ann.topk import chunked_topk, topk_unique
 from repro.core.interface import BaseANN
 from repro.core.registry import register
 
@@ -42,14 +42,36 @@ def _popcount_matrix(Q, X):
     return jnp.sum(jax.lax.population_count(x), axis=-1).astype(jnp.int32)
 
 
+def _rerank_chunked(Xj, Q, cand, k: int, block: int):
+    """Streaming popcount rerank of a [b, C] candidate-id window: chunked
+    scan with dedupe at every fold (``chunked_topk(unique=True)``), so the
+    result is identical to the one-shot ``topk_unique`` while peak memory
+    drops from O(b * C * w) to O(b * block * w)."""
+    def chunk(s, size):
+        c = cand[:, s:s + size]
+        x = Xj[jnp.maximum(c, 0)]                          # [b, size, w]
+        xor = jax.lax.bitwise_xor(x, Q[:, None, :].astype(jnp.uint32))
+        d = jnp.sum(jax.lax.population_count(xor),
+                    axis=-1).astype(jnp.float32)
+        return jnp.where(c >= 0, d, jnp.inf), c
+
+    return chunked_topk(cand.shape[1], k, block, chunk, unique=True)
+
+
 @register("BruteForceHamming")
 class BruteForceHamming(BaseANN):
     supported_metrics = ("hamming",)
 
-    def __init__(self, metric: str, backend: str = "jnp"):
+    def __init__(self, metric: str, backend: str = "jnp",
+                 streaming: bool = False, corpus_block: int = 65536,
+                 query_block: int = 4096):
         super().__init__(metric)
         self.backend = backend
-        self.name = f"BruteForceHamming(backend={backend})"
+        self.streaming = bool(streaming)
+        self.corpus_block = int(corpus_block)
+        self.query_block = int(query_block)
+        suffix = ",streaming" if streaming else ""
+        self.name = f"BruteForceHamming(backend={backend}{suffix})"
         self._dist_comps = 0
 
     def fit(self, X: np.ndarray) -> None:
@@ -78,10 +100,43 @@ class BruteForceHamming(BaseANN):
         self._dist_comps += self._n
         return np.asarray(idx[0])
 
+    def _batch_streaming(self, Qj, k):
+        """Query-blocked corpus scan: per query block, stream corpus chunks
+        through the fused Hamming top-k kernel and merge into a running
+        (dist, id) accumulator — O(qblock * k) state, corpus never gathered
+        whole."""
+        if self.backend == "pallas":
+            from repro.kernels.hamming import ops as hops
+
+            def corpus_chunk(Qb):
+                def chunk(s, size):
+                    v, i = hops.hamming_topk(Qb, self._X[s:s + size],
+                                             k=min(k, size))
+                    return v.astype(jnp.float32), i + s
+                return chunk
+        else:
+            def corpus_chunk(Qb):
+                def chunk(s, size):
+                    d = _popcount_matrix(Qb, self._X[s:s + size])
+                    ids = s + jnp.arange(size, dtype=jnp.int32)[None, :]
+                    return (d.astype(jnp.float32),
+                            jnp.broadcast_to(ids, d.shape))
+                return chunk
+        outs = []
+        for qs in range(0, Qj.shape[0], self.query_block):
+            Qb = Qj[qs:qs + self.query_block]
+            _, ids = chunked_topk(self._n, k, self.corpus_block,
+                                  corpus_chunk(Qb))
+            outs.append(ids)
+        return jnp.concatenate(outs, axis=0)
+
     def batch_query(self, Q, k):
         k = min(k, self._n)
         Qj = jnp.asarray(np.asarray(Q, np.uint32))
-        if self.backend == "pallas":
+        if self.streaming:
+            self._batch_results = jax.block_until_ready(
+                self._batch_streaming(Qj, k))
+        elif self.backend == "pallas":
             from repro.kernels.hamming import ops as hops
             _, idx = hops.hamming_topk(Qj, self._X, k=k)
             self._batch_results = jax.block_until_ready(idx)
@@ -105,11 +160,14 @@ class BitsamplingAnnoy(BaseANN):
     supported_metrics = ("hamming",)
 
     def __init__(self, metric: str, n_trees: int = 10, leaf_size: int = 32,
-                 seed: int = 0):
+                 seed: int = 0, streaming: bool = False,
+                 rerank_block: int = 4096):
         super().__init__(metric)
         self.n_trees = int(n_trees)
         self.leaf_size = int(leaf_size)
         self.seed = int(seed)
+        self.streaming = bool(streaming)
+        self.rerank_block = int(rerank_block)
         self.probe = 1
         self.name = f"BitsamplingAnnoy(T={n_trees},leaf={leaf_size})"
         self._dist_comps = 0
@@ -220,6 +278,9 @@ class BitsamplingAnnoy(BaseANN):
             pts = jnp.where((lf < 0)[..., None], pts, -1)
             cands.append(pts.reshape(bq, -1))
         cand = jnp.concatenate(cands, axis=1)
+        if self.streaming and cand.shape[1] > self.rerank_block:
+            return _rerank_chunked(self._Xj, Q, cand, min(k, cand.shape[1]),
+                                   self.rerank_block)
         safe = jnp.maximum(cand, 0)
         x = self._Xj[safe]                                     # [bq, C, w]
         xor = jax.lax.bitwise_xor(x, Q[:, None, :].astype(jnp.uint32))
@@ -251,10 +312,13 @@ class MultiIndexHashing(BaseANN):
     supported_metrics = ("hamming",)
 
     def __init__(self, metric: str, n_chunks: int = 16, cap: int = 128,
-                 seed: int = 0):
+                 seed: int = 0, streaming: bool = False,
+                 rerank_block: int = 4096):
         super().__init__(metric)
         self.n_chunks = int(n_chunks)
         self.cap = int(cap)
+        self.streaming = bool(streaming)
+        self.rerank_block = int(rerank_block)
         self.radius = 0
         self.name = f"MIH(m={n_chunks},cap={cap})"
         self._dist_comps = 0
@@ -320,6 +384,9 @@ class MultiIndexHashing(BaseANN):
             probe_keys.append(base + delta)
         qkeys = jnp.stack(probe_keys, axis=-1)             # [b, m, P]
         cand = self._buckets.lookup(qkeys, self.cap)
+        if self.streaming and cand.shape[1] > self.rerank_block:
+            return _rerank_chunked(self._Xj, Q, cand, min(k, cand.shape[1]),
+                                   self.rerank_block)
         safe = jnp.maximum(cand, 0)
         x = self._Xj[safe]
         xor = jax.lax.bitwise_xor(x, Q[:, None, :].astype(jnp.uint32))

@@ -8,6 +8,13 @@ the CPU's pointer-chasing list scan into dense gathers + masked top-k that
 lower cleanly onto TPU.
 
 Parameters:  n_clusters (build), n_probes (query).
+
+Streaming rerank (``streaming=True``): the probed candidate window is
+scanned in fixed ``rerank_block`` chunks folded into a running (dist, id)
+top-k accumulator (the same memory model as the streaming fused kernel) —
+peak rerank memory drops from O(b * n_probes * max_list * d) to
+O(b * rerank_block * d), which is what lets high-probe configurations run
+on large corpora at all.
 """
 
 from __future__ import annotations
@@ -19,7 +26,7 @@ import jax.numpy as jnp
 
 from repro.ann import distances as D
 from repro.ann.kmeans import kmeans
-from repro.ann.topk import topk_with_ids
+from repro.ann.topk import chunked_topk, topk_with_ids
 from repro.core.interface import BaseANN
 from repro.core.registry import register
 
@@ -29,13 +36,17 @@ class IVF(BaseANN):
     supported_metrics = ("euclidean", "angular")
 
     def __init__(self, metric: str, n_clusters: int = 100, n_iters: int = 10,
-                 seed: int = 0):
+                 seed: int = 0, streaming: bool = False,
+                 rerank_block: int = 4096):
         super().__init__(metric)
         self.n_clusters = int(n_clusters)
         self.n_iters = int(n_iters)
         self.seed = int(seed)
+        self.streaming = bool(streaming)
+        self.rerank_block = int(rerank_block)
         self.n_probes = 1
-        self.name = f"IVF(C={n_clusters})"
+        suffix = ",streaming" if streaming else ""
+        self.name = f"IVF(C={n_clusters}{suffix})"
         self._dist_comps = 0
 
     # ------------------------------------------------------------------ fit
@@ -87,7 +98,20 @@ class IVF(BaseANN):
         cand = jnp.minimum(cand, self._n - 1).reshape(Q.shape[0], -1)
         valid = valid.reshape(Q.shape[0], -1)            # [b, P*M]
         # 3. exact distances on the candidate set
-        x = self._X[cand]                                # [b, P*M, d]
+        n_cand = cand.shape[1]
+        if self.streaming and n_cand > self.rerank_block:
+            def chunk(s, size):
+                return self._rerank_chunk(Q, cand[:, s:s + size],
+                                          valid[:, s:s + size])
+            return chunked_topk(n_cand, min(k, n_cand),
+                                self.rerank_block, chunk)
+        d, ids = self._rerank_chunk(Q, cand, valid)
+        vals, out_ids = topk_with_ids(d, ids, min(k, d.shape[1]))
+        return vals, out_ids
+
+    def _rerank_chunk(self, Q, cand, valid):
+        """Exact (dist, id) for one chunk of the candidate window."""
+        x = self._X[cand]                                # [b, c, d]
         if self.metric == "euclidean":
             qsq = jnp.sum(Q * Q, axis=1, keepdims=True)
             cross = jnp.einsum("bnd,bd->bn", x, Q)
@@ -96,8 +120,7 @@ class IVF(BaseANN):
             d = 1.0 - jnp.einsum("bnd,bd->bn", x, Q)
         d = jnp.where(valid, d, jnp.inf)
         ids = jnp.where(valid, self._ids[cand], -1)
-        vals, out_ids = topk_with_ids(d, ids, min(k, d.shape[1]))
-        return vals, out_ids
+        return d, ids
 
     def query(self, q: np.ndarray, k: int) -> np.ndarray:
         nprobe = min(self.n_probes, self.n_clusters)

@@ -33,38 +33,79 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 from jax.experimental.shard_map import shard_map
 
 from repro.ann import distances as D
-from repro.ann.topk import topk_smallest, topk_with_ids
+from repro.ann.topk import merge_topk, topk_smallest, topk_with_ids
 from repro.core.interface import BaseANN
 from repro.core.registry import register
 
 
-def local_topk_kernel(q, x, ids, xsq, k: int, metric: str):
-    """Per-shard exact top-k: q [b,d], x [ns,d] -> ([b,k] d, [b,k] ids)."""
+def _tile_dist(q, x, xsq, metric: str):
+    """[b, ns] distances of replicated queries against one corpus tile."""
     if metric == "euclidean":
         qn = jnp.sum(q * q, axis=1, keepdims=True)
-        d = qn - 2.0 * (q @ x.T) + xsq[None, :]
-    elif metric == "angular":
-        d = 1.0 - q @ x.T
-    else:
-        xor = jax.lax.bitwise_xor(q[:, None, :].astype(jnp.uint32),
-                                  x[None, :, :].astype(jnp.uint32))
-        d = jnp.sum(jax.lax.population_count(xor), axis=-1).astype(jnp.float32)
+        return qn - 2.0 * (q @ x.T) + xsq[None, :]
+    if metric == "angular":
+        return 1.0 - q @ x.T
+    xor = jax.lax.bitwise_xor(q[:, None, :].astype(jnp.uint32),
+                              x[None, :, :].astype(jnp.uint32))
+    return jnp.sum(jax.lax.population_count(xor), axis=-1).astype(jnp.float32)
+
+
+def local_topk_kernel(q, x, ids, xsq, k: int, metric: str):
+    """Per-shard exact top-k: q [b,d], x [ns,d] -> ([b,k] d, [b,k] ids)."""
+    d = _tile_dist(q, x, xsq, metric)
     vals, pos = topk_smallest(d, min(k, x.shape[0]))
     return vals, ids[pos]
 
 
+def local_topk_streaming(q, x, ids, xsq, k: int, metric: str, block: int):
+    """Per-shard *streaming* top-k: scan the local corpus in ``block``-row
+    tiles, folding each tile into a running (dist, id) accumulator via
+    ``merge_topk`` — the shard never holds more than one [b, block]
+    distance tile (same memory model as the fused Pallas kernel, but in
+    plain lax so it lowers anywhere, including inside shard_map)."""
+    ns = x.shape[0]
+    k = min(k, ns)
+    block = min(block, ns)
+    pad = (-ns) % block
+    xp = jnp.pad(x, ((0, pad),) + ((0, 0),) * (x.ndim - 1))
+    idsp = jnp.pad(ids, (0, pad), constant_values=-1)
+    xsqp = jnp.pad(xsq, (0, pad), constant_values=jnp.inf)
+    n_steps = (ns + pad) // block
+
+    def body(j, state):
+        vals, out_ids = state
+        xt = jax.lax.dynamic_slice_in_dim(xp, j * block, block)
+        it = jax.lax.dynamic_slice_in_dim(idsp, j * block, block)
+        st = jax.lax.dynamic_slice_in_dim(xsqp, j * block, block)
+        d = _tile_dist(q, xt, st, metric)
+        d = jnp.where(it[None, :] >= 0, d, jnp.inf)
+        tile_ids = jnp.broadcast_to(it[None, :], d.shape)
+        return merge_topk(vals, out_ids, d, tile_ids, k)
+
+    vals0 = jnp.full((q.shape[0], k), jnp.inf, jnp.float32)
+    ids0 = jnp.full((q.shape[0], k), -1, jnp.int32)
+    return jax.lax.fori_loop(0, n_steps, body, (vals0, ids0))
+
+
 def make_sharded_topk(mesh: Mesh, shard_axes: Sequence[str], k: int,
-                      metric: str):
+                      metric: str, corpus_block: Optional[int] = None):
     """Build the jitted sharded query function for a given mesh.
 
     Corpus rows are sharded over ``shard_axes`` (e.g. ("pod","data","model")
     flattened); queries are replicated; the output is the exact global
-    top-k, replicated.
+    top-k, replicated.  With ``corpus_block`` each shard streams its local
+    rows through the running-top-k scan instead of materialising the full
+    local distance matrix; the per-shard results feed the same hierarchical
+    merge tree either way.
     """
     axes = tuple(shard_axes)
 
     def fn(q, x, ids, xsq):
-        vals, out_ids = local_topk_kernel(q, x, ids, xsq, k, metric)
+        if corpus_block:
+            vals, out_ids = local_topk_streaming(q, x, ids, xsq, k, metric,
+                                                 corpus_block)
+        else:
+            vals, out_ids = local_topk_kernel(q, x, ids, xsq, k, metric)
         # hierarchical merge: innermost axis first (cheapest links last hop
         # is the pod axis: only 2k * pods entries cross the DCI)
         for ax in reversed(axes):
@@ -94,14 +135,18 @@ class ShardedBruteForce(BaseANN):
     supported_metrics = ("euclidean", "angular", "hamming")
 
     def __init__(self, metric: str, mesh: Optional[Mesh] = None,
-                 shard_axes: Optional[Sequence[str]] = None):
+                 shard_axes: Optional[Sequence[str]] = None,
+                 corpus_block: Optional[int] = None):
         super().__init__(metric)
         if mesh is None:
             mesh = jax.make_mesh((jax.device_count(),), ("data",))
             shard_axes = ("data",)
         self.mesh = mesh
         self.shard_axes = tuple(shard_axes or mesh.axis_names)
-        self.name = f"ShardedBruteForce(axes={','.join(self.shard_axes)})"
+        self.corpus_block = corpus_block
+        suffix = ",streaming" if corpus_block else ""
+        self.name = (f"ShardedBruteForce(axes={','.join(self.shard_axes)}"
+                     f"{suffix})")
         self._dist_comps = 0
 
     def _n_shards(self) -> int:
@@ -142,7 +187,8 @@ class ShardedBruteForce(BaseANN):
     def _fn(self, k):
         if k not in self._fns:
             self._fns[k] = make_sharded_topk(self.mesh, self.shard_axes, k,
-                                             self.metric)
+                                             self.metric,
+                                             corpus_block=self.corpus_block)
         return self._fns[k]
 
     def _mask_pad(self, vals, ids):

@@ -57,6 +57,39 @@ def topk_unique(d: jnp.ndarray, ids: jnp.ndarray, k: int):
     return topk_with_ids(ds, is_, k)
 
 
+def chunked_topk(n_items: int, k: int, block: int, chunk_fn,
+                 unique: bool = False):
+    """Streaming top-k over a candidate axis of static length ``n_items``.
+
+    ``chunk_fn(start, size) -> (dists [b, size], ids [b, size])`` produces
+    one chunk of candidates; chunks are folded into a running (dist, id)
+    accumulator, so peak memory is O(b * (block + k)) instead of
+    O(b * n_items).  The loop is a Python ``for`` over static offsets —
+    fully jittable (the trace unrolls ceil(n_items/block) merge steps).
+
+    With ``unique=True`` every fold dedupes ids (``topk_unique``): the
+    accumulator then always holds the k best *distinct* ids seen so far,
+    which makes the result identical to a one-shot ``topk_unique`` over the
+    whole axis — the contract candidate-rerank callers need when the same
+    corpus id can appear in several chunks.
+    """
+    select = topk_unique if unique else topk_with_ids
+    k = min(k, n_items)
+    vals = ids = None
+    for s in range(0, n_items, block):
+        d, i = chunk_fn(s, min(block, n_items - s))
+        if vals is not None:
+            d = jnp.concatenate([vals, d], axis=-1)
+            i = jnp.concatenate([ids, i], axis=-1)
+        kk = min(k, d.shape[-1])
+        vals, ids = select(d, i, kk)
+        if kk < k:          # early chunks smaller than k: pad the state
+            widths = [(0, 0)] * (vals.ndim - 1) + [(0, k - kk)]
+            vals = jnp.pad(vals, widths, constant_values=jnp.inf)
+            ids = jnp.pad(ids, widths, constant_values=-1)
+    return vals, ids
+
+
 def np_topk(d: np.ndarray, k: int):
     k = min(k, d.shape[-1])
     part = np.argpartition(d, k - 1, axis=-1)[..., :k]

@@ -41,6 +41,10 @@ class ExperimentSettings:
     timeout: Optional[float] = None   # seconds for build+queries, isolated only
     isolated: bool = False            # subprocess isolation (Docker analogue)
     recompute_distances: bool = True
+    # batch mode only: stream the query set through the algorithm in blocks
+    # of this many queries, so arbitrarily large query sets run in fixed
+    # memory (results are materialised off the clock after each block).
+    query_block: Optional[int] = None
 
 
 def _rss_kb() -> float:
@@ -92,7 +96,8 @@ def _experiment_loop(algo, definition, dataset, settings) -> List[RunRecord]:
             algo.set_query_arguments(*qargs)
         best: Optional[Dict[str, Any]] = None
         for _ in range(max(1, settings.repetitions)):
-            res = _query_phase(algo, Q, k, settings.batch_mode)
+            res = _query_phase(algo, Q, k, settings.batch_mode,
+                               settings.query_block)
             if best is None or res["total_time"] < best["total_time"]:
                 best = res
         assert best is not None
@@ -124,8 +129,23 @@ def _experiment_loop(algo, definition, dataset, settings) -> List[RunRecord]:
     return records
 
 
-def _query_phase(algo, Q: np.ndarray, k: int, batch: bool) -> Dict[str, Any]:
+def _query_phase(algo, Q: np.ndarray, k: int, batch: bool,
+                 query_block: Optional[int] = None) -> Dict[str, Any]:
     if batch:
+        if query_block and 0 < query_block < len(Q):
+            # query-streaming mode: fixed-memory blocks; the clock runs only
+            # during each block's batch_query (materialisation stays off the
+            # clock, per paper §3.5).
+            total = 0.0
+            chunks = []
+            for s in range(0, len(Q), query_block):
+                t0 = time.perf_counter()
+                algo.batch_query(Q[s:s + query_block], k)
+                total += time.perf_counter() - t0
+                chunks.append(np.asarray(algo.get_batch_results()))
+            return {"results": np.concatenate(chunks, axis=0),
+                    "total_time": total,
+                    "query_times": np.empty(0, np.float64)}
         t0 = time.perf_counter()
         algo.batch_query(Q, k)
         total = time.perf_counter() - t0

@@ -41,6 +41,7 @@ def run_benchmark(
     isolated: bool = False,
     timeout: Optional[float] = None,
     repetitions: int = 1,
+    query_block: Optional[int] = None,
     verbose: bool = True,
 ) -> List[RunRecord]:
     dataset = get_dataset(dataset_name)
@@ -54,7 +55,7 @@ def run_benchmark(
     )
     settings = ExperimentSettings(
         count=count, batch_mode=batch, isolated=isolated,
-        timeout=timeout, repetitions=repetitions,
+        timeout=timeout, repetitions=repetitions, query_block=query_block,
     )
     all_records: List[RunRecord] = []
     for definition in definitions:
@@ -87,12 +88,16 @@ def main(argv: Optional[Sequence[str]] = None) -> None:
     p.add_argument("--isolated", action="store_true")
     p.add_argument("--timeout", type=float, default=None)
     p.add_argument("--repetitions", type=int, default=1)
+    p.add_argument("--query-block", type=int, default=None,
+                   help="batch mode: stream queries in blocks of this size "
+                        "(fixed memory for arbitrarily large query sets)")
     args = p.parse_args(argv)
 
     records = run_benchmark(
         args.dataset, args.config, count=args.count, batch=args.batch,
         algorithms=args.algorithms, out_dir=args.out, isolated=args.isolated,
         timeout=args.timeout, repetitions=args.repetitions,
+        query_block=args.query_block,
     )
     if records:
         print()

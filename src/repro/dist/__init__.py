@@ -1,0 +1,9 @@
+"""Distributed substrate: logical-axis sharding helpers, explicit
+collectives, and gradient compression.
+
+Modules:
+    sharding.py     logical -> physical mesh-axis mapping (``constrain``,
+                    ``named_sharding``, spec trees)
+    collectives.py  explicit collective ops (row-sharded embedding lookup)
+    compression.py  error-feedback gradient quantisation + all-reduce
+"""

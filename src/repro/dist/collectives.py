@@ -1,0 +1,48 @@
+"""Explicit collectives.
+
+``sharded_embed_lookup`` is the recsys/LM embedding hot path: tables are
+row-sharded over the 'model' axis, each shard answers with a masked local
+gather, and a psum combines the one non-zero contribution per token.  This
+keeps the full table from ever being replicated — the lookup moves
+O(tokens * d) bytes instead of O(vocab * d).
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental.shard_map import shard_map
+from jax.sharding import Mesh, PartitionSpec as P
+
+_EMBED_AXIS = "model"
+
+
+def sharded_embed_lookup(emb, tokens, mesh: Optional[Mesh] = None,
+                         axis: str = _EMBED_AXIS):
+    """emb [V, d] row-sharded over ``axis``; tokens int[...] -> [..., d].
+
+    Falls back to a plain gather when there is no mesh, the axis is absent,
+    or the vocab does not divide evenly across the axis.
+    """
+    if mesh is None or axis not in mesh.axis_names:
+        return emb[tokens]
+    n_shards = mesh.shape[axis]
+    V = emb.shape[0]
+    if n_shards <= 1 or V % n_shards != 0:
+        return emb[tokens]
+
+    def local(e, t):
+        # e [V/s, d] local rows; t replicated global token ids
+        per = e.shape[0]
+        shard = jax.lax.axis_index(axis)
+        rel = t.astype(jnp.int32) - shard * per
+        ok = (rel >= 0) & (rel < per)
+        safe = jnp.where(ok, rel, 0)
+        out = jnp.where(ok[..., None], e[safe], 0).astype(e.dtype)
+        return jax.lax.psum(out, axis)
+
+    fn = shard_map(local, mesh=mesh, in_specs=(P(axis, None), P()),
+                   out_specs=P(), check_rep=False)
+    return fn(emb, tokens)

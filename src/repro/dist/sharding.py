@@ -1,0 +1,82 @@
+"""Logical-axis sharding (GSPMD front-end used by every model and launch
+path).
+
+Models annotate arrays with *logical* axis names ("batch", "embed", "mlp",
+...).  This module maps them onto whatever *physical* mesh axes exist at run
+time — the production meshes are ("data", "model") / ("pod", "data",
+"model"), tests use small ad-hoc meshes, and a 1-device host simply maps
+everything to replicated.  A logical name absent from the table is treated
+as a physical axis name, so launch code can also talk about mesh axes
+directly.
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Sequence
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+# logical axis -> physical mesh axes, in priority order.  Entries missing
+# from the mesh (or already claimed by an earlier dim of the same spec) are
+# dropped, so the same model code runs on any mesh.
+LOGICAL_AXES = {
+    "batch": ("pod", "data"),
+    "fsdp": ("data",),
+    "rows": ("pod", "data", "model"),     # fully-sharded corpus rows (ANN)
+    "embed": ("model",),
+    "mlp": ("model",),
+    "vocab": ("model",),
+    "heads": ("model",),
+    "kv_heads": ("model",),
+    "expert": ("model",),
+    "seq_model": ("model",),
+}
+
+
+def _resolve(mesh: Mesh, entry, used: set):
+    if entry is None:
+        return None
+    phys = LOGICAL_AXES.get(entry, (entry,))
+    picked = tuple(a for a in phys if a in mesh.axis_names and a not in used)
+    used.update(picked)
+    if not picked:
+        return None
+    return picked if len(picked) > 1 else picked[0]
+
+
+def partition_spec(mesh: Mesh, *entries) -> P:
+    """PartitionSpec for logical ``entries`` (one per array dim, or none for
+    fully-replicated)."""
+    used: set = set()
+    return P(*[_resolve(mesh, e, used) for e in entries])
+
+
+def named_sharding(mesh: Mesh, *entries) -> NamedSharding:
+    return NamedSharding(mesh, partition_spec(mesh, *entries))
+
+
+def constrain(x, mesh: Optional[Mesh], *entries):
+    """``with_sharding_constraint`` under a logical spec; no-op off-mesh."""
+    if mesh is None:
+        return x
+    return jax.lax.with_sharding_constraint(x, named_sharding(mesh, *entries))
+
+
+def is_axes_leaf(x) -> bool:
+    """True for a tuple of logical axis names (a spec-tree leaf)."""
+    return isinstance(x, tuple) and all(
+        e is None or isinstance(e, str) for e in x)
+
+
+def spec_tree_to_shardings(spec_tree, mesh: Mesh):
+    """Map a pytree of logical-axes tuples to NamedShardings."""
+    return jax.tree.map(lambda axes: named_sharding(mesh, *axes), spec_tree,
+                        is_leaf=is_axes_leaf)
+
+
+def mesh_axes_size(mesh: Mesh, axes: Sequence[str]) -> int:
+    size = 1
+    for a in axes:
+        size *= mesh.shape[a]
+    return size

@@ -8,12 +8,15 @@ Each kernel lives in its own subpackage with three files:
     ref.py      pure-jnp oracle the tests assert against
 
 Kernels:
-    distance/    tiled L2/IP/cosine distance matrix (MXU matmul + epilogue)
-    topk_scan/   fused distance + running top-k corpus scan (never
-                 materialises the full distance matrix in HBM)
-    hamming/     XOR + popcount distances over packed uint32 codes
-    embedbag/    embedding-bag gather-reduce (recsys hot path)
-    decode_attn/ single-token decode attention with online softmax
+    distance/      tiled L2/IP/cosine distance matrix (MXU matmul + epilogue)
+    topk_scan/     fused distance + running top-k corpus scan (never
+                   materialises the full distance matrix in HBM)
+    distance_topk/ streaming fused distance + top-k: VMEM-scratch top-k
+                   accumulators, d-tiling, and query-block streaming so
+                   nq and n are both unbounded by HBM (O(nq*k) output)
+    hamming/       XOR + popcount distances over packed uint32 codes
+    embedbag/      embedding-bag gather-reduce (recsys hot path)
+    decode_attn/   single-token decode attention with online softmax
 """
 
 import os
@@ -21,3 +24,13 @@ import os
 # CPU container: kernels run in interpret mode.  On real TPU runtimes set
 # REPRO_PALLAS_INTERPRET=0.
 INTERPRET = os.environ.get("REPRO_PALLAS_INTERPRET", "1") != "0"
+
+
+def tpu_compiler_params(**kwargs):
+    """``pltpu.CompilerParams`` across jax versions (renamed from
+    ``TPUCompilerParams`` in newer releases)."""
+    from jax.experimental.pallas import tpu as pltpu
+
+    cls = getattr(pltpu, "CompilerParams", None) \
+        or getattr(pltpu, "TPUCompilerParams")
+    return cls(**kwargs)

@@ -24,6 +24,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels import tpu_compiler_params
+
 _NEG_INF = -1e30
 
 
@@ -96,7 +98,7 @@ def decode_attention_pallas(
             pltpu.VMEM((G, 1), jnp.float32),
             pltpu.VMEM((G, dh), jnp.float32),
         ],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=tpu_compiler_params(
             dimension_semantics=("parallel", "arbitrary"),
         ),
         interpret=interpret,

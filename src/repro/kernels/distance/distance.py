@@ -28,6 +28,23 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 
+def distance_epilogue(cross, qsq, xsq, mode: str):
+    """Turn an accumulated cross tile ``Q @ X^T`` into distances.
+
+    ``qsq`` [bq, 1] / ``xsq`` [1, bn] are the squared norms for "l2sq".  For
+    "ip"/"cos" the ``xsq`` row doubles as an additive per-corpus-row penalty
+    (0 for valid rows, +inf for padding sentinels), so callers can mask
+    padded corpus rows in every mode through the same operand.
+    """
+    if mode == "l2sq":
+        return jnp.maximum(qsq - 2.0 * cross + xsq, 0.0)
+    if mode == "ip":
+        return -cross + xsq
+    if mode == "cos":
+        return 1.0 - cross + xsq
+    raise ValueError(mode)
+
+
 def _distance_kernel(q_ref, x_ref, qsq_ref, xsq_ref, out_ref, acc_ref, *,
                      mode: str, n_d_steps: int):
     kd = pl.program_id(2)
@@ -46,13 +63,10 @@ def _distance_kernel(q_ref, x_ref, qsq_ref, xsq_ref, out_ref, acc_ref, *,
     def _epilogue():
         cross = acc_ref[...]
         if mode == "l2sq":
-            qsq = qsq_ref[...]                   # [bq, 1]
-            xsq = xsq_ref[...]                   # [1, bn]
-            out_ref[...] = jnp.maximum(qsq - 2.0 * cross + xsq, 0.0)
-        elif mode == "ip":
-            out_ref[...] = -cross
-        else:                                    # "cos"
-            out_ref[...] = 1.0 - cross
+            out_ref[...] = distance_epilogue(cross, qsq_ref[...],
+                                             xsq_ref[...], mode)
+        else:                                    # "ip" / "cos": no penalty row
+            out_ref[...] = distance_epilogue(cross, 0.0, 0.0, mode)
 
 
 @functools.partial(

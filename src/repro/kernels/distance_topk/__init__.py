@@ -1,0 +1,7 @@
+from repro.kernels.distance_topk.ops import (stream_topk,
+                                             stream_topk_batched)
+from repro.kernels.distance_topk.ref import (stream_topk_ref,
+                                             stream_topk_ref_scan)
+
+__all__ = ["stream_topk", "stream_topk_batched", "stream_topk_ref",
+           "stream_topk_ref_scan"]

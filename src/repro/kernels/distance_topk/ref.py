@@ -1,0 +1,58 @@
+"""Oracles for the streaming fused distance+top-k kernel.
+
+Two references:
+
+  * ``stream_topk_ref``        — exact: full distance matrix + lax.top_k.
+  * ``stream_topk_ref_scan``   — the *streaming algorithm* in pure JAX: a
+    fori_loop over corpus tiles folding each tile's local top-k into a
+    running (dist, id) state via ``merge_topk``.  Same O(nq * k) memory
+    model as the kernel, fully jit-compatible.  The sharded serving path
+    runs the same fold per shard (``ann/sharded.local_topk_streaming``,
+    which additionally carries global ids, sentinel norms, and the hamming
+    metric).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.ann.topk import merge_topk
+from repro.kernels.distance.ref import distance_matrix_ref
+
+
+def stream_topk_ref(Q, X, *, k: int, mode: str = "l2sq"):
+    d = distance_matrix_ref(Q, X, mode=mode)
+    neg, idx = jax.lax.top_k(-d, k)
+    return -neg, idx.astype(jnp.int32)
+
+
+def stream_topk_ref_scan(Q, X, *, k: int, mode: str = "l2sq",
+                         bn: int = 1024):
+    """Streaming scan over corpus tiles + merge_topk; never holds more than
+    one [nq, bn] distance tile."""
+    Q = jnp.asarray(Q, jnp.float32)
+    X = jnp.asarray(X, jnp.float32)
+    nq = Q.shape[0]
+    n = X.shape[0]
+    k = min(k, n)
+    bn = min(bn, n)
+    pad = (-n) % bn
+    Xp = jnp.pad(X, ((0, pad), (0, 0)))
+    valid = jnp.arange(n + pad) < n
+    n_steps = (n + pad) // bn
+
+    def body(j, state):
+        vals, ids = state
+        x = jax.lax.dynamic_slice_in_dim(Xp, j * bn, bn, axis=0)
+        ok = jax.lax.dynamic_slice_in_dim(valid, j * bn, bn, axis=0)
+        d = distance_matrix_ref(Q, x, mode=mode)          # [nq, bn]
+        d = jnp.where(ok[None, :], d, jnp.inf)
+        tile_ids = jnp.broadcast_to(
+            j * bn + jnp.arange(bn, dtype=jnp.int32)[None, :], (nq, bn))
+        tile_ids = jnp.where(jnp.isfinite(d), tile_ids, -1)
+        return merge_topk(vals, ids, d, tile_ids, k)
+
+    vals0 = jnp.full((nq, k), jnp.inf, jnp.float32)
+    ids0 = jnp.full((nq, k), -1, jnp.int32)
+    return jax.lax.fori_loop(0, n_steps, body, (vals0, ids0))

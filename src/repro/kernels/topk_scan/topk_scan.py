@@ -30,40 +30,14 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
-from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels import tpu_compiler_params
+from repro.kernels.distance_topk.distance_topk import merge_topk_rounds
 
 NEG_ONE = -1
 
-
-def _merge_topk_rounds(cand_d, cand_i, k: int):
-    """Extract the k smallest (d, id) pairs per row from [bq, m] candidates.
-
-    Returns ([bq, k] dists, [bq, k] ids).  Pure elementwise/reduction ops.
-    """
-    bq, m = cand_d.shape
-    col = jax.lax.broadcasted_iota(jnp.int32, (bq, k), 1)
-    out_d = jnp.full((bq, k), jnp.inf, jnp.float32)
-    out_i = jnp.full((bq, k), NEG_ONE, jnp.int32)
-
-    def round_fn(t, state):
-        cand_d, out_d, out_i = state
-        mval = jnp.min(cand_d, axis=1, keepdims=True)          # [bq, 1]
-        eq = cand_d == mval
-        first = jnp.cumsum(eq.astype(jnp.int32), axis=1) == 1
-        first = first & eq
-        midx = jnp.sum(jnp.where(first, cand_i, 0), axis=1, keepdims=True)
-        # guard: if mval is inf there is no valid candidate left
-        alive = jnp.isfinite(mval)
-        midx = jnp.where(alive, midx, NEG_ONE)
-        write = col == t
-        out_d = jnp.where(write, mval, out_d)
-        out_i = jnp.where(write, midx, out_i)
-        cand_d = jnp.where(first, jnp.inf, cand_d)
-        return cand_d, out_d, out_i
-
-    _, out_d, out_i = jax.lax.fori_loop(0, k, round_fn,
-                                        (cand_d, out_d, out_i))
-    return out_d, out_i
+# shared with the streaming kernel (distance_topk/ is the canonical home)
+_merge_topk_rounds = merge_topk_rounds
 
 
 def _topk_scan_kernel(q_ref, x_ref, qsq_ref, xsq_ref, vals_ref, idx_ref, *,
@@ -134,7 +108,7 @@ def topk_scan_pallas(
             jax.ShapeDtypeStruct((nq, k), jnp.float32),
             jax.ShapeDtypeStruct((nq, k), jnp.int32),
         ],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=tpu_compiler_params(
             dimension_semantics=("parallel", "arbitrary"),
         ),
         interpret=interpret,

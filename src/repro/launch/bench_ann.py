@@ -36,6 +36,14 @@ def main(argv=None):
     p.add_argument("--d", type=int, default=128)
     p.add_argument("--k", type=int, default=100)
     p.add_argument("--metric", default="euclidean")
+    p.add_argument("--query-block", type=int, default=None,
+                   help="stream queries in fixed blocks: the serving step "
+                        "is lowered for one block and looped, so total nq "
+                        "is unbounded by device memory")
+    p.add_argument("--corpus-block", type=int, default=None,
+                   help="per-shard streaming corpus scan block (running "
+                        "top-k accumulator instead of a local [nq, n/chips] "
+                        "distance matrix)")
     p.add_argument("--out", default="experiments/dryrun")
     args = p.parse_args(argv)
 
@@ -43,15 +51,20 @@ def main(argv=None):
     chips = len(mesh.devices.flatten())
     axes = mesh.axis_names
     n = ((args.n + chips - 1) // chips) * chips     # pad to shard evenly
+    # query-streaming: lower the step for one block; the serving loop feeds
+    # ceil(nq / block) identical blocks through the same executable
+    nq_block = min(args.nq, args.query_block or args.nq)
+    n_blocks = -(-args.nq // nq_block)
 
-    fn = make_sharded_topk(mesh, axes, args.k, args.metric)
+    fn = make_sharded_topk(mesh, axes, args.k, args.metric,
+                           corpus_block=args.corpus_block)
     corpus_sh = named_sharding(mesh, "rows", None)
     ids_sh = named_sharding(mesh, "rows")
     q_sh = named_sharding(mesh)
 
     sds = jax.ShapeDtypeStruct
     argspec = (
-        sds((args.nq, args.d), jnp.float32),        # queries (replicated)
+        sds((nq_block, args.d), jnp.float32),       # one query block (repl.)
         sds((n, args.d), jnp.float32),              # corpus (fully sharded)
         sds((n,), jnp.int32),                       # global ids
         sds((n,), jnp.float32),                     # squared norms
@@ -66,14 +79,16 @@ def main(argv=None):
         mem = compiled.memory_analysis()
         print(mem)
         hlo = compiled.as_text()
-        # useful FLOPs: the distance matmul, 2*nq*n*d
-        roof = R.from_compiled(compiled, 2.0 * args.nq * n * args.d, chips,
+        # useful FLOPs: the distance matmul per block, 2*nq_block*n*d
+        roof = R.from_compiled(compiled, 2.0 * nq_block * n * args.d, chips,
                                hlo_text=hlo)
     rec = {
         "arch": "ann-bruteforce-serving",
         "shape": f"n{args.n}_nq{args.nq}_d{args.d}_k{args.k}",
         "mesh": "2x16x16" if args.multi_pod else "16x16",
         "chips": chips,
+        "streaming": {"query_block": nq_block, "n_blocks": n_blocks,
+                      "corpus_block": args.corpus_block},
         "memory": {"argument_bytes": mem.argument_size_in_bytes,
                    "temp_bytes": mem.temp_size_in_bytes},
         "roofline": roof.as_dict(),
@@ -87,7 +102,8 @@ def main(argv=None):
     print(f"[bench_ann OK] {rec['mesh']}: t_comp={r['t_compute_s']:.4f}s "
           f"t_mem={r['t_memory_s']:.4f}s t_coll={r['t_collective_s']:.6f}s "
           f"dominant={r['dominant']} "
-          f"roofline_frac={r['roofline_fraction']:.3f} -> {path}")
+          f"roofline_frac={r['roofline_fraction']:.3f} "
+          f"blocks={n_blocks}x{nq_block}q -> {path}")
 
 
 if __name__ == "__main__":

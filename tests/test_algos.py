@@ -107,3 +107,73 @@ def test_sharded_bruteforce_matches_local(small_dataset):
     equality is covered by tests/test_dist.py in a subprocess)."""
     rec = run_algo(small_dataset, "ShardedBruteForce", ())
     assert recall(rec) == pytest.approx(1.0)
+
+
+# ----------------------------------------------------- streaming search path
+def test_bruteforce_streaming_exact(small_dataset):
+    # BruteForce(metric, backend, corpus_block, streaming, query_block)
+    rec = run_algo(small_dataset, "BruteForce",
+                   ("pallas", 65536, True, 100))
+    assert recall(rec) == pytest.approx(1.0)
+
+
+def test_ivf_streaming_rerank_matches(small_dataset):
+    from repro.ann.ivf import IVF
+
+    ref = IVF("euclidean", 30)
+    ref.fit(small_dataset.train)
+    ref.set_query_arguments(30)
+    ref.batch_query(small_dataset.test[:16], 10)
+    want = ref.get_batch_results()
+    st = IVF("euclidean", 30, streaming=True, rerank_block=128)
+    st.fit(small_dataset.train)
+    st.set_query_arguments(30)
+    st.batch_query(small_dataset.test[:16], 10)
+    np.testing.assert_array_equal(st.get_batch_results(), want)
+
+
+def test_hamming_streaming_exact(small_hamming):
+    # BruteForceHamming(metric, backend, streaming, corpus_block, qblock)
+    rec = run_algo(small_hamming, "BruteForceHamming",
+                   ("pallas", True, 500, 200))
+    assert recall(rec) == pytest.approx(1.0)
+
+
+def test_sharded_streaming_matches_local(small_dataset):
+    rec = run_algo(small_dataset, "ShardedBruteForce", (None, None, 512))
+    assert recall(rec) == pytest.approx(1.0)
+
+
+def test_hamming_chunked_rerank_matches_oneshot(small_hamming):
+    """Streaming rerank with per-fold dedupe must equal one-shot
+    topk_unique (duplicate candidate ids across chunks)."""
+    from repro.ann.hamming import BitsamplingAnnoy, MultiIndexHashing
+
+    X, Q = small_hamming.train, small_hamming.test[:16]
+    for cls, args, qarg in [(BitsamplingAnnoy, {"n_trees": 6}, 4),
+                            (MultiIndexHashing, {"n_chunks": 16,
+                                                 "cap": 64}, 1)]:
+        ref = cls("hamming", **args)
+        ref.fit(X)
+        ref.set_query_arguments(qarg)
+        ref.batch_query(Q, 10)
+        want = ref.get_batch_results()
+        st = cls("hamming", streaming=True, rerank_block=128, **args)
+        st.fit(X)
+        st.set_query_arguments(qarg)
+        st.batch_query(Q, 10)
+        np.testing.assert_array_equal(st.get_batch_results(), want)
+
+
+def test_experiment_query_block_streaming(small_dataset):
+    """The runner's query-streaming mode returns identical neighbours."""
+    from repro.core.config import Definition
+    d = Definition(algorithm="BruteForce", constructor="BruteForce",
+                   module=None, arguments=(small_dataset.metric,),
+                   query_argument_groups=((),))
+    full = run_definition(d, small_dataset,
+                          ExperimentSettings(count=10, batch_mode=True))[0]
+    blocked = run_definition(
+        d, small_dataset,
+        ExperimentSettings(count=10, batch_mode=True, query_block=33))[0]
+    np.testing.assert_array_equal(blocked.neighbors, full.neighbors)

@@ -17,6 +17,7 @@ def run_hnsw(ds, args=(16, 80), qargs=(32,), count=10):
                                                     batch_mode=True))[0]
 
 
+@pytest.mark.slow
 def test_hnsw_recall(small_dataset):
     lo = run_hnsw(small_dataset, qargs=(8,))
     hi = run_hnsw(small_dataset, qargs=(64,))
@@ -43,6 +44,7 @@ def test_hnsw_builds_hierarchy(small_dataset):
     np.testing.assert_array_equal(single, batch[0])
 
 
+@pytest.mark.slow
 def test_hnsw_rand_euclidean_q2():
     """Paper Q2: at 1M scale HNSW's small-world hierarchy fails on
     Rand-Euclidean (recall capped at .86) while KGraph solves it.  At our

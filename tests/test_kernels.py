@@ -64,6 +64,109 @@ def test_topk_scan_kernel(nq, n, d, k, metric):
     assert np.mean(np.asarray(i) == np.asarray(ri)) > 0.99
 
 
+# ------------------------------------------------- streaming distance+topk
+@pytest.mark.parametrize("nq,n,d,k", [(8, 256, 32, 5), (33, 700, 64, 10),
+                                      (16, 1024, 300, 100), (3, 999, 17, 7)])
+@pytest.mark.parametrize("metric", ["euclidean", "angular", "ip"])
+def test_stream_topk_kernel(nq, n, d, k, metric):
+    from repro.kernels.distance_topk import stream_topk, stream_topk_ref
+
+    rng = np.random.default_rng(nq + n + k)
+    Q = rng.standard_normal((nq, d)).astype(np.float32)
+    X = rng.standard_normal((n, d)).astype(np.float32)
+    if metric == "angular":
+        Q /= np.linalg.norm(Q, axis=1, keepdims=True)
+        X /= np.linalg.norm(X, axis=1, keepdims=True)
+    mode = {"euclidean": "l2sq", "angular": "cos", "ip": "ip"}[metric]
+    v, i = stream_topk(jnp.asarray(Q), jnp.asarray(X), k=k, metric=metric,
+                       bn=256)
+    rv, ri = stream_topk_ref(jnp.asarray(Q), jnp.asarray(X), k=k, mode=mode)
+    # distances must match exactly-ish; ids may differ only on value ties
+    np.testing.assert_allclose(np.asarray(v), np.asarray(rv), rtol=1e-4,
+                               atol=1e-4)
+    assert np.mean(np.asarray(i) == np.asarray(ri)) > 0.99
+
+
+@pytest.mark.parametrize("mode", ["l2sq", "ip", "cos"])
+def test_stream_topk_matches_materialize_then_topk(mode):
+    """Equivalence with the two-pass path: distance_matrix + topk_with_ids."""
+    from repro.ann.topk import topk_with_ids
+    from repro.kernels.distance.ops import distance_matrix
+    from repro.kernels.distance_topk import stream_topk
+
+    rng = np.random.default_rng(7)
+    Q = jnp.asarray(rng.standard_normal((19, 45)), jnp.float32)
+    X = jnp.asarray(rng.standard_normal((531, 45)), jnp.float32)
+    metric = {"l2sq": "euclidean", "cos": "angular", "ip": "ip"}[mode]
+    v, i = stream_topk(Q, X, k=13, metric=metric, bn=128)
+    D = distance_matrix(Q, X, mode=mode)
+    ids = jnp.broadcast_to(jnp.arange(X.shape[0], dtype=jnp.int32)[None, :],
+                           D.shape)
+    mv, mi = topk_with_ids(D, ids, 13)
+    np.testing.assert_allclose(np.asarray(v), np.asarray(mv), rtol=1e-4,
+                               atol=1e-4)
+    assert np.mean(np.asarray(i) == np.asarray(mi)) > 0.99
+
+
+def test_stream_topk_ties_stable_ids():
+    """Exact duplicate corpus rows: ties must break toward the smaller id,
+    matching jax.lax.top_k."""
+    from repro.kernels.distance_topk import stream_topk, stream_topk_ref
+
+    rng = np.random.default_rng(3)
+    base = rng.standard_normal((60, 24)).astype(np.float32)
+    X = np.concatenate([base, base, base])          # every row 3x duplicated
+    Q = rng.standard_normal((9, 24)).astype(np.float32)
+    v, i = stream_topk(jnp.asarray(Q), jnp.asarray(X), k=12,
+                       metric="euclidean", bn=128)
+    rv, ri = stream_topk_ref(jnp.asarray(Q), jnp.asarray(X), k=12,
+                             mode="l2sq")
+    np.testing.assert_array_equal(np.asarray(i), np.asarray(ri))
+
+
+def test_stream_topk_scan_ref_matches_exact():
+    """The pure-JAX streaming scan (the shard-local serving path) is exact."""
+    from repro.kernels.distance_topk import (stream_topk_ref,
+                                             stream_topk_ref_scan)
+
+    rng = np.random.default_rng(11)
+    Q = jnp.asarray(rng.standard_normal((14, 33)), jnp.float32)
+    X = jnp.asarray(rng.standard_normal((777, 33)), jnp.float32)
+    sv, si = stream_topk_ref_scan(Q, X, k=9, mode="l2sq", bn=100)
+    rv, ri = stream_topk_ref(Q, X, k=9, mode="l2sq")
+    np.testing.assert_allclose(np.asarray(sv), np.asarray(rv), rtol=1e-4,
+                               atol=1e-4)
+    assert np.mean(np.asarray(si) == np.asarray(ri)) > 0.99
+
+
+def test_stream_topk_batched_query_blocks():
+    """Query-streaming driver: identical results for any block size,
+    including ragged final blocks and k > block interactions."""
+    from repro.kernels.distance_topk import (stream_topk_batched,
+                                             stream_topk_ref)
+
+    rng = np.random.default_rng(5)
+    Q = rng.standard_normal((37, 20)).astype(np.float32)
+    X = jnp.asarray(rng.standard_normal((400, 20)), jnp.float32)
+    rv, ri = stream_topk_ref(jnp.asarray(Q), X, k=8, mode="l2sq")
+    for qb in (5, 16, 37, 64):
+        v, i = stream_topk_batched(Q, X, k=8, metric="euclidean",
+                                   query_block=qb)
+        np.testing.assert_allclose(v, np.asarray(rv), rtol=1e-4, atol=1e-4)
+        assert np.mean(i == np.asarray(ri)) > 0.99, qb
+
+
+def test_stream_topk_k_exceeds_corpus():
+    from repro.kernels.distance_topk import stream_topk
+
+    rng = np.random.default_rng(2)
+    Q = jnp.asarray(rng.standard_normal((4, 16)), jnp.float32)
+    X = jnp.asarray(rng.standard_normal((6, 16)), jnp.float32)
+    v, i = stream_topk(Q, X, k=50, metric="euclidean")
+    assert v.shape == (4, 6) and i.shape == (4, 6)
+    assert np.all(np.asarray(i) >= 0) and np.all(np.asarray(i) < 6)
+
+
 # --------------------------------------------------------------- hamming
 @pytest.mark.parametrize("nq,n,w,k", [(8, 256, 4, 5), (17, 300, 8, 10),
                                       (64, 512, 25, 32)])

@@ -22,6 +22,7 @@ def assert_finite(tree):
             assert bool(jnp.isfinite(leaf).all()), "NaN/Inf in output"
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("arch", LM_ARCHS)
 def test_lm_smoke_train_step(arch):
     from repro.models import transformer as T
@@ -62,6 +63,7 @@ def test_lm_smoke_serve_step(arch):
         token = jnp.argmax(logits, -1, keepdims=True).astype(jnp.int32)
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("arch", LM_ARCHS)
 def test_lm_prefill_matches_decode(arch):
     """Prefilling N tokens then decoding must equal stepwise decode."""
