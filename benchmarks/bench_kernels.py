@@ -38,13 +38,13 @@ def run(scale: str = "default"):
     rows.append(Row("kernel/bruteforce_two_pass_jnp", us,
                     f"tpu_roofline_us={t_tpu * 1e6:.1f}"))
 
-    from repro.kernels.topk_scan import distance_topk
+    from repro.kernels.distance_topk import stream_topk
 
     us = timed(lambda: jax.block_until_ready(
-        distance_topk(Q, X, k=k, metric="euclidean")))
+        stream_topk(Q, X, k=k, metric="euclidean")))
     bytes_fused = 4 * (nq * d + n * d + 2 * nq * k)
     t_tpu_f = max(flops / PEAK_FLOPS, bytes_fused / HBM_BW)
-    rows.append(Row("kernel/topk_scan_pallas_interpret", us,
+    rows.append(Row("kernel/stream_topk_pallas_interpret", us,
                     f"tpu_roofline_us={t_tpu_f * 1e6:.1f};"
                     f"hbm_bytes_saved={(bytes_2p - bytes_fused) / 1e6:.1f}MB"))
 

@@ -13,6 +13,7 @@ Modules map 1:1 onto the paper's tables/figures:
     bench_build_time     Figure 10 (build time)
     bench_batch_mode     Figure 11 + §4.4 (batch vs single)
     bench_kernels        Pallas kernel micro + TPU roofline claims
+    bench_engine         serving: Engine micro-batching vs legacy loop
 """
 
 from __future__ import annotations
@@ -32,6 +33,7 @@ MODULES = [
     ("fig11", "benchmarks.bench_batch_mode"),
     ("kernels", "benchmarks.bench_kernels"),
     ("stream", "benchmarks.bench_distance_topk"),
+    ("serve", "benchmarks.bench_engine"),
 ]
 
 

@@ -1,6 +1,6 @@
 """End-to-end serving driver (deliverable b): build an ANN index, serve
-batched query streams (the paper's batch mode as a production loop), with
-index checkpointing + crash-restart.
+micro-batched query streams through the Engine (the paper's batch mode as
+a production loop), with pytree index checkpointing + crash-restart.
 
 The paper's kind is a serving/benchmarking system, so the end-to-end driver
 serves a corpus with batched requests rather than training an LM (per the
@@ -8,34 +8,44 @@ assignment: "...OR serve a small model with batched requests, as the
 paper's kind dictates").
 
     PYTHONPATH=src python examples/serve_ann.py [--n 20000] [--restart-demo]
+    # CI serve-smoke gate:
+    PYTHONPATH=src python examples/serve_ann.py --n 2000 --restart-demo \
+        --assert-recall 0.9
 """
 
 import argparse
-import pickle
 import time
 from pathlib import Path
 
 import numpy as np
 
-from repro.ann import distances as D
-from repro.core.registry import resolve
-from repro.data import get_dataset
+import sys
+sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
+
+from repro.ann import distances as D                      # noqa: E402
+from repro.core.metrics import recall_from_arrays         # noqa: E402
+from repro.data import get_dataset                        # noqa: E402
+from repro.serve import CheckpointError, Engine           # noqa: E402
 
 
-def build_or_restore(ds, cache: Path):
-    if cache.exists():
+def build_or_restore(ds, cache: Path, k: int, batch_size: int) -> Engine:
+    try:
         t0 = time.perf_counter()
-        algo = pickle.loads(cache.read_bytes())
+        eng = Engine.load(cache, k=k, batch_size=batch_size)
         print(f"[restart] index restored in {time.perf_counter()-t0:.2f}s "
               f"(build skipped)")
-        return algo
-    algo = resolve("IVF")(ds.metric, 128)
+        return eng
+    except CheckpointError:
+        pass
     t0 = time.perf_counter()
-    algo.fit(ds.train)
+    eng = Engine.build("IVF", ds.train, metric=ds.metric,
+                       build_params={"n_clusters": 128},
+                       query_params={"n_probes": 8},
+                       k=k, batch_size=batch_size)
     print(f"[build] IVF index built in {time.perf_counter()-t0:.2f}s, "
-          f"{algo.index_size():.0f} kB")
-    cache.write_bytes(pickle.dumps(algo))
-    return algo
+          f"{eng.index_size_kb():.0f} kB")
+    eng.save(cache)
+    return eng
 
 
 def main():
@@ -44,39 +54,54 @@ def main():
     p.add_argument("--batch-size", type=int, default=256)
     p.add_argument("--n-batches", type=int, default=10)
     p.add_argument("--restart-demo", action="store_true")
+    p.add_argument("--assert-recall", type=float, default=None)
     args = p.parse_args()
 
     ds = get_dataset(f"blobs-euclidean-{args.n}")
-    cache = Path(f"/tmp/ann_index_{args.n}.pkl")
+    cache = Path(f"/tmp/ann_index_{args.n}.ckpt")
     if args.restart_demo and cache.exists():
         cache.unlink()
-    algo = build_or_restore(ds, cache)
+    k = 10
+    eng = build_or_restore(ds, cache, k, args.batch_size)
     if args.restart_demo:
         # simulate a crash: rebuild the server process from the checkpoint
+        # and prove the restored engine answers identically
         print("[restart-demo] simulating crash + restart...")
-        algo = build_or_restore(ds, cache)
+        _, before = eng.search(ds.test[:64])
+        eng = build_or_restore(ds, cache, k, args.batch_size)
+        _, after = eng.search(ds.test[:64])
+        if not np.array_equal(before, after):
+            raise SystemExit("[restart-demo] restored index diverged!")
+        print("[restart-demo] checkpoint restore verified "
+              "(identical results)")
 
-    algo.set_query_arguments(8)
     rng = np.random.default_rng(0)
-    k = 10
-    lat, qps_hist = [], []
+    lat, qps_hist, recalls = [], [], []
     for b in range(args.n_batches):
         sel = rng.integers(0, len(ds.test), args.batch_size)
         Q = ds.test[sel]
         t0 = time.perf_counter()
-        algo.batch_query(Q, k)
+        _, ids = eng.search(Q)
         dt = time.perf_counter() - t0
-        res = algo.get_batch_results()
-        dists = D.pairwise_rows(Q, ds.train, res[:, :k], ds.metric)
-        thr = ds.distances[sel, k - 1]
-        rec = float(np.mean(np.sum(dists <= thr[:, None] + 1e-3, 1) / k))
+        # recall via the shared core.metrics definition
+        dists = D.pairwise_rows(Q, ds.train, ids[:, :k], ds.metric)
+        rec = float(np.mean(recall_from_arrays(
+            dists, ds.distances[sel], k, neighbors=ids[:, :k])))
         lat.append(dt / len(Q))
         qps_hist.append(len(Q) / dt)
+        recalls.append(rec)
         print(f"batch {b:2d}: {len(Q)/dt:9.0f} QPS  "
               f"p_batch={dt*1e3:6.1f} ms  recall@{k}={rec:.3f}")
-    print(f"\nserved {args.n_batches * args.batch_size} queries: "
+    agg = float(np.mean(recalls))
+    print(f"\nserved {args.n_batches * args.batch_size} queries in "
+          f"{eng.stats['batches']} micro-batches "
+          f"({eng.stats['padded']} padded): "
           f"median {np.median(qps_hist):.0f} QPS, "
-          f"p95 per-query latency {np.percentile(lat, 95)*1e6:.0f} us")
+          f"p95 per-query latency {np.percentile(lat, 95)*1e6:.0f} us, "
+          f"mean recall@{k}={agg:.3f}")
+    if args.assert_recall is not None and agg < args.assert_recall:
+        raise SystemExit(
+            f"recall {agg:.3f} < required {args.assert_recall}")
 
 
 if __name__ == "__main__":

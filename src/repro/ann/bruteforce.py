@@ -1,15 +1,17 @@
 """Exact brute force — the baseline every paper figure includes, and the
 reference implementation for correctness tests.
 
-Two device paths:
+Functional core: ``build`` canonicalises the corpus onto device;
+``search`` is one pure jittable pass.  Two device paths:
+
   * ``jnp``    : blocked distance-matrix + lax.top_k (default).
-  * ``pallas`` : the fused distance+top-k kernel — never materialises the
-                 [nq, n] matrix in HBM.  This is the TPU analogue of
-                 FAISS's fused GPU k-selection (paper §4.4).  With
-                 ``streaming=True`` it uses the streaming kernel
-                 (kernels/distance_topk): per-query-tile VMEM top-k
-                 accumulators plus query-block streaming, so both n and nq
-                 scale beyond what a [nq, n] buffer would allow.
+  * ``pallas`` : the streaming fused distance+top-k kernel
+                 (kernels/distance_topk) — never materialises the [nq, n]
+                 matrix in HBM.  This is the TPU analogue of FAISS's fused
+                 GPU k-selection (paper §4.4).  With ``streaming=True``
+                 the legacy batch path additionally streams query blocks
+                 (``stream_topk_batched``), so both n and nq scale beyond
+                 what a [nq, n] buffer would allow.
 """
 
 from __future__ import annotations
@@ -20,19 +22,73 @@ import jax
 import jax.numpy as jnp
 
 from repro.ann import distances as D
+from repro.ann.functional import (FunctionalSpec, IndexState, prepare_points,
+                                  prepare_queries, register_functional)
 from repro.ann.topk import topk_smallest
-from repro.core.interface import BaseANN
+from repro.core.interface import FunctionalANN
 from repro.core.registry import register
 
 
+# --------------------------------------------------------------- functional
+def build(X: np.ndarray, *, metric: str = "euclidean",
+          backend: str = "jnp", corpus_block: int = 65536,
+          streaming: bool = False, query_block: int = 4096) -> IndexState:
+    """Canonicalise the corpus into a device-resident IndexState."""
+    if backend not in ("jnp", "pallas"):
+        raise ValueError(f"unknown backend {backend!r}")
+    if streaming and (backend != "pallas" or metric == "hamming"):
+        raise ValueError(
+            "streaming requires backend='pallas' and a float metric "
+            "(use BruteForceHamming(streaming=True) for hamming)")
+    X = prepare_points(X, metric)
+    arrays = {"X": jnp.asarray(X)}
+    if metric == "euclidean":
+        arrays["xsq"] = jnp.sum(arrays["X"].astype(jnp.float32) ** 2, axis=1)
+    return IndexState("BruteForce", metric, arrays, {
+        "n": int(X.shape[0]), "backend": backend,
+        "corpus_block": int(corpus_block), "streaming": bool(streaming),
+        "query_block": int(query_block),
+    })
+
+
+def search(state: IndexState, Q, *, k: int):
+    """Exact (dists [b, kk], ids [b, kk]) with kk = min(k, n).  Pure and
+    jit/vmap/shard-friendly; the pallas backend runs the streaming fused
+    kernel, the jnp backend materialises one [b, n] tile."""
+    metric = state.metric
+    n = state.stat("n")
+    k = min(k, n)
+    Q = prepare_queries(Q, metric)
+    if state.stat("backend") == "pallas" and metric != "hamming":
+        from repro.kernels.distance_topk import stream_topk
+
+        return stream_topk(Q, state["X"], k=k, metric=metric)
+    if metric == "euclidean":
+        d = D.sq_l2_matrix(Q, state["X"], state["xsq"])
+    elif metric == "angular":
+        d = D.angular_matrix(Q, state["X"], normalized=False)
+    else:
+        d = D.hamming_matrix(Q, state["X"])
+    return topk_smallest(d, k)
+
+
+SPEC = register_functional(FunctionalSpec(
+    name="BruteForce", build=build, search=search,
+    supported_metrics=("euclidean", "angular", "hamming"),
+))
+
+
+# ------------------------------------------------------------ legacy class
 @register("BruteForce")
-class BruteForce(BaseANN):
+class BruteForce(FunctionalANN):
     supported_metrics = ("euclidean", "angular", "hamming")
 
     def __init__(self, metric: str, backend: str = "jnp",
                  corpus_block: int = 65536, streaming: bool = False,
                  query_block: int = 4096):
-        super().__init__(metric)
+        super().__init__(metric, build_params=dict(
+            backend=backend, corpus_block=int(corpus_block),
+            streaming=bool(streaming), query_block=int(query_block)))
         if backend not in ("jnp", "pallas"):
             raise ValueError(f"unknown backend {backend!r}")
         if streaming and (backend != "pallas" or metric == "hamming"):
@@ -47,66 +103,29 @@ class BruteForce(BaseANN):
         self.name = f"BruteForce(backend={backend}{suffix})"
         self._dist_comps = 0
 
-    def fit(self, X: np.ndarray) -> None:
-        self._X = jnp.asarray(X)
-        self._n = X.shape[0]
-        if self.metric == "euclidean":
-            self._xsq = jnp.sum(self._X.astype(jnp.float32) ** 2, axis=1)
-        elif self.metric == "angular":
-            self._X = self._X / jnp.maximum(
-                jnp.linalg.norm(self._X, axis=1, keepdims=True), 1e-12)
-        self._rebuild()
-
-    def _rebuild(self):
-        self._query1 = jax.jit(self._query_block, static_argnames=("k",))
-
-    def _query_block(self, Q, *, k):
-        if self.metric == "euclidean":
-            d = D.sq_l2_matrix(Q, self._X, self._xsq)
-        elif self.metric == "angular":
-            d = D.angular_matrix(Q, self._X, normalized=False)
-        else:
-            d = D.hamming_matrix(Q, self._X)
-        vals, idx = topk_smallest(d, min(k, self._n))
-        return vals, idx
+    def _sync_state(self):
+        self._n = self._state.stat("n")
 
     def query(self, q: np.ndarray, k: int) -> np.ndarray:
-        _, idx = self._query1(jnp.asarray(q)[None, :], k=k)
+        out = super().query(q, k)
         self._dist_comps += self._n
-        return np.asarray(idx[0])
+        return out
 
     def batch_query(self, Q: np.ndarray, k: int) -> None:
         k = min(k, self._n)
-        if self.backend == "pallas" and self.metric != "hamming":
-            if self.streaming:
-                from repro.kernels.distance_topk import stream_topk_batched
+        if self.backend == "pallas" and self.metric != "hamming" \
+                and self.streaming:
+            from repro.kernels.distance_topk import stream_topk_batched
 
-                # device arrays: the host transfer happens off the clock in
-                # get_batch_results(), matching the other device paths
-                _, idx = stream_topk_batched(
-                    Q, self._X, k=k, metric=self.metric,
-                    query_block=self.query_block, materialize=False)
-                self._batch_results = jax.block_until_ready(idx)
-            else:
-                from repro.kernels.topk_scan import ops as topk_ops
-
-                _, idx = topk_ops.distance_topk(
-                    jnp.asarray(Q), self._X, k=k, metric=self.metric)
-                self._batch_results = jax.block_until_ready(idx)
+            # device arrays: the host transfer happens off the clock in
+            # get_batch_results(), matching the other device paths
+            _, idx = stream_topk_batched(
+                Q, self._state["X"], k=k, metric=self.metric,
+                query_block=self.query_block, materialize=False)
+            self._batch_results = jax.block_until_ready(idx)
         else:
-            outs = []
-            Qj = jnp.asarray(Q)
-            for s in range(0, Q.shape[0], 4096):
-                _, idx = self._query1(Qj[s:s + 4096], k=k)
-                outs.append(idx)
-            self._batch_results = jax.block_until_ready(
-                jnp.concatenate(outs, axis=0))
+            super().batch_query(Q, k)
         self._dist_comps += self._n * Q.shape[0]
-
-    def get_batch_results(self) -> np.ndarray:
-        out = np.asarray(self._batch_results)
-        self._batch_results = None
-        return out
 
     def get_additional(self):
         return {"dist_comps": self._dist_comps}

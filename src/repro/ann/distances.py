@@ -50,6 +50,21 @@ def hamming_matrix(Q: jnp.ndarray, X: jnp.ndarray) -> jnp.ndarray:
     return jnp.sum(jax.lax.population_count(x), axis=-1).astype(jnp.float32)
 
 
+def masked_rows_to(X: jnp.ndarray, q: jnp.ndarray, ids: jnp.ndarray,
+                   metric: str) -> jnp.ndarray:
+    """Distances from ONE query to the gathered rows ``X[ids]``; entries
+    with ``ids < 0`` come back +inf (gather-safe).  Squared L2 for
+    euclidean — the beam-search comparator the graph algorithms share.
+    """
+    x = X[jnp.maximum(ids, 0)]
+    if metric == "angular":
+        d = 1.0 - x @ q
+    else:
+        diff = x - q[None, :]
+        d = jnp.sum(diff * diff, axis=-1)
+    return jnp.where(ids >= 0, d, jnp.inf)
+
+
 def distance_matrix(Q, X, metric: str) -> jnp.ndarray:
     if metric == "euclidean":
         return jnp.sqrt(sq_l2_matrix(Q, X))

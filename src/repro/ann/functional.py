@@ -1,0 +1,224 @@
+"""Functional index core: immutable pytree ``IndexState`` + pure search.
+
+The paper's ``BaseANN`` protocol (§3.1) is host-side and stateful: ``fit``
+mutates the object, ``set_query_arguments`` reconfigures it between runs,
+``query`` round-trips through numpy.  That is fine for the experiment loop
+but caps everything the serving path needs — jit/vmap/shard composition,
+micro-batched query streams, pytree checkpoints.
+
+This module defines the device-side replacement.  Every algorithm is a pair
+of pure functions over an immutable pytree:
+
+    build(X, *, metric, **build_params) -> IndexState
+    search(state, Q, *, k, **query_params) -> (dists [b, k], ids [b, k])
+
+``IndexState`` is a registered pytree: its *arrays* are the leaves (device
+buffers — corpus, centroids, hash tables, adjacency), its *static* dict
+rides in the aux data (hashable hyperparameters — pad widths, tree depth,
+backend).  ``search`` therefore composes with ``jax.jit`` / ``vmap`` /
+``shard_map`` directly, and the same traced function serves every query
+batch of a given shape.
+
+Query-time knobs (``n_probes``, ``ef``, ``radius``, …) are explicit
+arguments of ``search`` instead of ``set_query_arguments`` mutations.  Each
+spec declares which are *static* (shape-affecting: retrace per value) and
+which may be *traced* (runtime values under a static cap — e.g. IVF's
+``n_probes`` with ``max_probes`` pinned, so one trace serves all
+query-args groups).
+
+The legacy class interface survives as a thin adapter
+(:class:`repro.core.interface.FunctionalANN`); the serving engine
+(:mod:`repro.serve.engine`) builds on this module directly.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Mapping, Optional, Sequence, Tuple
+
+import jax
+import numpy as np
+
+
+def _freeze(value: Any) -> Any:
+    """Make a static value hashable (lists -> tuples, recursively)."""
+    if isinstance(value, (list, tuple)):
+        return tuple(_freeze(v) for v in value)
+    if isinstance(value, dict):
+        return tuple(sorted((k, _freeze(v)) for k, v in value.items()))
+    return value
+
+
+@jax.tree_util.register_pytree_node_class
+class IndexState:
+    """Immutable device-resident index: array pytree + static hyperparams.
+
+    ``arrays`` maps names to array leaves (or tuples of arrays, e.g. HNSW's
+    per-level adjacency); ``static`` maps names to hashable metadata that
+    determines trace identity.  Treat instances as frozen — derive new
+    states with :meth:`replace`.
+    """
+
+    __slots__ = ("algo", "metric", "arrays", "static")
+
+    def __init__(self, algo: str, metric: str,
+                 arrays: Mapping[str, Any],
+                 static: Optional[Mapping[str, Any]] = None):
+        self.algo = algo
+        self.metric = metric
+        self.arrays = dict(arrays)
+        self.static = {k: _freeze(v) for k, v in dict(static or {}).items()}
+
+    # ------------------------------------------------------------- access
+    def __getitem__(self, key: str):
+        return self.arrays[key]
+
+    def stat(self, key: str):
+        return self.static[key]
+
+    def replace(self, **arrays) -> "IndexState":
+        merged = dict(self.arrays)
+        merged.update(arrays)
+        return IndexState(self.algo, self.metric, merged, self.static)
+
+    def nbytes(self) -> int:
+        leaves = jax.tree_util.tree_leaves(self.arrays)
+        return int(sum(getattr(a, "nbytes", 0) for a in leaves))
+
+    def device_put(self) -> "IndexState":
+        """Move every array leaf onto the default device (jnp arrays)."""
+        import jax.numpy as jnp
+
+        return IndexState(
+            self.algo, self.metric,
+            jax.tree_util.tree_map(jnp.asarray, self.arrays), self.static)
+
+    # ------------------------------------------------------------- pytree
+    def tree_flatten(self):
+        keys = tuple(sorted(self.arrays))
+        children = tuple(self.arrays[k] for k in keys)
+        aux = (self.algo, self.metric, keys,
+               tuple(sorted(self.static.items())))
+        return children, aux
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        algo, metric, keys, static = aux
+        return cls(algo, metric, dict(zip(keys, children)), dict(static))
+
+    def __repr__(self) -> str:  # pragma: no cover - cosmetic
+        return (f"IndexState({self.algo!r}, {self.metric!r}, "
+                f"arrays={sorted(self.arrays)}, "
+                f"{self.nbytes() / 1024:.0f} kB)")
+
+
+@dataclasses.dataclass(frozen=True)
+class FunctionalSpec:
+    """One algorithm's functional API: pure ``build`` + pure ``search``.
+
+    ``query_params``        positional order of query-time knobs (matches the
+                            legacy ``set_query_arguments`` convention).
+    ``query_defaults``      default value per knob.
+    ``static_query_params`` knobs that must be trace-time constants
+                            (shape-affecting).  Knobs not listed here may be
+                            traced runtime values.
+    """
+
+    name: str
+    build: Callable[..., IndexState]
+    search: Callable[..., Tuple[Any, Any]]
+    query_params: Tuple[str, ...] = ()
+    query_defaults: Tuple[Any, ...] = ()
+    static_query_params: Optional[Tuple[str, ...]] = None
+    supported_metrics: Tuple[str, ...] = ("euclidean", "angular")
+
+    @property
+    def static_params(self) -> Tuple[str, ...]:
+        if self.static_query_params is None:
+            return self.query_params
+        return self.static_query_params
+
+    def default_query_params(self) -> Dict[str, Any]:
+        return dict(zip(self.query_params, self.query_defaults))
+
+    def jit_search(self):
+        """The search function jitted with k + static knobs pinned."""
+        static = ("k",) + tuple(self.static_params)
+        return jax.jit(self.search, static_argnames=static)
+
+
+FUNCTIONAL: Dict[str, FunctionalSpec] = {}
+
+
+def _metric_checked_build(spec: FunctionalSpec) -> Callable[..., IndexState]:
+    """Wrap a build fn so unsupported metrics fail fast (the functional
+    analogue of the BaseANN constructor's metric validation)."""
+    import functools
+    import inspect
+
+    original = spec.build
+    default = inspect.signature(original).parameters["metric"].default
+
+    @functools.wraps(original)
+    def build(X, *, metric=default, **params) -> IndexState:
+        if metric not in spec.supported_metrics:
+            raise ValueError(
+                f"{spec.name} does not support metric {metric!r} "
+                f"(supported: {list(spec.supported_metrics)})")
+        return original(X, metric=metric, **params)
+
+    return build
+
+
+def register_functional(spec: FunctionalSpec) -> FunctionalSpec:
+    if spec.name in FUNCTIONAL:
+        raise ValueError(f"duplicate functional registration: {spec.name}")
+    spec = dataclasses.replace(spec, build=_metric_checked_build(spec))
+    FUNCTIONAL[spec.name] = spec
+    return spec
+
+
+def get_functional(name: str) -> FunctionalSpec:
+    """Resolve a functional spec, importing the algorithm package first."""
+    import importlib
+
+    importlib.import_module("repro.ann")
+    spec = FUNCTIONAL.get(name)
+    if spec is None:
+        raise KeyError(
+            f"no functional spec for {name!r}; known: {sorted(FUNCTIONAL)}")
+    return spec
+
+
+def available_functional() -> Dict[str, FunctionalSpec]:
+    import importlib
+
+    importlib.import_module("repro.ann")
+    return dict(FUNCTIONAL)
+
+
+# --------------------------------------------------------------------------
+# shared build helpers
+# --------------------------------------------------------------------------
+
+def prepare_points(X: np.ndarray, metric: str) -> np.ndarray:
+    """Host-side canonicalisation: float32 (unit-normalised for angular),
+    packed uint32 words for hamming."""
+    if metric == "hamming":
+        return np.asarray(X, np.uint32)
+    X = np.asarray(X, np.float32)
+    if metric == "angular":
+        X = X / np.maximum(np.linalg.norm(X, axis=1, keepdims=True), 1e-12)
+    return X
+
+
+def prepare_queries(Q, metric: str):
+    """Traced-side canonicalisation of a query batch (jit-friendly)."""
+    import jax.numpy as jnp
+
+    if metric == "hamming":
+        return jnp.asarray(Q, jnp.uint32)
+    Q = jnp.asarray(Q).astype(jnp.float32)
+    if metric == "angular":
+        Q = Q / jnp.maximum(jnp.linalg.norm(Q, axis=1, keepdims=True), 1e-12)
+    return Q

@@ -7,12 +7,16 @@ construction oracle).  Optional RNG-style edge diversification (the pruning
 heuristic HNSW/NSG use) — keeps edges whose endpoints are not closer to an
 already-kept neighbor than to the node.
 
-Query: greedy best-first beam search, TPU-adapted: the candidate pool is a
-fixed-size (ef) sorted register array updated with masked merges inside
-``lax.while_loop``; every iteration expands exactly one unexpanded pool
-entry and merges its adjacency list.  vmap batches queries.  (CPU
+Query: greedy best-first beam search, TPU-adapted and *pure*: the candidate
+pool is a fixed-size (ef) sorted register array updated with masked merges
+inside ``lax.while_loop``; every iteration expands exactly one unexpanded
+pool entry and merges its adjacency list.  vmap batches queries.  (CPU
 implementations use a heap + visited hash set; the fixed beam + dedupe-merge
 is the dense equivalent.  We benchmark implementations, per the paper.)
+
+``search_with_stats`` additionally returns the per-query expansion count
+(the paper's distance-computation instrumentation); the registered
+functional ``search`` drops it to match the (dists, ids) contract.
 """
 
 from __future__ import annotations
@@ -23,24 +27,160 @@ import jax
 import jax.numpy as jnp
 
 from repro.ann import distances as D
-from repro.core.interface import BaseANN
+from repro.ann.functional import (FunctionalSpec, IndexState, prepare_points,
+                                  prepare_queries, register_functional)
+from repro.core.interface import FunctionalANN
 from repro.core.registry import register
 
 
+# --------------------------------------------------------------- functional
+def build(X: np.ndarray, *, metric: str = "euclidean", degree: int = 16,
+          diversify: bool = False, extra_edges: int = 2, n_entries: int = 16,
+          seed: int = 0) -> IndexState:
+    from repro.data.groundtruth import exact_knn
+
+    X = prepare_points(X, metric)
+    n, d = X.shape
+    deg = min(int(degree), n - 1)
+    nbrs, dists = exact_knn(X, X, deg + 1, metric)
+    # drop self-edges (first column after sort is the point itself)
+    graph = np.where(nbrs[:, :1] == np.arange(n)[:, None],
+                     nbrs[:, 1:deg + 1], nbrs[:, :deg])
+    if diversify:
+        graph = _diversify(X, graph, dists)
+    rng = np.random.default_rng(int(seed))
+    # Small-world shortcuts: a pure exact k-NN graph on clustered data is
+    # near-disconnected across clusters (exactly the paper's Q2 finding
+    # that graph methods depend on global navigability); NSW gains its
+    # long-range links from incremental insertion.  ``extra_edges`` uniform
+    # random out-edges per node restore navigability.
+    if int(extra_edges) > 0 and n > deg + 1:
+        shortcuts = rng.integers(0, n, size=(n, int(extra_edges)))
+        graph = np.concatenate([graph, shortcuts], axis=1)
+    entries = rng.choice(n, size=min(int(n_entries), n),
+                         replace=False).astype(np.int32)
+    return IndexState("KNNGraph", metric, {
+        "X": jnp.asarray(X),
+        "graph": jnp.asarray(graph.astype(np.int32)),
+        "entries": jnp.asarray(entries),
+    }, {"n": n, "d": d, "degree": deg})
+
+
+def _diversify(X, graph, dists):
+    """Occlusion pruning (NSG/HNSW heuristic), per node."""
+    n, deg = graph.shape
+    keep = np.full_like(graph, -1)
+    for i in range(n):
+        cand = graph[i]
+        kept: list[int] = []
+        for c in cand:
+            xc = X[c]
+            ok = True
+            for kpt in kept:
+                # prune c if an already-kept neighbor is closer to c
+                # than i is (c is "occluded")
+                if np.sum((X[kpt] - xc) ** 2) < np.sum((X[i] - xc) ** 2):
+                    ok = False
+                    break
+            if ok:
+                kept.append(int(c))
+            if len(kept) == deg:
+                break
+        while len(kept) < deg:          # refill with originals
+            for c in cand:
+                if int(c) not in kept:
+                    kept.append(int(c))
+                    break
+        keep[i] = kept[:deg]
+    return keep
+
+
+def _dist_to(state: IndexState, q, ids):
+    return D.masked_rows_to(state["X"], q, ids, state.metric)
+
+
+def _search_one(state: IndexState, q, *, k: int, ef: int):
+    """Beam search for one query; returns (dists [k], ids [k], iters)."""
+    entries = state["entries"]
+    graph = state["graph"]
+    n_entry = entries.shape[0]
+    pool_ids = jnp.full((ef,), -1, jnp.int32)
+    pool_d = jnp.full((ef,), jnp.inf, jnp.float32)
+    pool_exp = jnp.zeros((ef,), bool)
+    e_d = _dist_to(state, q, entries)
+    ids0 = jnp.concatenate([entries, pool_ids])[:ef]
+    d0 = jnp.concatenate([e_d, pool_d])[:ef]
+    order = jnp.argsort(d0)
+    st = (ids0[order], d0[order], pool_exp, jnp.int32(0))
+
+    deg = graph.shape[1]
+    max_iter = ef + n_entry
+
+    def cond(st):
+        _, d, exp, it = st
+        has_work = jnp.any(~exp & jnp.isfinite(d))
+        return has_work & (it < max_iter)
+
+    def body(st):
+        ids, d, exp, it = st
+        sel = jnp.argmin(jnp.where(exp, jnp.inf, d))
+        cur = ids[sel]
+        exp = exp.at[sel].set(True)
+        nbrs = graph[jnp.maximum(cur, 0)]                # [deg]
+        nbrs = jnp.where(cur >= 0, nbrs, -1)
+        nd = _dist_to(state, q, nbrs)
+        # merge pool and neighbors; dedupe by id keeping expanded entries
+        all_ids = jnp.concatenate([ids, nbrs])
+        all_d = jnp.concatenate([d, nd])
+        all_exp = jnp.concatenate([exp, jnp.zeros((deg,), bool)])
+        # dedupe: sort by (id, -expanded); duplicate = same id as prev
+        order = jnp.lexsort((~all_exp, all_ids))
+        si = all_ids[order]
+        sd = all_d[order]
+        se = all_exp[order]
+        prev = jnp.concatenate([jnp.full((1,), -2, si.dtype), si[:-1]])
+        dup = (si == prev) | (si < 0)
+        sd = jnp.where(dup, jnp.inf, sd)
+        si = jnp.where(dup, -1, si)
+        # keep best ef by distance
+        order2 = jnp.argsort(sd)[:ef]
+        return (si[order2], sd[order2], se[order2], it + 1)
+
+    ids, d, _, it = jax.lax.while_loop(cond, body, st)
+    kk = min(k, ef)
+    return d[:kk], ids[:kk], it
+
+
+def search_with_stats(state: IndexState, Q, *, k: int, ef: int = 32):
+    """(dists [b, kk], ids [b, kk], expansions [b]).  Pure + jittable."""
+    Q = prepare_queries(Q, state.metric)
+    return jax.vmap(lambda q: _search_one(state, q, k=k, ef=int(ef)))(Q)
+
+
+def search(state: IndexState, Q, *, k: int, ef: int = 32):
+    d, ids, _ = search_with_stats(state, Q, k=k, ef=ef)
+    return d, ids
+
+
+SPEC = register_functional(FunctionalSpec(
+    name="KNNGraph", build=build, search=search,
+    query_params=("ef",), query_defaults=(32,),
+))
+
+
+# ------------------------------------------------------------ legacy class
 @register("KNNGraph")
-class KNNGraph(BaseANN):
+class KNNGraph(FunctionalANN):
     supported_metrics = ("euclidean", "angular")
 
     def __init__(self, metric: str, degree: int = 16, diversify: bool = False,
                  extra_edges: int = 2, n_entries: int = 16, seed: int = 0):
-        super().__init__(metric)
+        super().__init__(metric, build_params=dict(
+            degree=int(degree), diversify=bool(diversify),
+            extra_edges=int(extra_edges), n_entries=int(n_entries),
+            seed=int(seed)))
         self.degree = int(degree)
         self.diversify = bool(diversify)
-        # Small-world shortcuts: a pure exact k-NN graph on clustered data is
-        # near-disconnected across clusters (exactly the paper's Q2 finding
-        # that graph methods depend on global navigability); NSW gains its
-        # long-range links from incremental insertion.  We add ``extra_edges``
-        # uniform random out-edges per node to restore navigability.
         self.extra_edges = int(extra_edges)
         self.n_entries = int(n_entries)
         self.seed = int(seed)
@@ -52,148 +192,18 @@ class KNNGraph(BaseANN):
 
     def set_query_arguments(self, ef: int) -> None:
         self.ef = max(1, int(ef))
+        self._qparams["ef"] = self.ef
 
-    # ------------------------------------------------------------------ fit
-    def fit(self, X: np.ndarray) -> None:
-        from repro.data.groundtruth import exact_knn
+    def _search_fn(self):
+        return search_with_stats
 
-        X = np.asarray(X, np.float32)
-        if self.metric == "angular":
-            X = X / np.maximum(np.linalg.norm(X, axis=1, keepdims=True), 1e-12)
-        self._n, self._d = X.shape
-        self._Xj = jnp.asarray(X)
-        deg = min(self.degree, self._n - 1)
-        nbrs, dists = exact_knn(X, X, deg + 1, self.metric)
-        # drop self-edges (first column after sort is the point itself)
-        graph = np.where(nbrs[:, :1] == np.arange(self._n)[:, None],
-                         nbrs[:, 1:deg + 1], nbrs[:, :deg])
-        if self.diversify:
-            graph = self._diversify(X, graph, dists)
-        rng = np.random.default_rng(self.seed)
-        if self.extra_edges > 0 and self._n > deg + 1:
-            shortcuts = rng.integers(0, self._n,
-                                     size=(self._n, self.extra_edges))
-            graph = np.concatenate([graph, shortcuts], axis=1)
-        self._graph = jnp.asarray(graph.astype(np.int32))
-        # entry points: spread deterministically over the corpus
-        self._entries = jnp.asarray(
-            rng.choice(self._n, size=min(self.n_entries, self._n),
-                       replace=False).astype(np.int32))
-        self._rebuild()
-
-    def _rebuild(self):
-        self._jq = jax.jit(self._batch_search, static_argnames=("k", "ef"))
-
-    def _diversify(self, X, graph, dists):
-        """Occlusion pruning (NSG/HNSW heuristic), vectorised per node."""
-        n, deg = graph.shape
-        keep = np.full_like(graph, -1)
-        for i in range(n):
-            cand = graph[i]
-            kept: list[int] = []
-            for c in cand:
-                xc = X[c]
-                ok = True
-                for kpt in kept:
-                    # prune c if an already-kept neighbor is closer to c
-                    # than i is (c is "occluded")
-                    if np.sum((X[kpt] - xc) ** 2) < np.sum((X[i] - xc) ** 2):
-                        ok = False
-                        break
-                if ok:
-                    kept.append(int(c))
-                if len(kept) == deg:
-                    break
-            while len(kept) < deg:          # refill with originals
-                for c in cand:
-                    if int(c) not in kept:
-                        kept.append(int(c))
-                        break
-            keep[i] = kept[:deg]
-        return keep
-
-    # ---------------------------------------------------------------- query
-    def _dist_to(self, q, ids):
-        x = self._Xj[jnp.maximum(ids, 0)]
-        if self.metric == "angular":
-            d = 1.0 - x @ q
-        else:
-            diff = x - q[None, :]
-            d = jnp.sum(diff * diff, axis=-1)
-        return jnp.where(ids >= 0, d, jnp.inf)
-
-    def _search_one(self, q, *, k: int, ef: int):
-        """Beam search for one query; returns (dists [k], ids [k])."""
-        n_entry = self._entries.shape[0]
-        pool_ids = jnp.full((ef,), -1, jnp.int32)
-        pool_d = jnp.full((ef,), jnp.inf, jnp.float32)
-        pool_exp = jnp.zeros((ef,), bool)
-        e_d = self._dist_to(q, self._entries)
-        ids0 = jnp.concatenate([self._entries, pool_ids])[:ef]
-        d0 = jnp.concatenate([e_d, pool_d])[:ef]
-        order = jnp.argsort(d0)
-        state = (ids0[order], d0[order], pool_exp, jnp.int32(0))
-
-        deg = self._graph.shape[1]
-        max_iter = ef + n_entry
-
-        def cond(state):
-            _, d, exp, it = state
-            has_work = jnp.any(~exp & jnp.isfinite(d))
-            return has_work & (it < max_iter)
-
-        def body(state):
-            ids, d, exp, it = state
-            sel = jnp.argmin(jnp.where(exp, jnp.inf, d))
-            cur = ids[sel]
-            exp = exp.at[sel].set(True)
-            nbrs = self._graph[jnp.maximum(cur, 0)]          # [deg]
-            nbrs = jnp.where(cur >= 0, nbrs, -1)
-            nd = self._dist_to(q, nbrs)
-            # merge pool and neighbors; dedupe by id keeping expanded entries
-            all_ids = jnp.concatenate([ids, nbrs])
-            all_d = jnp.concatenate([d, nd])
-            all_exp = jnp.concatenate([exp, jnp.zeros((deg,), bool)])
-            # dedupe: sort by (id, -expanded); duplicate = same id as prev
-            order = jnp.lexsort((~all_exp, all_ids))
-            si = all_ids[order]
-            sd = all_d[order]
-            se = all_exp[order]
-            prev = jnp.concatenate([jnp.full((1,), -2, si.dtype), si[:-1]])
-            dup = (si == prev) | (si < 0)
-            sd = jnp.where(dup, jnp.inf, sd)
-            si = jnp.where(dup, -1, si)
-            # keep best ef by distance
-            order2 = jnp.argsort(sd)[:ef]
-            return (si[order2], sd[order2], se[order2], it + 1)
-
-        ids, d, _, it = jax.lax.while_loop(cond, body, state)
-        kk = min(k, ef)
-        return d[:kk], ids[:kk], it
-
-    def _batch_search(self, Q, *, k: int, ef: int):
-        Q = Q.astype(jnp.float32)
-        if self.metric == "angular":
-            Q = Q / jnp.maximum(jnp.linalg.norm(Q, axis=1, keepdims=True),
-                                1e-12)
-        return jax.vmap(lambda q: self._search_one(q, k=k, ef=ef))(Q)
-
-    def query(self, q: np.ndarray, k: int) -> np.ndarray:
-        _, ids, it = self._jq(jnp.asarray(q)[None, :], k=k, ef=self.ef)
-        self._expansions += int(it[0])
-        self._dist_comps += int(it[0]) * int(self._graph.shape[1]) + self._entries.shape[0]
-        return np.asarray(ids[0])
-
-    def batch_query(self, Q: np.ndarray, k: int) -> None:
-        outs = []
-        Qj = jnp.asarray(Q)
-        for s in range(0, Q.shape[0], 4096):
-            _, ids, it = self._jq(Qj[s:s + 4096], k=k, ef=self.ef)
-            outs.append(ids)
-            self._expansions += int(jnp.sum(it))
-            self._dist_comps += (int(jnp.sum(it)) * int(self._graph.shape[1])
-                                 + Q.shape[0] * self._entries.shape[0])
-        self._batch_results = jax.block_until_ready(jnp.concatenate(outs))
+    def _postprocess(self, out, Q, k):
+        d, ids, it = out
+        exp = int(jnp.sum(it))
+        self._expansions += exp
+        self._dist_comps += (exp * int(self._state["graph"].shape[1])
+                             + Q.shape[0] * self._state["entries"].shape[0])
+        return d, ids
 
     def get_additional(self):
         return {"dist_comps": self._dist_comps,

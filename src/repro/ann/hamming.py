@@ -16,23 +16,25 @@
                              approximate), matching the paper's observation
                              that MIH parameters strongly affect QPS.
 
-All three share the dense sorted-bucket machinery from the LSH module.
-Points are packed uint32 words; bits = 32 * words.
+All three share the dense sorted-bucket machinery from the LSH module and
+the functional (build -> IndexState, pure search) core.  Points are packed
+uint32 words; bits = 32 * words.
 """
 
 from __future__ import annotations
 
 import itertools
-from functools import partial
 
 import numpy as np
 
 import jax
 import jax.numpy as jnp
 
-from repro.ann.lsh import _SortedBuckets
-from repro.ann.topk import chunked_topk, topk_unique
-from repro.core.interface import BaseANN
+from repro.ann.functional import (FunctionalSpec, IndexState,
+                                  prepare_queries, register_functional)
+from repro.ann.lsh import bucket_lookup, sorted_buckets
+from repro.ann.topk import chunked_topk, topk_smallest, topk_unique
+from repro.core.interface import FunctionalANN
 from repro.core.registry import register
 
 
@@ -58,14 +60,61 @@ def _rerank_chunked(Xj, Q, cand, k: int, block: int):
     return chunked_topk(cand.shape[1], k, block, chunk, unique=True)
 
 
+def _hamming_rerank(state: IndexState, Q, cand, k: int):
+    """Popcount rerank, streaming when the state asks for it."""
+    k = min(k, cand.shape[1])
+    block = state.stat("rerank_block")
+    if state.stat("streaming") and cand.shape[1] > block:
+        return _rerank_chunked(state["X"], Q, cand, k, block)
+    safe = jnp.maximum(cand, 0)
+    x = state["X"][safe]                                   # [b, C, w]
+    xor = jax.lax.bitwise_xor(x, Q[:, None, :].astype(jnp.uint32))
+    d = jnp.sum(jax.lax.population_count(xor), axis=-1).astype(jnp.float32)
+    d = jnp.where(cand >= 0, d, jnp.inf)
+    return topk_unique(d, cand, k)
+
+
+# ------------------------------------------------------- brute force popcount
+def bruteforce_build(X: np.ndarray, *, metric: str = "hamming",
+                     backend: str = "jnp", streaming: bool = False,
+                     corpus_block: int = 65536,
+                     query_block: int = 4096) -> IndexState:
+    X = np.asarray(X, np.uint32)
+    return IndexState("BruteForceHamming", metric, {"X": jnp.asarray(X)}, {
+        "n": int(X.shape[0]), "backend": backend,
+        "streaming": bool(streaming), "corpus_block": int(corpus_block),
+        "query_block": int(query_block),
+    })
+
+
+def bruteforce_search(state: IndexState, Q, *, k: int):
+    Q = prepare_queries(Q, "hamming")
+    k = min(k, state.stat("n"))
+    if state.stat("backend") == "pallas":
+        from repro.kernels.hamming import ops as hops
+
+        return hops.hamming_topk(Q, state["X"], k=k)
+    d = _popcount_matrix(Q, state["X"])
+    return topk_smallest(d.astype(jnp.float32), k)
+
+
+register_functional(FunctionalSpec(
+    name="BruteForceHamming", build=bruteforce_build,
+    search=bruteforce_search, supported_metrics=("hamming",),
+))
+
+
 @register("BruteForceHamming")
-class BruteForceHamming(BaseANN):
+class BruteForceHamming(FunctionalANN):
     supported_metrics = ("hamming",)
+    batch_block = 2048
 
     def __init__(self, metric: str, backend: str = "jnp",
                  streaming: bool = False, corpus_block: int = 65536,
                  query_block: int = 4096):
-        super().__init__(metric)
+        super().__init__(metric, build_params=dict(
+            backend=backend, streaming=bool(streaming),
+            corpus_block=int(corpus_block), query_block=int(query_block)))
         self.backend = backend
         self.streaming = bool(streaming)
         self.corpus_block = int(corpus_block)
@@ -74,50 +123,33 @@ class BruteForceHamming(BaseANN):
         self.name = f"BruteForceHamming(backend={backend}{suffix})"
         self._dist_comps = 0
 
-    def fit(self, X: np.ndarray) -> None:
-        self._X = jnp.asarray(np.asarray(X, np.uint32))
-        self._n = X.shape[0]
-
-        @partial(jax.jit, static_argnames=("k",))
-        def _q(Q, k):
-            d = _popcount_matrix(Q, self._X)
-            neg, idx = jax.lax.top_k(-d, k)
-            return -neg, idx
-
-        self._jq = _q
-
-    def _rebuild(self):
-        @partial(jax.jit, static_argnames=("k",))
-        def _q(Q, k):
-            d = _popcount_matrix(Q, self._X)
-            neg, idx = jax.lax.top_k(-d, k)
-            return -neg, idx
-        self._jq = _q
+    def _sync_state(self):
+        self._n = self._state.stat("n")
 
     def query(self, q, k):
-        _, idx = self._jq(jnp.asarray(q, jnp.uint32)[None, :],
-                          min(k, self._n))
+        out = super().query(q, k)
         self._dist_comps += self._n
-        return np.asarray(idx[0])
+        return out
 
     def _batch_streaming(self, Qj, k):
         """Query-blocked corpus scan: per query block, stream corpus chunks
         through the fused Hamming top-k kernel and merge into a running
         (dist, id) accumulator — O(qblock * k) state, corpus never gathered
         whole."""
+        X = self._state["X"]
         if self.backend == "pallas":
             from repro.kernels.hamming import ops as hops
 
             def corpus_chunk(Qb):
                 def chunk(s, size):
-                    v, i = hops.hamming_topk(Qb, self._X[s:s + size],
+                    v, i = hops.hamming_topk(Qb, X[s:s + size],
                                              k=min(k, size))
                     return v.astype(jnp.float32), i + s
                 return chunk
         else:
             def corpus_chunk(Qb):
                 def chunk(s, size):
-                    d = _popcount_matrix(Qb, self._X[s:s + size])
+                    d = _popcount_matrix(Qb, X[s:s + size])
                     ids = s + jnp.arange(size, dtype=jnp.int32)[None, :]
                     return (d.astype(jnp.float32),
                             jnp.broadcast_to(ids, d.shape))
@@ -132,37 +164,154 @@ class BruteForceHamming(BaseANN):
 
     def batch_query(self, Q, k):
         k = min(k, self._n)
-        Qj = jnp.asarray(np.asarray(Q, np.uint32))
         if self.streaming:
+            Qj = jnp.asarray(np.asarray(Q, np.uint32))
             self._batch_results = jax.block_until_ready(
                 self._batch_streaming(Qj, k))
-        elif self.backend == "pallas":
-            from repro.kernels.hamming import ops as hops
-            _, idx = hops.hamming_topk(Qj, self._X, k=k)
-            self._batch_results = jax.block_until_ready(idx)
+            self._dist_comps += self._n * Q.shape[0]
         else:
-            outs = []
-            for s in range(0, Q.shape[0], 2048):
-                _, idx = self._jq(Qj[s:s + 2048], k)
-                outs.append(idx)
-            self._batch_results = jax.block_until_ready(
-                jnp.concatenate(outs))
-        self._dist_comps += self._n * Q.shape[0]
+            super().batch_query(Q, k)
+            self._dist_comps += self._n * Q.shape[0]
 
     def get_additional(self):
         return {"dist_comps": self._dist_comps}
 
 
+# ------------------------------------------------------- bitsampling forest
+def bitsampling_build(X: np.ndarray, *, metric: str = "hamming",
+                      n_trees: int = 10, leaf_size: int = 32, seed: int = 0,
+                      streaming: bool = False,
+                      rerank_block: int = 4096) -> IndexState:
+    """Annoy-style forest with single-bit splits (host build)."""
+    X = np.asarray(X, np.uint32)
+    n, w = X.shape
+    bits = w * 32
+    n_trees, leaf_size = int(n_trees), int(leaf_size)
+    rng = np.random.default_rng(int(seed))
+    max_depth = int(np.ceil(np.log2(
+        max(2.0, n / max(1, leaf_size))))) + 6
+
+    # Build: split on a random bit with the most even split among a few
+    # tries (data-independent bitsampling, data-guided balance).
+    trees_bits, trees_children, trees_leaves, roots = [], [], [], []
+    host_bit = lambda pts, b: (pts[:, b // 32] >> (b % 32)) & 1  # noqa: E731
+
+    for _ in range(n_trees):
+        node_bits: list[int] = []
+        children: list[list[int]] = []
+        leaves: list[np.ndarray] = []
+
+        def rec(ids: np.ndarray, depth: int) -> int:
+            if len(ids) <= leaf_size or depth >= max_depth:
+                leaves.append(ids)
+                return -len(leaves)
+            best_b, best_bal = None, -1.0
+            for b in rng.integers(0, bits, size=4):
+                side = host_bit(X[ids], int(b)).astype(bool)
+                frac = side.mean()
+                bal = min(frac, 1 - frac)
+                if bal > best_bal:
+                    best_bal, best_b = bal, int(b)
+            side = host_bit(X[ids], best_b).astype(bool)
+            if side.all() or (~side).all():
+                side = rng.random(len(ids)) < 0.5
+            node = len(node_bits)
+            node_bits.append(best_b)
+            children.append([0, 0])
+            left = rec(ids[~side], depth + 1)
+            right = rec(ids[side], depth + 1)
+            children[node] = [left, right]
+            return node
+
+        roots.append(rec(np.arange(n), 0))
+        trees_bits.append(node_bits)
+        trees_children.append(children)
+        trees_leaves.append(leaves)
+
+    T = n_trees
+    max_nodes = max(max(len(b), 1) for b in trees_bits)
+    max_leaves = max(len(lv) for lv in trees_leaves)
+    bits_arr = np.zeros((T, max_nodes), np.int32)
+    child_arr = np.zeros((T, max_nodes, 2), np.int32)
+    leaf_arr = np.full((T, max_leaves, leaf_size), -1, np.int32)
+    for t in range(T):
+        for i, (b, ch) in enumerate(zip(trees_bits[t], trees_children[t])):
+            bits_arr[t, i], child_arr[t, i] = b, ch
+        for li, ids in enumerate(trees_leaves[t]):
+            leaf_arr[t, li, :len(ids)] = ids[:leaf_size]
+    return IndexState("BitsamplingAnnoy", metric, {
+        "X": jnp.asarray(X),
+        "bits": jnp.asarray(bits_arr),
+        "children": jnp.asarray(child_arr),
+        "leaves": jnp.asarray(leaf_arr),
+        "roots": jnp.asarray(np.asarray(roots, np.int32)),
+    }, {"n": n, "w": w, "n_trees": T, "leaf_size": leaf_size,
+        "depth": max_depth, "streaming": bool(streaming),
+        "rerank_block": int(rerank_block)})
+
+
+def _bitsampling_descend(state: IndexState, Q, cur):
+    T = state.stat("n_trees")
+    tree_ids = jnp.arange(T)[None, :]
+    others = []
+    for _ in range(state.stat("depth")):
+        is_leaf = cur < 0
+        node = jnp.maximum(cur, 0)
+        b = state["bits"][tree_ids, node]                  # [bq, T]
+        wsel = jnp.take_along_axis(
+            Q.astype(jnp.uint32), (b // 32).astype(jnp.int32), axis=1)
+        bit = (wsel >> (b % 32).astype(jnp.uint32)) & 1
+        side = bit.astype(jnp.int32)
+        nxt = state["children"][tree_ids, node, side]
+        other = state["children"][tree_ids, node, 1 - side]
+        others.append(jnp.where(is_leaf, cur, other))
+        cur = jnp.where(is_leaf, cur, nxt)
+    return cur, others
+
+
+def bitsampling_search(state: IndexState, Q, *, k: int, probe: int = 1):
+    Q = prepare_queries(Q, "hamming")
+    bq = Q.shape[0]
+    T = state.stat("n_trees")
+    probe = max(1, int(probe))
+    start = jnp.broadcast_to(state["roots"][None, :], (bq, T))
+    leaf, others = _bitsampling_descend(state, Q, start)
+    leaves = [leaf]
+    # probe deepest not-taken branches (bit splits have no margins)
+    for p in range(min(probe - 1, len(others))):
+        alt, _ = _bitsampling_descend(state, Q, others[-(p + 1)])
+        leaves.append(alt)
+    tree_ids = jnp.arange(T)[None, :]
+    cands = []
+    for lf in leaves:
+        lidx = jnp.maximum(-lf - 1, 0)
+        pts = state["leaves"][tree_ids, lidx]
+        pts = jnp.where((lf < 0)[..., None], pts, -1)
+        cands.append(pts.reshape(bq, -1))
+    cand = jnp.concatenate(cands, axis=1)
+    return _hamming_rerank(state, Q, cand, k)
+
+
+register_functional(FunctionalSpec(
+    name="BitsamplingAnnoy", build=bitsampling_build,
+    search=bitsampling_search, query_params=("probe",), query_defaults=(1,),
+    supported_metrics=("hamming",),
+))
+
+
 @register("BitsamplingAnnoy")
-class BitsamplingAnnoy(BaseANN):
+class BitsamplingAnnoy(FunctionalANN):
     """Annoy with bit-sampling splits (paper Q4's 'A (Ham.)' variant)."""
 
     supported_metrics = ("hamming",)
+    batch_block = 2048
 
     def __init__(self, metric: str, n_trees: int = 10, leaf_size: int = 32,
                  seed: int = 0, streaming: bool = False,
                  rerank_block: int = 4096):
-        super().__init__(metric)
+        super().__init__(metric, build_params=dict(
+            n_trees=int(n_trees), leaf_size=int(leaf_size), seed=int(seed),
+            streaming=bool(streaming), rerank_block=int(rerank_block)))
         self.n_trees = int(n_trees)
         self.leaf_size = int(leaf_size)
         self.seed = int(seed)
@@ -174,147 +323,113 @@ class BitsamplingAnnoy(BaseANN):
 
     def set_query_arguments(self, probe: int) -> None:
         self.probe = max(1, int(probe))
-
-    def fit(self, X: np.ndarray) -> None:
-        X = np.asarray(X, np.uint32)
-        self._n, self._w = X.shape
-        bits = self._w * 32
-        self._Xj = jnp.asarray(X)
-        rng = np.random.default_rng(self.seed)
-        max_depth = int(np.ceil(np.log2(
-            max(2.0, self._n / max(1, self.leaf_size))))) + 6
-
-        # Build: split on a random bit with the most even split among a few
-        # tries (data-independent bitsampling, data-guided balance).
-        trees_bits, trees_children, trees_leaves, roots = [], [], [], []
-        host_bit = lambda pts, b: (pts[:, b // 32] >> (b % 32)) & 1
-
-        for _ in range(self.n_trees):
-            node_bits: list[int] = []
-            children: list[list[int]] = []
-            leaves: list[np.ndarray] = []
-
-            def rec(ids: np.ndarray, depth: int) -> int:
-                if len(ids) <= self.leaf_size or depth >= max_depth:
-                    leaves.append(ids)
-                    return -len(leaves)
-                best_b, best_bal = None, -1.0
-                for b in rng.integers(0, bits, size=4):
-                    side = host_bit(X[ids], int(b)).astype(bool)
-                    frac = side.mean()
-                    bal = min(frac, 1 - frac)
-                    if bal > best_bal:
-                        best_bal, best_b = bal, int(b)
-                side = host_bit(X[ids], best_b).astype(bool)
-                if side.all() or (~side).all():
-                    side = rng.random(len(ids)) < 0.5
-                node = len(node_bits)
-                node_bits.append(best_b)
-                children.append([0, 0])
-                left = rec(ids[~side], depth + 1)
-                right = rec(ids[side], depth + 1)
-                children[node] = [left, right]
-                return node
-
-            roots.append(rec(np.arange(self._n), 0))
-            trees_bits.append(node_bits)
-            trees_children.append(children)
-            trees_leaves.append(leaves)
-
-        T = self.n_trees
-        max_nodes = max(max(len(b), 1) for b in trees_bits)
-        max_leaves = max(len(l) for l in trees_leaves)
-        bits_arr = np.zeros((T, max_nodes), np.int32)
-        child_arr = np.zeros((T, max_nodes, 2), np.int32)
-        leaf_arr = np.full((T, max_leaves, self.leaf_size), -1, np.int32)
-        for t in range(T):
-            for i, (b, ch) in enumerate(zip(trees_bits[t], trees_children[t])):
-                bits_arr[t, i], child_arr[t, i] = b, ch
-            for l, ids in enumerate(trees_leaves[t]):
-                leaf_arr[t, l, :len(ids)] = ids[:self.leaf_size]
-        self._bits = jnp.asarray(bits_arr)
-        self._children = jnp.asarray(child_arr)
-        self._leaves = jnp.asarray(leaf_arr)
-        self._roots = jnp.asarray(np.asarray(roots, np.int32))
-        self._depth = max_depth
-        self._rebuild()
-
-    def _rebuild(self):
-        self._jq = jax.jit(self._query_block, static_argnames=("k", "probe"))
-
-    def _descend(self, Q, cur):
-        T = self.n_trees
-        tree_ids = jnp.arange(T)[None, :]
-        others = []
-        for _ in range(self._depth):
-            is_leaf = cur < 0
-            node = jnp.maximum(cur, 0)
-            b = self._bits[tree_ids, node]                     # [bq, T]
-            wsel = jnp.take_along_axis(
-                Q.astype(jnp.uint32), (b // 32).astype(jnp.int32), axis=1)
-            bit = (wsel >> (b % 32).astype(jnp.uint32)) & 1
-            side = bit.astype(jnp.int32)
-            nxt = self._children[tree_ids, node, side]
-            other = self._children[tree_ids, node, 1 - side]
-            others.append(jnp.where(is_leaf, cur, other))
-            cur = jnp.where(is_leaf, cur, nxt)
-        return cur, others
-
-    def _query_block(self, Q, *, k: int, probe: int):
-        bq = Q.shape[0]
-        T = self.n_trees
-        start = jnp.broadcast_to(self._roots[None, :], (bq, T))
-        leaf, others = self._descend(Q, start)
-        leaves = [leaf]
-        # probe deepest not-taken branches (bit splits have no margins)
-        for p in range(min(probe - 1, len(others))):
-            alt, _ = self._descend(Q, others[-(p + 1)])
-            leaves.append(alt)
-        tree_ids = jnp.arange(T)[None, :]
-        cands = []
-        for lf in leaves:
-            lidx = jnp.maximum(-lf - 1, 0)
-            pts = self._leaves[tree_ids, lidx]
-            pts = jnp.where((lf < 0)[..., None], pts, -1)
-            cands.append(pts.reshape(bq, -1))
-        cand = jnp.concatenate(cands, axis=1)
-        if self.streaming and cand.shape[1] > self.rerank_block:
-            return _rerank_chunked(self._Xj, Q, cand, min(k, cand.shape[1]),
-                                   self.rerank_block)
-        safe = jnp.maximum(cand, 0)
-        x = self._Xj[safe]                                     # [bq, C, w]
-        xor = jax.lax.bitwise_xor(x, Q[:, None, :].astype(jnp.uint32))
-        d = jnp.sum(jax.lax.population_count(xor), axis=-1).astype(jnp.float32)
-        d = jnp.where(cand >= 0, d, jnp.inf)
-        return topk_unique(d, cand, min(k, cand.shape[1]))
+        self._qparams["probe"] = self.probe
 
     def query(self, q, k):
-        _, ids = self._jq(jnp.asarray(q, jnp.uint32)[None, :], k=k,
-                          probe=self.probe)
+        out = super().query(q, k)
         self._dist_comps += self.n_trees * self.probe * self.leaf_size
-        return np.asarray(ids[0])
+        return out
 
     def batch_query(self, Q, k):
-        outs = []
-        Qj = jnp.asarray(np.asarray(Q, np.uint32))
-        for s in range(0, Q.shape[0], 2048):
-            _, ids = self._jq(Qj[s:s + 2048], k=k, probe=self.probe)
-            outs.append(ids)
-        self._batch_results = jax.block_until_ready(jnp.concatenate(outs))
+        super().batch_query(Q, k)
         self._dist_comps += Q.shape[0] * self.n_trees * self.probe * self.leaf_size
 
     def get_additional(self):
         return {"dist_comps": self._dist_comps}
 
 
+# ------------------------------------------------------- multi-index hashing
+def mih_build(X: np.ndarray, *, metric: str = "hamming",
+              n_chunks: int = 16, cap: int = 128, seed: int = 0,
+              streaming: bool = False,
+              rerank_block: int = 4096) -> IndexState:
+    X = np.asarray(X, np.uint32)
+    n, w = X.shape
+    bits = w * 32
+    m = int(n_chunks)
+    chunk_bits = bits // m
+    if chunk_bits > 30:
+        raise ValueError("chunk too wide for int32 keys; use more chunks")
+    # chunk substrings as int32 keys, one "table" per chunk
+    keys = np.zeros((m, n), np.int32)
+    unpacked = np.unpackbits(
+        X.view(np.uint8), bitorder="little").reshape(n, bits)
+    bit_weights = 2 ** np.arange(chunk_bits, dtype=np.int32)
+    for c in range(m):
+        seg = unpacked[:, c * chunk_bits:(c + 1) * chunk_bits]
+        keys[c] = seg.astype(np.int64) @ bit_weights
+    tkeys, tids = sorted_buckets(keys)
+    return IndexState("MultiIndexHashing", metric, {
+        "X": jnp.asarray(X), "keys": tkeys, "ids": tids,
+        "bit_weights": jnp.asarray(bit_weights),
+    }, {"n": n, "w": w, "n_chunks": m, "chunk_bits": chunk_bits,
+        "cap": int(cap), "streaming": bool(streaming),
+        "rerank_block": int(rerank_block)})
+
+
+def _mih_query_chunks(state: IndexState, Q):
+    """Q [b, w] uint32 -> chunk keys [b, m] int32 + bits [b, bits]."""
+    bq = Q.shape[0]
+    w = state.stat("w")
+    chunk_bits = state.stat("chunk_bits")
+    bits_total = w * 32
+    words = Q.astype(jnp.uint32)
+    shifts = jnp.arange(32, dtype=jnp.uint32)
+    bits = ((words[:, :, None] >> shifts[None, None, :]) & 1)
+    bits = bits.reshape(bq, bits_total).astype(jnp.int32)
+    bw = state["bit_weights"]
+    keys = [
+        jnp.sum(bits[:, c * chunk_bits:(c + 1) * chunk_bits]
+                * bw[None, :], axis=1)
+        for c in range(state.stat("n_chunks"))
+    ]
+    return jnp.stack(keys, axis=1), bits
+
+
+def mih_search(state: IndexState, Q, *, k: int, radius: int = 0):
+    Q = prepare_queries(Q, "hamming")
+    bq = Q.shape[0]
+    m = state.stat("n_chunks")
+    chunk_bits = state.stat("chunk_bits")
+    base, bits = _mih_query_chunks(state, Q)               # [b, m]
+    # probe keys: all chunk codes within hamming radius <= radius
+    flips: list[tuple[int, ...]] = [()]
+    for r in range(1, int(radius) + 1):
+        flips += list(itertools.combinations(range(chunk_bits), r))
+    probe_keys = []
+    bw = state["bit_weights"]
+    for f in flips:
+        delta = jnp.zeros((bq, m), jnp.int32)
+        for bitpos in f:
+            for c in range(m):
+                qb = bits[:, c * chunk_bits + bitpos]
+                delta = delta.at[:, c].add(
+                    jnp.where(qb > 0, -bw[bitpos], bw[bitpos]))
+        probe_keys.append(base + delta)
+    qkeys = jnp.stack(probe_keys, axis=-1)                 # [b, m, P]
+    cand = bucket_lookup(state["keys"], state["ids"], qkeys,
+                         state.stat("cap"))
+    return _hamming_rerank(state, Q, cand, k)
+
+
+register_functional(FunctionalSpec(
+    name="MultiIndexHashing", build=mih_build, search=mih_search,
+    query_params=("radius",), query_defaults=(0,),
+    supported_metrics=("hamming",),
+))
+
+
 @register("MultiIndexHashing")
-class MultiIndexHashing(BaseANN):
+class MultiIndexHashing(FunctionalANN):
     supported_metrics = ("hamming",)
+    batch_block = 1024
 
     def __init__(self, metric: str, n_chunks: int = 16, cap: int = 128,
                  seed: int = 0, streaming: bool = False,
                  rerank_block: int = 4096):
-        super().__init__(metric)
+        super().__init__(metric, build_params=dict(
+            n_chunks=int(n_chunks), cap=int(cap), seed=int(seed),
+            streaming=bool(streaming), rerank_block=int(rerank_block)))
         self.n_chunks = int(n_chunks)
         self.cap = int(cap)
         self.streaming = bool(streaming)
@@ -325,88 +440,15 @@ class MultiIndexHashing(BaseANN):
 
     def set_query_arguments(self, radius: int) -> None:
         self.radius = int(radius)
-
-    def fit(self, X: np.ndarray) -> None:
-        X = np.asarray(X, np.uint32)
-        self._n, self._w = X.shape
-        bits = self._w * 32
-        m = self.n_chunks
-        self._chunk_bits = bits // m
-        if self._chunk_bits > 30:
-            raise ValueError("chunk too wide for int32 keys; use more chunks")
-        self._Xj = jnp.asarray(X)
-        # chunk substrings as int64 keys, one "table" per chunk
-        keys = np.zeros((m, self._n), np.int32)
-        unpacked = np.unpackbits(
-            X.view(np.uint8), bitorder="little").reshape(self._n, bits)
-        self._bit_weights = 2 ** np.arange(self._chunk_bits, dtype=np.int32)
-        for c in range(m):
-            seg = unpacked[:, c * self._chunk_bits:(c + 1) * self._chunk_bits]
-            keys[c] = seg.astype(np.int64) @ self._bit_weights
-        self._buckets = _SortedBuckets(keys)
-        self._rebuild()
-
-    def _rebuild(self):
-        self._jq = jax.jit(self._query_block, static_argnames=("k", "radius"))
-
-    def _query_chunks(self, Q):
-        """Q [b, w] uint32 -> chunk keys [b, m] int64 + bits [b, bits]."""
-        bq = Q.shape[0]
-        bits_total = self._w * 32
-        words = Q.astype(jnp.uint32)
-        shifts = jnp.arange(32, dtype=jnp.uint32)
-        bits = ((words[:, :, None] >> shifts[None, None, :]) & 1)
-        bits = bits.reshape(bq, bits_total).astype(jnp.int32)
-        w = jnp.asarray(self._bit_weights)
-        keys = [
-            jnp.sum(bits[:, c * self._chunk_bits:(c + 1) * self._chunk_bits]
-                    * w[None, :], axis=1)
-            for c in range(self.n_chunks)
-        ]
-        return jnp.stack(keys, axis=1), bits
-
-    def _query_block(self, Q, *, k: int, radius: int):
-        bq = Q.shape[0]
-        base, bits = self._query_chunks(Q)                 # [b, m]
-        # probe keys: all chunk codes within hamming radius <= radius
-        flips: list[tuple[int, ...]] = [()]
-        for r in range(1, radius + 1):
-            flips += list(itertools.combinations(range(self._chunk_bits), r))
-        probe_keys = []
-        w = jnp.asarray(self._bit_weights)
-        for f in flips:
-            delta = jnp.zeros((bq, self.n_chunks), jnp.int32)
-            for bitpos in f:
-                for c in range(self.n_chunks):
-                    qb = bits[:, c * self._chunk_bits + bitpos]
-                    delta = delta.at[:, c].add(
-                        jnp.where(qb > 0, -w[bitpos], w[bitpos]))
-            probe_keys.append(base + delta)
-        qkeys = jnp.stack(probe_keys, axis=-1)             # [b, m, P]
-        cand = self._buckets.lookup(qkeys, self.cap)
-        if self.streaming and cand.shape[1] > self.rerank_block:
-            return _rerank_chunked(self._Xj, Q, cand, min(k, cand.shape[1]),
-                                   self.rerank_block)
-        safe = jnp.maximum(cand, 0)
-        x = self._Xj[safe]
-        xor = jax.lax.bitwise_xor(x, Q[:, None, :].astype(jnp.uint32))
-        d = jnp.sum(jax.lax.population_count(xor), axis=-1).astype(jnp.float32)
-        d = jnp.where(cand >= 0, d, jnp.inf)
-        return topk_unique(d, cand, min(k, cand.shape[1]))
+        self._qparams["radius"] = self.radius
 
     def query(self, q, k):
-        _, ids = self._jq(jnp.asarray(q, jnp.uint32)[None, :], k=k,
-                          radius=self.radius)
+        out = super().query(q, k)
         self._dist_comps += self.n_chunks * self.cap
-        return np.asarray(ids[0])
+        return out
 
     def batch_query(self, Q, k):
-        outs = []
-        Qj = jnp.asarray(np.asarray(Q, np.uint32))
-        for s in range(0, Q.shape[0], 1024):
-            _, ids = self._jq(Qj[s:s + 1024], k=k, radius=self.radius)
-            outs.append(ids)
-        self._batch_results = jax.block_until_ready(jnp.concatenate(outs))
+        super().batch_query(Q, k)
         self._dist_comps += Q.shape[0] * self.n_chunks * self.cap
 
     def get_additional(self):

@@ -6,9 +6,11 @@ draws a geometric level, greedily descends from the top entry to its
 level, then runs an ef_construction beam search per level, connecting to
 the M closest candidates (with the occlusion heuristic) and trimming
 neighbours to M_max.  Vectorised distance evaluations keep the python
-loop tolerable for the benchmark sizes.
+loop tolerable for the benchmark sizes.  The flattened result is an
+:class:`IndexState` whose ``layers`` entry is a tuple of padded adjacency
+arrays (one per level).
 
-Query (device, jitted): greedy single-entry descent through the upper
+Query (device, jitted, pure): greedy single-entry descent through the upper
 layers (lax.while_loop per layer over padded adjacency arrays) followed by
 an ef beam search on layer 0 — the same TPU-adapted fixed-beam machinery
 as KNNGraph.
@@ -26,17 +28,241 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
-from repro.core.interface import BaseANN
+from repro.ann import distances as D
+from repro.ann.functional import (FunctionalSpec, IndexState, prepare_points,
+                                  prepare_queries, register_functional)
+from repro.core.interface import FunctionalANN
 from repro.core.registry import register
 
 
+# ------------------------------------------------------------- host build
+def _host_dist(X, metric, i, cand):
+    """distances from point i to candidate ids (numpy)."""
+    diff = X[cand] - X[i]
+    if metric == "angular":
+        return 1.0 - X[cand] @ X[i]
+    return np.einsum("nd,nd->n", diff, diff)
+
+
+def _search_layer(X, metric, adj, q_vec, entry, ef):
+    """Beam search on one layer's adjacency dict (host)."""
+    def dist(ids):
+        if metric == "angular":
+            return 1.0 - X[ids] @ q_vec
+        diff = X[ids] - q_vec
+        return np.einsum("nd,nd->n", diff, diff)
+
+    visited = {entry}
+    ed = float(dist(np.array([entry]))[0])
+    cand = [(ed, entry)]                 # min-heap by construction order
+    best = [(ed, entry)]
+    while cand:
+        cand.sort()
+        cd, c = cand.pop(0)
+        best.sort()
+        if cd > best[min(len(best), ef) - 1][0] and len(best) >= ef:
+            break
+        nbrs = [v for v in adj.get(c, []) if v not in visited]
+        if not nbrs:
+            continue
+        visited.update(nbrs)
+        ds = dist(np.array(nbrs))
+        for dv, v in zip(ds, nbrs):
+            worst = best[min(len(best), ef) - 1][0] if len(best) >= ef \
+                else np.inf
+            if dv < worst or len(best) < ef:
+                cand.append((float(dv), v))
+                best.append((float(dv), v))
+                best.sort()
+                if len(best) > ef:
+                    best.pop()
+    return best                           # sorted (dist, id)
+
+
+def _select(X, metric, i, candidates, M):
+    """Occlusion heuristic: keep c unless a kept node is closer to c."""
+    kept: list[int] = []
+    for d_c, c in sorted(candidates):
+        ok = True
+        for kpt in kept:
+            dk = _host_dist(X, metric, c, np.array([kpt]))[0]
+            if dk < d_c:
+                ok = False
+                break
+        if ok:
+            kept.append(c)
+        if len(kept) >= M:
+            break
+    if not kept:
+        kept = [c for _, c in sorted(candidates)[:M]]
+    return kept
+
+
+def build(X: np.ndarray, *, metric: str = "euclidean", M: int = 16,
+          ef_construction: int = 100, seed: int = 0) -> IndexState:
+    X = prepare_points(X, metric)
+    n, dim = X.shape
+    M = int(M)
+    ef_construction = int(ef_construction)
+    rng = np.random.default_rng(int(seed))
+    mL = 1.0 / np.log(max(M, 2))
+    levels = np.minimum(
+        (-np.log(rng.random(n)) * mL).astype(np.int32), 6)
+    adj = [dict() for _ in range(int(levels.max()) + 1)]  # per level
+    entry, entry_level = 0, int(levels[0])
+
+    for i in range(n):
+        li = int(levels[i])
+        if i == 0:
+            for lv in range(li + 1):
+                adj[lv][0] = []
+            continue
+        # greedy descent from the top to li+1
+        cur = entry
+        for lv in range(entry_level, li, -1):
+            improved = True
+            while improved:
+                improved = False
+                nbrs = adj[lv].get(cur, [])
+                if nbrs:
+                    ds = _host_dist(X, metric, i, np.array(nbrs))
+                    j = int(np.argmin(ds))
+                    if ds[j] < _host_dist(X, metric, i,
+                                          np.array([cur]))[0]:
+                        cur = nbrs[j]
+                        improved = True
+        # insert at each level <= li
+        for lv in range(min(li, entry_level), -1, -1):
+            best = _search_layer(X, metric, adj[lv], X[i], cur,
+                                 ef_construction)
+            M_max = M * 2 if lv == 0 else M
+            nbrs = _select(X, metric, i, best, M)
+            adj[lv][i] = list(nbrs)
+            for v in nbrs:
+                lst = adj[lv].setdefault(v, [])
+                lst.append(i)
+                if len(lst) > M_max:      # trim by distance
+                    ds = _host_dist(X, metric, v, np.array(lst))
+                    order = np.argsort(ds)[:M_max]
+                    adj[lv][v] = [lst[o] for o in order]
+            cur = best[0][1]
+        if li > entry_level:
+            entry, entry_level = i, li
+
+    # flatten to padded arrays for the jitted query path
+    layers = []
+    for lv in range(entry_level + 1):
+        M_max = M * 2 if lv == 0 else M
+        arr = np.full((n, M_max), -1, np.int32)
+        for node, lst in adj[lv].items():
+            arr[node, :min(len(lst), M_max)] = lst[:M_max]
+        layers.append(jnp.asarray(arr))
+    return IndexState("HNSW", metric, {
+        "X": jnp.asarray(X), "layers": tuple(layers),
+    }, {"n": n, "d": dim, "M": M, "entry": int(entry),
+        "top": int(entry_level)})
+
+
+# ------------------------------------------------------------ device query
+def _dist_to(state: IndexState, q, ids):
+    return D.masked_rows_to(state["X"], q, ids, state.metric)
+
+
+def _greedy_layer(state, q, cur, adj):
+    """Greedy descent on one upper layer until no improvement."""
+    def cond(st):
+        cur, curd, improved = st
+        return improved
+
+    def body(st):
+        cur, curd, _ = st
+        nbrs = adj[cur]
+        nd = _dist_to(state, q, nbrs)
+        j = jnp.argmin(nd)
+        better = nd[j] < curd
+        return (jnp.where(better, nbrs[j], cur),
+                jnp.where(better, nd[j], curd),
+                better)
+
+    d0 = _dist_to(state, q, jnp.asarray([cur]))[0] if isinstance(cur, int) \
+        else _dist_to(state, q, cur[None])[0]
+    cur = jnp.asarray(cur, jnp.int32)
+    cur, _, _ = jax.lax.while_loop(cond, body, (cur, d0, jnp.bool_(True)))
+    return cur
+
+
+def _beam_layer0(state, q, entry, *, k, ef):
+    """Fixed-beam ef search on layer 0 (same scheme as KNNGraph)."""
+    adj = state["layers"][0]
+    deg = adj.shape[1]
+    ids0 = jnp.full((ef,), -1, jnp.int32).at[0].set(entry)
+    d0 = jnp.full((ef,), jnp.inf, jnp.float32).at[0].set(
+        _dist_to(state, q, entry[None])[0])
+    exp0 = jnp.zeros((ef,), bool)
+    max_iter = ef + 8
+
+    def cond(st):
+        _, d, exp, it = st
+        return jnp.any(~exp & jnp.isfinite(d)) & (it < max_iter)
+
+    def body(st):
+        ids, d, exp, it = st
+        sel = jnp.argmin(jnp.where(exp, jnp.inf, d))
+        cur = ids[sel]
+        exp = exp.at[sel].set(True)
+        nbrs = jnp.where(cur >= 0, adj[jnp.maximum(cur, 0)], -1)
+        nd = _dist_to(state, q, nbrs)
+        all_ids = jnp.concatenate([ids, nbrs])
+        all_d = jnp.concatenate([d, nd])
+        all_exp = jnp.concatenate([exp, jnp.zeros((deg,), bool)])
+        order = jnp.lexsort((~all_exp, all_ids))
+        si, sd, se = all_ids[order], all_d[order], all_exp[order]
+        prev = jnp.concatenate([jnp.full((1,), -2, si.dtype), si[:-1]])
+        dup = (si == prev) | (si < 0)
+        sd = jnp.where(dup, jnp.inf, sd)
+        si = jnp.where(dup, -1, si)
+        order2 = jnp.argsort(sd)[:ef]
+        return (si[order2], sd[order2], se[order2], it + 1)
+
+    ids, d, _, it = jax.lax.while_loop(cond, body, (ids0, d0, exp0,
+                                                    jnp.int32(0)))
+    kk = min(k, ef)
+    return d[:kk], ids[:kk], it
+
+
+def _search_one(state, q, *, k, ef):
+    cur = jnp.int32(state.stat("entry"))
+    for lv in range(state.stat("top"), 0, -1):   # greedy upper layers
+        cur = _greedy_layer(state, q, cur, state["layers"][lv])
+    return _beam_layer0(state, q, cur, k=k, ef=ef)
+
+
+def search_with_stats(state: IndexState, Q, *, k: int, ef: int = 32):
+    """(dists [b, kk], ids [b, kk], layer-0 iterations [b])."""
+    Q = prepare_queries(Q, state.metric)
+    return jax.vmap(lambda q: _search_one(state, q, k=k, ef=int(ef)))(Q)
+
+
+def search(state: IndexState, Q, *, k: int, ef: int = 32):
+    d, ids, _ = search_with_stats(state, Q, k=k, ef=ef)
+    return d, ids
+
+
+SPEC = register_functional(FunctionalSpec(
+    name="HNSW", build=build, search=search,
+    query_params=("ef",), query_defaults=(32,),
+))
+
+
+# ------------------------------------------------------------ legacy class
 @register("HNSW")
-class HNSW(BaseANN):
+class HNSW(FunctionalANN):
     supported_metrics = ("euclidean", "angular")
 
     def __init__(self, metric: str, M: int = 16, ef_construction: int = 100,
                  seed: int = 0):
-        super().__init__(metric)
+        super().__init__(metric, build_params=dict(
+            M=int(M), ef_construction=int(ef_construction), seed=int(seed)))
         self.M = int(M)
         self.ef_construction = int(ef_construction)
         self.seed = int(seed)
@@ -44,233 +270,22 @@ class HNSW(BaseANN):
         self.name = f"HNSW(M={M},efC={ef_construction})"
         self._dist_comps = 0
 
+    def _sync_state(self):
+        self._top = self._state.stat("top")
+        self._entry = self._state.stat("entry")
+
     def set_query_arguments(self, ef: int) -> None:
         self.ef = max(1, int(ef))
+        self._qparams["ef"] = self.ef
 
-    # ---------------------------------------------------------- build utils
-    def _d(self, X, i, cand):
-        """distances from point i to candidate ids (numpy)."""
-        diff = X[cand] - X[i]
-        if self.metric == "angular":
-            return 1.0 - X[cand] @ X[i]
-        return np.einsum("nd,nd->n", diff, diff)
+    def _search_fn(self):
+        return search_with_stats
 
-    def _search_layer(self, X, adj, q_vec, entry, ef):
-        """Beam search on one layer's adjacency dict (host)."""
-        def dist(ids):
-            if self.metric == "angular":
-                return 1.0 - X[ids] @ q_vec
-            diff = X[ids] - q_vec
-            return np.einsum("nd,nd->n", diff, diff)
-
-        visited = {entry}
-        ed = float(dist(np.array([entry]))[0])
-        cand = [(ed, entry)]                 # min-heap by construction order
-        best = [(ed, entry)]
-        while cand:
-            cand.sort()
-            cd, c = cand.pop(0)
-            best.sort()
-            if cd > best[min(len(best), ef) - 1][0] and len(best) >= ef:
-                break
-            nbrs = [v for v in adj.get(c, []) if v not in visited]
-            if not nbrs:
-                continue
-            visited.update(nbrs)
-            ds = dist(np.array(nbrs))
-            for dv, v in zip(ds, nbrs):
-                worst = best[min(len(best), ef) - 1][0] if len(best) >= ef \
-                    else np.inf
-                if dv < worst or len(best) < ef:
-                    cand.append((float(dv), v))
-                    best.append((float(dv), v))
-                    best.sort()
-                    if len(best) > ef:
-                        best.pop()
-        return best                           # sorted (dist, id)
-
-    def _select(self, X, i, candidates, M):
-        """Occlusion heuristic: keep c unless a kept node is closer to c."""
-        kept: list[int] = []
-        for d_c, c in sorted(candidates):
-            ok = True
-            for kpt in kept:
-                dk = self._d(X, c, np.array([kpt]))[0]
-                if dk < d_c:
-                    ok = False
-                    break
-            if ok:
-                kept.append(c)
-            if len(kept) >= M:
-                break
-        if not kept:
-            kept = [c for _, c in sorted(candidates)[:M]]
-        return kept
-
-    # ------------------------------------------------------------------ fit
-    def fit(self, X: np.ndarray) -> None:
-        X = np.asarray(X, np.float32)
-        if self.metric == "angular":
-            X = X / np.maximum(np.linalg.norm(X, axis=1, keepdims=True),
-                               1e-12)
-        self._n, self._dim = X.shape
-        rng = np.random.default_rng(self.seed)
-        mL = 1.0 / np.log(max(self.M, 2))
-        levels = np.minimum(
-            (-np.log(rng.random(self._n)) * mL).astype(np.int32), 6)
-        adj = [dict() for _ in range(int(levels.max()) + 1)]  # per level
-        entry, entry_level = 0, int(levels[0])
-
-        for i in range(self._n):
-            li = int(levels[i])
-            if i == 0:
-                for l in range(li + 1):
-                    adj[l][0] = []
-                continue
-            # greedy descent from the top to li+1
-            cur = entry
-            for l in range(entry_level, li, -1):
-                improved = True
-                while improved:
-                    improved = False
-                    nbrs = adj[l].get(cur, [])
-                    if nbrs:
-                        ds = self._d(X, i, np.array(nbrs))
-                        j = int(np.argmin(ds))
-                        if ds[j] < self._d(X, i, np.array([cur]))[0]:
-                            cur = nbrs[j]
-                            improved = True
-            # insert at each level <= li
-            for l in range(min(li, entry_level), -1, -1):
-                best = self._search_layer(X, adj[l], X[i], cur,
-                                          self.ef_construction)
-                M_max = self.M * 2 if l == 0 else self.M
-                nbrs = self._select(X, i, best, self.M)
-                adj[l][i] = list(nbrs)
-                for v in nbrs:
-                    lst = adj[l].setdefault(v, [])
-                    lst.append(i)
-                    if len(lst) > M_max:      # trim by distance
-                        ds = self._d(X, v, np.array(lst))
-                        order = np.argsort(ds)[:M_max]
-                        adj[l][v] = [lst[o] for o in order]
-                cur = best[0][1]
-            if li > entry_level:
-                entry, entry_level = i, li
-
-        # flatten to padded arrays for the jitted query path
-        self._Xj = jnp.asarray(X)
-        self._entry = int(entry)
-        self._top = entry_level
-        flat = []
-        for l in range(entry_level + 1):
-            M_max = self.M * 2 if l == 0 else self.M
-            arr = np.full((self._n, M_max), -1, np.int32)
-            for node, lst in adj[l].items():
-                arr[node, :min(len(lst), M_max)] = lst[:M_max]
-            flat.append(jnp.asarray(arr))
-        self._layers = flat
-        self._rebuild()
-
-    def _rebuild(self):
-        self._jq = jax.jit(self._batch_search, static_argnames=("k", "ef"))
-
-    # ---------------------------------------------------------------- query
-    def _dist_to(self, q, ids):
-        x = self._Xj[jnp.maximum(ids, 0)]
-        if self.metric == "angular":
-            d = 1.0 - x @ q
-        else:
-            diff = x - q[None, :]
-            d = jnp.sum(diff * diff, axis=-1)
-        return jnp.where(ids >= 0, d, jnp.inf)
-
-    def _greedy_layer(self, q, cur, adj):
-        """Greedy descent on one upper layer until no improvement."""
-        def cond(state):
-            cur, curd, improved = state
-            return improved
-
-        def body(state):
-            cur, curd, _ = state
-            nbrs = adj[cur]
-            nd = self._dist_to(q, nbrs)
-            j = jnp.argmin(nd)
-            better = nd[j] < curd
-            return (jnp.where(better, nbrs[j], cur),
-                    jnp.where(better, nd[j], curd),
-                    better)
-
-        d0 = self._dist_to(q, jnp.asarray([cur]))[0] if isinstance(cur, int) \
-            else self._dist_to(q, cur[None])[0]
-        cur = jnp.asarray(cur, jnp.int32)
-        cur, _, _ = jax.lax.while_loop(cond, body, (cur, d0, jnp.bool_(True)))
-        return cur
-
-    def _beam_layer0(self, q, entry, *, k, ef):
-        """Fixed-beam ef search on layer 0 (same scheme as KNNGraph)."""
-        adj = self._layers[0]
-        deg = adj.shape[1]
-        ids0 = jnp.full((ef,), -1, jnp.int32).at[0].set(entry)
-        d0 = jnp.full((ef,), jnp.inf, jnp.float32).at[0].set(
-            self._dist_to(q, entry[None])[0])
-        exp0 = jnp.zeros((ef,), bool)
-        max_iter = ef + 8
-
-        def cond(state):
-            _, d, exp, it = state
-            return jnp.any(~exp & jnp.isfinite(d)) & (it < max_iter)
-
-        def body(state):
-            ids, d, exp, it = state
-            sel = jnp.argmin(jnp.where(exp, jnp.inf, d))
-            cur = ids[sel]
-            exp = exp.at[sel].set(True)
-            nbrs = jnp.where(cur >= 0, adj[jnp.maximum(cur, 0)], -1)
-            nd = self._dist_to(q, nbrs)
-            all_ids = jnp.concatenate([ids, nbrs])
-            all_d = jnp.concatenate([d, nd])
-            all_exp = jnp.concatenate([exp, jnp.zeros((deg,), bool)])
-            order = jnp.lexsort((~all_exp, all_ids))
-            si, sd, se = all_ids[order], all_d[order], all_exp[order]
-            prev = jnp.concatenate([jnp.full((1,), -2, si.dtype), si[:-1]])
-            dup = (si == prev) | (si < 0)
-            sd = jnp.where(dup, jnp.inf, sd)
-            si = jnp.where(dup, -1, si)
-            order2 = jnp.argsort(sd)[:ef]
-            return (si[order2], sd[order2], se[order2], it + 1)
-
-        ids, d, _, it = jax.lax.while_loop(cond, body, (ids0, d0, exp0,
-                                                        jnp.int32(0)))
-        kk = min(k, ef)
-        return d[:kk], ids[:kk], it
-
-    def _search_one(self, q, *, k, ef):
-        cur = jnp.int32(self._entry)
-        for l in range(self._top, 0, -1):      # greedy through upper layers
-            cur = self._greedy_layer(q, cur, self._layers[l])
-        return self._beam_layer0(q, cur, k=k, ef=ef)
-
-    def _batch_search(self, Q, *, k, ef):
-        Q = Q.astype(jnp.float32)
-        if self.metric == "angular":
-            Q = Q / jnp.maximum(jnp.linalg.norm(Q, axis=1, keepdims=True),
-                                1e-12)
-        return jax.vmap(lambda q: self._search_one(q, k=k, ef=ef))(Q)
-
-    def query(self, q, k):
-        _, ids, it = self._jq(jnp.asarray(q)[None, :], k=k, ef=self.ef)
-        self._dist_comps += int(it[0]) * self._layers[0].shape[1]
-        return np.asarray(ids[0])
-
-    def batch_query(self, Q, k):
-        outs = []
-        Qj = jnp.asarray(np.asarray(Q, np.float32))
-        for s in range(0, Q.shape[0], 4096):
-            _, ids, it = self._jq(Qj[s:s + 4096], k=k, ef=self.ef)
-            outs.append(ids)
-            self._dist_comps += int(jnp.sum(it)) * self._layers[0].shape[1]
-        self._batch_results = jax.block_until_ready(jnp.concatenate(outs))
+    def _postprocess(self, out, Q, k):
+        d, ids, it = out
+        self._dist_comps += int(jnp.sum(it)) * \
+            int(self._state["layers"][0].shape[1])
+        return d, ids
 
     def get_additional(self):
         return {"dist_comps": self._dist_comps, "top_level": self._top}

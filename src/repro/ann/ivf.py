@@ -7,7 +7,17 @@ fixed-size padded window of each probed list with a validity mask — turning
 the CPU's pointer-chasing list scan into dense gathers + masked top-k that
 lower cleanly onto TPU.
 
-Parameters:  n_clusters (build), n_probes (query).
+Functional core: ``build(X, n_clusters=...) -> IndexState`` (host k-means,
+device arrays), ``search(state, Q, k, n_probes, max_probes)`` pure.  The
+query-time knob ``n_probes`` is *traced-or-static*:
+
+  * static (default): ``max_probes=None`` pins the candidate window to
+    ``n_probes`` lists — one trace per probe count (legacy behaviour);
+  * traced: pass a static ``max_probes`` cap and ``n_probes`` may be a
+    runtime value (python int or scalar array) — probes beyond
+    ``n_probes`` are masked out, so ONE trace serves every query-args
+    group up to the cap.  This is what lets the serving engine sweep the
+    recall/QPS knob without recompilation.
 
 Streaming rerank (``streaming=True``): the probed candidate window is
 scanned in fixed ``rerank_block`` chunks folded into a running (dist, id)
@@ -19,26 +29,124 @@ on large corpora at all.
 
 from __future__ import annotations
 
+from typing import Optional
+
 import numpy as np
 
 import jax
 import jax.numpy as jnp
 
 from repro.ann import distances as D
+from repro.ann.functional import (FunctionalSpec, IndexState, prepare_points,
+                                  prepare_queries, register_functional)
 from repro.ann.kmeans import kmeans
 from repro.ann.topk import chunked_topk, topk_with_ids
-from repro.core.interface import BaseANN
+from repro.core.interface import FunctionalANN
 from repro.core.registry import register
 
 
+# --------------------------------------------------------------- functional
+def build(X: np.ndarray, *, metric: str = "euclidean",
+          n_clusters: int = 100, n_iters: int = 10, seed: int = 0,
+          streaming: bool = False, rerank_block: int = 4096) -> IndexState:
+    """Host k-means + cluster-major corpus layout -> device IndexState."""
+    X = prepare_points(X, metric)
+    n, d = X.shape
+    C = min(int(n_clusters), n)
+    centers, assign = kmeans(X, C, n_iters=int(n_iters), seed=int(seed))
+    order = np.argsort(assign, kind="stable")
+    sizes = np.bincount(assign, minlength=C)
+    starts = np.zeros(C + 1, np.int64)
+    np.cumsum(sizes, out=starts[1:])
+    arrays = {
+        "centers": jnp.asarray(centers),
+        "X": jnp.asarray(X[order]),
+        "ids": jnp.asarray(order.astype(np.int32)),
+        "starts": jnp.asarray(starts[:-1].astype(np.int32)),
+        "sizes": jnp.asarray(sizes.astype(np.int32)),
+    }
+    if metric == "euclidean":
+        arrays["xsq"] = jnp.sum(arrays["X"] ** 2, axis=1)
+    return IndexState("IVF", metric, arrays, {
+        "n": n, "d": d, "n_clusters": C, "pad": int(sizes.max()),
+        "streaming": bool(streaming), "rerank_block": int(rerank_block),
+    })
+
+
+def _rerank_chunk(state: IndexState, Q, cand, valid):
+    """Exact (dist, id) for one chunk of the candidate window."""
+    x = state["X"][cand]                                 # [b, c, d]
+    if state.metric == "euclidean":
+        qsq = jnp.sum(Q * Q, axis=1, keepdims=True)
+        cross = jnp.einsum("bnd,bd->bn", x, Q)
+        d = qsq - 2.0 * cross + state["xsq"][cand]
+    else:
+        d = 1.0 - jnp.einsum("bnd,bd->bn", x, Q)
+    d = jnp.where(valid, d, jnp.inf)
+    ids = jnp.where(valid, state["ids"][cand], -1)
+    return d, ids
+
+
+def search(state: IndexState, Q, *, k: int, n_probes=1,
+           max_probes: Optional[int] = None):
+    """Q [b, d] -> (dists [b, kk], ids [b, kk]).  Fully jittable.
+
+    ``max_probes`` (static) sizes the probed-list window; ``n_probes`` may
+    then be traced (see module docstring).  With ``max_probes=None``,
+    ``n_probes`` must be a concrete int and is used as the static window.
+    """
+    C = state.stat("n_clusters")
+    n = state.stat("n")
+    pad = state.stat("pad")
+    if max_probes is None:
+        P = min(int(n_probes), C)
+    else:
+        P = min(int(max_probes), C)
+    Q = prepare_queries(Q, state.metric)
+    # 1. coarse quantizer: the P nearest centroids, probes past n_probes
+    #    masked (traced knob) so one trace serves every probe count <= P
+    cd = D.sq_l2_matrix(Q, state["centers"])             # [b, C]
+    _, probes = jax.lax.top_k(-cd, P)                    # [b, P]
+    probe_live = jnp.arange(P, dtype=jnp.int32) < n_probes       # [P]
+    # 2. padded window gather of each probed list
+    starts = state["starts"][probes]                     # [b, P]
+    sizes = state["sizes"][probes]                       # [b, P]
+    offs = jnp.arange(pad, dtype=jnp.int32)              # [M]
+    cand = starts[..., None] + offs[None, None, :]       # [b, P, M]
+    valid = offs[None, None, :] < sizes[..., None]
+    valid = valid & probe_live[None, :, None]
+    cand = jnp.minimum(cand, n - 1).reshape(Q.shape[0], -1)
+    valid = valid.reshape(Q.shape[0], -1)                # [b, P*M]
+    # 3. exact distances on the candidate set
+    n_cand = cand.shape[1]
+    rerank_block = state.stat("rerank_block")
+    if state.stat("streaming") and n_cand > rerank_block:
+        def chunk(s, size):
+            return _rerank_chunk(state, Q, cand[:, s:s + size],
+                                 valid[:, s:s + size])
+        return chunked_topk(n_cand, min(k, n_cand), rerank_block, chunk)
+    d, ids = _rerank_chunk(state, Q, cand, valid)
+    return topk_with_ids(d, ids, min(k, d.shape[1]))
+
+
+SPEC = register_functional(FunctionalSpec(
+    name="IVF", build=build, search=search,
+    query_params=("n_probes", "max_probes"), query_defaults=(1, None),
+    static_query_params=("n_probes", "max_probes"),
+))
+
+
+# ------------------------------------------------------------ legacy class
 @register("IVF")
-class IVF(BaseANN):
+class IVF(FunctionalANN):
     supported_metrics = ("euclidean", "angular")
 
     def __init__(self, metric: str, n_clusters: int = 100, n_iters: int = 10,
                  seed: int = 0, streaming: bool = False,
                  rerank_block: int = 4096):
-        super().__init__(metric)
+        super().__init__(metric, build_params=dict(
+            n_clusters=int(n_clusters), n_iters=int(n_iters), seed=int(seed),
+            streaming=bool(streaming), rerank_block=int(rerank_block)))
         self.n_clusters = int(n_clusters)
         self.n_iters = int(n_iters)
         self.seed = int(seed)
@@ -49,100 +157,38 @@ class IVF(BaseANN):
         self.name = f"IVF(C={n_clusters}{suffix})"
         self._dist_comps = 0
 
-    # ------------------------------------------------------------------ fit
-    def fit(self, X: np.ndarray) -> None:
-        X = np.asarray(X, np.float32)
-        if self.metric == "angular":
-            X = X / np.maximum(np.linalg.norm(X, axis=1, keepdims=True), 1e-12)
-        self._n, self._d = X.shape
-        C = min(self.n_clusters, self._n)
-        centers, assign = kmeans(X, C, n_iters=self.n_iters, seed=self.seed)
-        order = np.argsort(assign, kind="stable")
-        sizes = np.bincount(assign, minlength=C)
-        starts = np.zeros(C + 1, np.int64)
-        np.cumsum(sizes, out=starts[1:])
-        self._centers = jnp.asarray(centers)
-        self._X = jnp.asarray(X[order])
-        self._ids = jnp.asarray(order.astype(np.int32))
-        self._starts = jnp.asarray(starts[:-1].astype(np.int32))
-        self._sizes = jnp.asarray(sizes.astype(np.int32))
-        self._pad = int(sizes.max())
-        self._sizes_np = sizes
-        self._starts_np = starts
-        if self.metric == "euclidean":
-            self._xsq = jnp.sum(self._X ** 2, axis=1)
-        self._rebuild()
-
-    def _rebuild(self):
-        self._jq = jax.jit(self._query_block, static_argnames=("k", "nprobe"))
+    def _sync_state(self):
+        st = self._state
+        self._n = st.stat("n")
+        self._d = st.stat("d")
+        self._pad = st.stat("pad")
+        self._sizes_np = np.asarray(st["sizes"])
+        self._centers = st["centers"]
 
     def set_query_arguments(self, n_probes: int) -> None:
         self.n_probes = int(n_probes)
+        self._qparams["n_probes"] = min(self.n_probes, self.n_clusters)
 
-    # ---------------------------------------------------------------- query
-    def _query_block(self, Q, *, k: int, nprobe: int):
-        """Q [b, d] -> (dists [b,k], ids [b,k]).  Fully jittable."""
-        Q = Q.astype(jnp.float32)
-        if self.metric == "angular":
-            Q = Q / jnp.maximum(jnp.linalg.norm(Q, axis=1, keepdims=True),
-                                1e-12)
-        # 1. coarse quantizer: nprobe nearest centroids
-        cd = D.sq_l2_matrix(Q, self._centers)            # [b, C]
-        _, probes = jax.lax.top_k(-cd, nprobe)           # [b, P]
-        # 2. padded window gather of each probed list
-        starts = self._starts[probes]                    # [b, P]
-        sizes = self._sizes[probes]                      # [b, P]
-        offs = jnp.arange(self._pad, dtype=jnp.int32)    # [M]
-        cand = starts[..., None] + offs[None, None, :]   # [b, P, M]
-        valid = offs[None, None, :] < sizes[..., None]
-        cand = jnp.minimum(cand, self._n - 1).reshape(Q.shape[0], -1)
-        valid = valid.reshape(Q.shape[0], -1)            # [b, P*M]
-        # 3. exact distances on the candidate set
-        n_cand = cand.shape[1]
-        if self.streaming and n_cand > self.rerank_block:
-            def chunk(s, size):
-                return self._rerank_chunk(Q, cand[:, s:s + size],
-                                          valid[:, s:s + size])
-            return chunked_topk(n_cand, min(k, n_cand),
-                                self.rerank_block, chunk)
-        d, ids = self._rerank_chunk(Q, cand, valid)
-        vals, out_ids = topk_with_ids(d, ids, min(k, d.shape[1]))
-        return vals, out_ids
-
-    def _rerank_chunk(self, Q, cand, valid):
-        """Exact (dist, id) for one chunk of the candidate window."""
-        x = self._X[cand]                                # [b, c, d]
-        if self.metric == "euclidean":
-            qsq = jnp.sum(Q * Q, axis=1, keepdims=True)
-            cross = jnp.einsum("bnd,bd->bn", x, Q)
-            d = qsq - 2.0 * cross + self._xsq[cand]
-        else:
-            d = 1.0 - jnp.einsum("bnd,bd->bn", x, Q)
-        d = jnp.where(valid, d, jnp.inf)
-        ids = jnp.where(valid, self._ids[cand], -1)
-        return d, ids
+    def _batch_block_size(self, k: int) -> int:
+        # block queries so [b, P*M, d] stays bounded
+        nprobe = self._qparams["n_probes"]
+        return max(1, 64_000_000 // max(nprobe * self._pad * self._d, 1))
 
     def query(self, q: np.ndarray, k: int) -> np.ndarray:
-        nprobe = min(self.n_probes, self.n_clusters)
-        _, ids = self._jq(jnp.asarray(q)[None, :], k=k, nprobe=nprobe)
-        self._count_probes(np.asarray(q)[None, :], nprobe)
-        return np.asarray(ids[0])
+        out = super().query(q, k)
+        self._count_probes(np.asarray(q)[None, :])
+        return out
 
     def batch_query(self, Q: np.ndarray, k: int) -> None:
-        nprobe = min(self.n_probes, self.n_clusters)
-        # block queries so [b, P*M, d] stays bounded
-        per_block = max(1, 64_000_000 // max(nprobe * self._pad * self._d, 1))
-        outs = []
-        Qj = jnp.asarray(Q)
-        for s in range(0, Q.shape[0], per_block):
-            _, ids = self._jq(Qj[s:s + per_block], k=k, nprobe=nprobe)
-            outs.append(ids)
-        self._batch_results = jax.block_until_ready(jnp.concatenate(outs))
-        self._count_probes(Q, nprobe)
+        super().batch_query(Q, k)
+        self._count_probes(Q)
 
-    def _count_probes(self, Q, nprobe):
+    def _count_probes(self, Q):
         # distance computations = centroid scan + probed list sizes
-        cd = D.sq_l2_matrix(jnp.asarray(Q, jnp.float32), self._centers)
+        # (clamp to the BUILT cluster count C = min(n_clusters, n), like
+        # the search path does)
+        nprobe = min(self._qparams["n_probes"], int(self._centers.shape[0]))
+        cd = D.sq_l2_matrix(prepare_queries(Q, self.metric), self._centers)
         _, probes = jax.lax.top_k(-cd, nprobe)
         probed = self._sizes_np[np.asarray(probes)].sum()
         self._dist_comps += int(probed) + Q.shape[0] * self._centers.shape[0]

@@ -14,6 +14,11 @@ TPU adaptation: buckets are not pointer-chased.  Each table stores its keys
 sorted (keys[n], ids[n]); a lookup is ``searchsorted`` + a fixed-width
 masked window gather — dense, jittable, batchable.  Window width (``cap``)
 bounds worst-case bucket reads, trading recall for determinism.
+
+Functional core: ``*_build(X, ...) -> IndexState`` carries the hash
+parameters and sorted tables as device arrays; ``*_search(state, Q, k,
+n_probes)`` is pure (the probe count shapes the key tensor, so it is a
+static knob).
 """
 
 from __future__ import annotations
@@ -23,92 +28,228 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
+from repro.ann.functional import (FunctionalSpec, IndexState, prepare_points,
+                                  prepare_queries, register_functional)
 from repro.ann.topk import topk_unique
-from repro.core.interface import BaseANN
+from repro.core.interface import FunctionalANN
 from repro.core.registry import register
 
-
-class _SortedBuckets:
-    """Per-table sorted (key, id) arrays + fixed-window lookup."""
-
-    def __init__(self, keys: np.ndarray):          # [L, n] int64
-        order = np.argsort(keys, axis=1, kind="stable")
-        self.keys = jnp.asarray(np.take_along_axis(keys, order, axis=1))
-        self.ids = jnp.asarray(order.astype(np.int32))
-        self.L, self.n = keys.shape
-
-    def lookup(self, qkeys: jnp.ndarray, cap: int) -> jnp.ndarray:
-        """qkeys [b, L, P] -> candidate ids [b, L*P*cap] (-1 invalid)."""
-        b, L, P = qkeys.shape
-        out = []
-        for t in range(L):                          # unrolled per table
-            kq = qkeys[:, t, :]                     # [b, P]
-            start = jnp.searchsorted(self.keys[t], kq, side="left")
-            offs = jnp.arange(cap, dtype=jnp.int32)
-            pos = jnp.minimum(start[..., None] + offs, self.n - 1)  # [b,P,cap]
-            found = self.keys[t][pos] == kq[..., None]
-            ids = jnp.where(found, self.ids[t][pos], -1)
-            out.append(ids.reshape(b, -1))
-        return jnp.concatenate(out, axis=1)
+_E2_PRIME = (1 << 31) - 1
 
 
-class _LSHBase(BaseANN):
-    def __init__(self, metric: str, n_tables: int, cap: int, seed: int):
-        super().__init__(metric)
+def sorted_buckets(keys: np.ndarray):
+    """Sort per-table (key, id) arrays: keys [L, n] -> (keys, ids) jnp."""
+    order = np.argsort(keys, axis=1, kind="stable")
+    return (jnp.asarray(np.take_along_axis(keys, order, axis=1)),
+            jnp.asarray(order.astype(np.int32)))
+
+
+def bucket_lookup(keys, ids, qkeys: jnp.ndarray, cap: int) -> jnp.ndarray:
+    """qkeys [b, L, P] -> candidate ids [b, L*P*cap] (-1 invalid)."""
+    b, L, P = qkeys.shape
+    n = keys.shape[1]
+    out = []
+    for t in range(L):                          # unrolled per table
+        kq = qkeys[:, t, :]                     # [b, P]
+        start = jnp.searchsorted(keys[t], kq, side="left")
+        offs = jnp.arange(cap, dtype=jnp.int32)
+        pos = jnp.minimum(start[..., None] + offs, n - 1)       # [b,P,cap]
+        found = keys[t][pos] == kq[..., None]
+        cand = jnp.where(found, ids[t][pos], -1)
+        out.append(cand.reshape(b, -1))
+    return jnp.concatenate(out, axis=1)
+
+
+def rerank_candidates(state: IndexState, Q, cand, k: int):
+    """Exact rerank of a [b, C] candidate-id window (float metrics): gather
+    ``state["X"][cand]``, exact distances, -1 ids masked to +inf, top-k with
+    duplicate ids removed.  Shared by the LSH schemes and RPForest."""
+    safe = jnp.maximum(cand, 0)
+    x = state["X"][safe]
+    if state.metric == "angular":
+        d = 1.0 - jnp.einsum("bcd,bd->bc", x, Q)
+    else:
+        diff = x - Q[:, None, :]
+        d = jnp.sum(diff * diff, axis=-1)
+    d = jnp.where(cand >= 0, d, jnp.inf)
+    return topk_unique(d, cand, min(k, cand.shape[1]))
+
+
+# ----------------------------------------------------------- hyperplane LSH
+def hyperplane_build(X: np.ndarray, *, metric: str = "angular",
+                     n_tables: int = 8, n_bits: int = 16, cap: int = 64,
+                     seed: int = 0) -> IndexState:
+    if int(n_bits) > 30:
+        raise ValueError("n_bits must be <= 30 (int32 keys)")
+    X = prepare_points(X, metric)
+    n, d = X.shape
+    rng = np.random.default_rng(int(seed))
+    planes = jnp.asarray(
+        rng.standard_normal((int(n_tables), int(n_bits), d))
+        .astype(np.float32))
+    pow2 = jnp.asarray(2 ** np.arange(int(n_bits), dtype=np.int32))
+    Xj = jnp.asarray(X)
+    proj = jnp.einsum("lbd,nd->lnb", planes, Xj)         # [L, n, b]
+    bits = (proj > 0).astype(jnp.int32)
+    keys = np.asarray(jnp.sum(bits * pow2[None, None, :], axis=-1))
+    tkeys, tids = sorted_buckets(keys)
+    return IndexState("HyperplaneLSH", metric, {
+        "X": Xj, "planes": planes, "pow2": pow2,
+        "keys": tkeys, "ids": tids,
+    }, {"n": n, "d": d, "n_tables": int(n_tables), "n_bits": int(n_bits),
+        "cap": int(cap)})
+
+
+def _hyperplane_probe_keys(state: IndexState, Q, probes: int):
+    planes, pow2 = state["planes"], state["pow2"]
+    n_bits = state.stat("n_bits")
+    proj = jnp.einsum("lbd,qd->qlb", planes, Q)          # [b_q, L, bits]
+    bits = (proj > 0).astype(jnp.int32)
+    base = jnp.sum(bits * pow2[None, None, :], axis=-1)  # [bq, L]
+    keys = [base]
+    if probes > 1:
+        nflip = min(probes - 1, n_bits)
+        _, flip_pos = jax.lax.top_k(-jnp.abs(proj), nflip)       # [bq,L,p]
+        for p in range(nflip):
+            delta = jnp.take_along_axis(
+                jnp.where(bits > 0, -pow2[None, None, :],
+                          pow2[None, None, :]),
+                flip_pos[..., p:p + 1], axis=-1)[..., 0]
+            keys.append(base + delta)
+    return jnp.stack(keys, axis=-1)                      # [bq, L, P]
+
+
+def hyperplane_search(state: IndexState, Q, *, k: int, n_probes: int = 1):
+    Q = prepare_queries(Q, state.metric)
+    qkeys = _hyperplane_probe_keys(state, Q, max(1, int(n_probes)))
+    cand = bucket_lookup(state["keys"], state["ids"], qkeys,
+                         state.stat("cap"))
+    return rerank_candidates(state, Q, cand, k)
+
+
+register_functional(FunctionalSpec(
+    name="HyperplaneLSH", build=hyperplane_build, search=hyperplane_search,
+    query_params=("n_probes",), query_defaults=(1,),
+    supported_metrics=("angular",),
+))
+
+
+# ------------------------------------------------------------------- E2LSH
+def e2lsh_build(X: np.ndarray, *, metric: str = "euclidean",
+                n_tables: int = 8, n_hashes: int = 8, width: float = 4.0,
+                cap: int = 64, seed: int = 0) -> IndexState:
+    # ``width`` is RELATIVE to the dataset's sampled NN-distance scale; an
+    # absolute bucket width would make recall arbitrarily
+    # parameter-sensitive across datasets.
+    Xf = np.asarray(X, np.float32)
+    m = min(256, Xf.shape[0])
+    rng_s = np.random.default_rng(int(seed) + 1)
+    sample = Xf[rng_s.choice(Xf.shape[0], m, replace=False)]
+    d2 = (np.sum(sample**2, 1)[:, None] - 2 * sample @ sample.T
+          + np.sum(sample**2, 1)[None, :])
+    np.fill_diagonal(d2, np.inf)
+    scale = float(np.median(np.sqrt(np.maximum(d2.min(1), 0))))
+
+    X = prepare_points(X, metric)
+    n, d = X.shape
+    w = float(width) * max(scale, 1e-6)
+    rng = np.random.default_rng(int(seed))
+    a = jnp.asarray(rng.standard_normal(
+        (int(n_tables), int(n_hashes), d)).astype(np.float32))
+    b = jnp.asarray(
+        (rng.random((int(n_tables), int(n_hashes))) * w).astype(np.float32))
+    combine = jnp.asarray(rng.integers(
+        1, _E2_PRIME, size=(int(n_tables), int(n_hashes))).astype(np.int32))
+    Xj = jnp.asarray(X)
+    state = IndexState("E2LSH", metric, {
+        "X": Xj, "a": a, "b": b, "combine": combine,
+    }, {"n": n, "d": d, "n_tables": int(n_tables),
+        "n_hashes": int(n_hashes), "cap": int(cap), "w_eff": w})
+    h, _ = _e2_hash(state, Xj)
+    keys = np.asarray(_e2_key(state, h))
+    tkeys, tids = sorted_buckets(keys)
+    return IndexState(state.algo, metric,
+                      dict(state.arrays, keys=tkeys, ids=tids), state.static)
+
+
+def _e2_hash(state: IndexState, X):
+    """[L, n, m] integer hashes + fractional part (for multiprobe)."""
+    proj = (jnp.einsum("lmd,nd->lnm", state["a"], X)
+            + state["b"][:, None, :]) / state.stat("w_eff")
+    return jnp.floor(proj).astype(jnp.int32), proj - jnp.floor(proj)
+
+
+def _e2_key(state: IndexState, h):
+    return jnp.sum(h * state["combine"][:, None, :], axis=-1) % _E2_PRIME
+
+
+def _e2_probe_keys(state: IndexState, Q, probes: int):
+    n_hashes = state.stat("n_hashes")
+    h, frac = _e2_hash(state, Q)                          # [L, bq, m]
+    h = jnp.swapaxes(h, 0, 1)                             # [bq, L, m]
+    frac = jnp.swapaxes(frac, 0, 1)
+    base = jnp.swapaxes(_e2_key(state, jnp.swapaxes(h, 0, 1)), 0, 1)
+    keys = [base]
+    if probes > 1:
+        # boundary distances: +1 costs (1-frac), -1 costs frac
+        cost = jnp.concatenate([frac, 1.0 - frac], axis=-1)       # [bq,L,2m]
+        nprobe = min(probes - 1, 2 * n_hashes)
+        _, pos = jax.lax.top_k(-cost, nprobe)
+        for p in range(nprobe):
+            j = pos[..., p] % n_hashes
+            sign = jnp.where(pos[..., p] < n_hashes, -1, 1)
+            coeff = jnp.take_along_axis(
+                jnp.broadcast_to(state["combine"][None, :, :], h.shape),
+                j[..., None], axis=-1)[..., 0]
+            keys.append((base + sign * coeff) % _E2_PRIME)
+    return jnp.stack(keys, axis=-1)
+
+
+def e2lsh_search(state: IndexState, Q, *, k: int, n_probes: int = 1):
+    Q = prepare_queries(Q, state.metric)
+    qkeys = _e2_probe_keys(state, Q, max(1, int(n_probes)))
+    cand = bucket_lookup(state["keys"], state["ids"], qkeys,
+                         state.stat("cap"))
+    return rerank_candidates(state, Q, cand, k)
+
+
+register_functional(FunctionalSpec(
+    name="E2LSH", build=e2lsh_build, search=e2lsh_search,
+    query_params=("n_probes",), query_defaults=(1,),
+    supported_metrics=("euclidean",),
+))
+
+
+# ------------------------------------------------------------ legacy classes
+class _LSHBase(FunctionalANN):
+    def __init__(self, metric: str, n_tables: int, cap: int, seed: int,
+                 build_params: dict):
+        super().__init__(metric, build_params=build_params)
         self.n_tables = int(n_tables)
         self.cap = int(cap)
         self.seed = int(seed)
         self.n_probes = 1
         self._dist_comps = 0
 
+    def _sync_state(self):
+        self._n = self._state.stat("n")
+        self._d = self._state.stat("d")
+
     def set_query_arguments(self, n_probes: int) -> None:
         self.n_probes = max(1, int(n_probes))
+        self._qparams["n_probes"] = self.n_probes
 
-    # subclasses: _make_hashes(rng, d); _keys(X) -> [L, n]; _probe_keys(Q, P)
-    def fit(self, X: np.ndarray) -> None:
-        X = np.asarray(X, np.float32)
-        if self.metric == "angular":
-            X = X / np.maximum(np.linalg.norm(X, axis=1, keepdims=True), 1e-12)
-        self._n, self._d = X.shape
-        self._Xj = jnp.asarray(X)
-        self._make_hashes(np.random.default_rng(self.seed), self._d)
-        self._buckets = _SortedBuckets(np.asarray(self._keys(self._Xj)))
-        self._rebuild()
-
-    def _rebuild(self):
-        self._jq = jax.jit(self._query_block, static_argnames=("k", "probes"))
-
-    def _query_block(self, Q, *, k: int, probes: int):
-        Q = Q.astype(jnp.float32)
-        if self.metric == "angular":
-            Q = Q / jnp.maximum(jnp.linalg.norm(Q, axis=1, keepdims=True),
-                                1e-12)
-        qkeys = self._probe_keys(Q, probes)          # [b, L, P]
-        cand = self._buckets.lookup(qkeys, self.cap)  # [b, C]
-        safe = jnp.maximum(cand, 0)
-        x = self._Xj[safe]
-        if self.metric == "angular":
-            d = 1.0 - jnp.einsum("bcd,bd->bc", x, Q)
-        else:
-            diff = x - Q[:, None, :]
-            d = jnp.sum(diff * diff, axis=-1)
-        d = jnp.where(cand >= 0, d, jnp.inf)
-        return topk_unique(d, cand, min(k, cand.shape[1]))
+    def _batch_block_size(self, k: int) -> int:
+        return max(1, 32_000_000 // max(
+            self.n_tables * self.n_probes * self.cap * self._d, 1))
 
     def query(self, q: np.ndarray, k: int) -> np.ndarray:
-        _, ids = self._jq(jnp.asarray(q)[None, :], k=k, probes=self.n_probes)
+        out = super().query(q, k)
         self._dist_comps += self.n_tables * self.n_probes * self.cap
-        return np.asarray(ids[0])
+        return out
 
     def batch_query(self, Q: np.ndarray, k: int) -> None:
-        per_block = max(1, 32_000_000 // max(
-            self.n_tables * self.n_probes * self.cap * self._d, 1))
-        outs = []
-        Qj = jnp.asarray(Q)
-        for s in range(0, Q.shape[0], per_block):
-            _, ids = self._jq(Qj[s:s + per_block], k=k, probes=self.n_probes)
-            outs.append(ids)
-        self._batch_results = jax.block_until_ready(jnp.concatenate(outs))
+        super().batch_query(Q, k)
         self._dist_comps += Q.shape[0] * self.n_tables * self.n_probes * self.cap
 
     def get_additional(self):
@@ -121,110 +262,24 @@ class HyperplaneLSH(_LSHBase):
 
     def __init__(self, metric: str, n_tables: int = 8, n_bits: int = 16,
                  cap: int = 64, seed: int = 0):
-        super().__init__(metric, n_tables, cap, seed)
+        super().__init__(metric, n_tables, cap, seed, dict(
+            n_tables=int(n_tables), n_bits=int(n_bits), cap=int(cap),
+            seed=int(seed)))
+        if int(n_bits) > 30:
+            raise ValueError("n_bits must be <= 30 (int32 keys)")
         self.n_bits = int(n_bits)
         self.name = f"HyperplaneLSH(L={n_tables},b={n_bits},cap={cap})"
-
-    def _make_hashes(self, rng, d):
-        if self.n_bits > 30:
-            raise ValueError("n_bits must be <= 30 (int32 keys)")
-        self._planes = jnp.asarray(
-            rng.standard_normal((self.n_tables, self.n_bits, d))
-            .astype(np.float32))
-        self._pow2 = jnp.asarray(2 ** np.arange(self.n_bits, dtype=np.int32))
-
-    def _keys(self, X):
-        proj = jnp.einsum("lbd,nd->lnb", self._planes, X)  # [L, n, b]
-        bits = (proj > 0).astype(jnp.int32)
-        return jnp.sum(bits * self._pow2[None, None, :], axis=-1)
-
-    def _probe_keys(self, Q, probes):
-        proj = jnp.einsum("lbd,qd->qlb", self._planes, Q)  # [b_q, L, bits]
-        bits = (proj > 0).astype(jnp.int32)
-        base = jnp.sum(bits * self._pow2[None, None, :], axis=-1)  # [bq, L]
-        keys = [base]
-        if probes > 1:
-            nflip = min(probes - 1, self.n_bits)
-            _, flip_pos = jax.lax.top_k(-jnp.abs(proj), nflip)     # [bq,L,p]
-            for p in range(nflip):
-                delta = jnp.take_along_axis(
-                    jnp.where(bits > 0, -self._pow2[None, None, :],
-                              self._pow2[None, None, :]),
-                    flip_pos[..., p:p + 1], axis=-1)[..., 0]
-                keys.append(base + delta)
-        return jnp.stack(keys, axis=-1)              # [bq, L, P]
 
 
 @register("E2LSH")
 class E2LSH(_LSHBase):
     supported_metrics = ("euclidean",)
 
-    _PRIME = (1 << 31) - 1
-
     def __init__(self, metric: str, n_tables: int = 8, n_hashes: int = 8,
                  width: float = 4.0, cap: int = 64, seed: int = 0):
-        super().__init__(metric, n_tables, cap, seed)
+        super().__init__(metric, n_tables, cap, seed, dict(
+            n_tables=int(n_tables), n_hashes=int(n_hashes),
+            width=float(width), cap=int(cap), seed=int(seed)))
         self.n_hashes = int(n_hashes)
-        # ``width`` is RELATIVE to the dataset's sampled NN-distance scale
-        # (set in fit); an absolute bucket width w would make recall
-        # arbitrarily parameter-sensitive across datasets.
         self.width = float(width)
         self.name = (f"E2LSH(L={n_tables},m={n_hashes},w={width},cap={cap})")
-
-    def fit(self, X: np.ndarray) -> None:
-        # estimate the NN-distance scale on a subsample (host, cheap)
-        Xf = np.asarray(X, np.float32)
-        m = min(256, Xf.shape[0])
-        rng = np.random.default_rng(self.seed + 1)
-        sample = Xf[rng.choice(Xf.shape[0], m, replace=False)]
-        d2 = (np.sum(sample**2, 1)[:, None] - 2 * sample @ sample.T
-              + np.sum(sample**2, 1)[None, :])
-        np.fill_diagonal(d2, np.inf)
-        self._scale = float(np.median(np.sqrt(np.maximum(d2.min(1), 0))))
-        super().fit(X)
-
-    def _make_hashes(self, rng, d):
-        w = self.width * max(self._scale, 1e-6)
-        self._w_eff = w
-        self._a = jnp.asarray(
-            rng.standard_normal((self.n_tables, self.n_hashes, d))
-            .astype(np.float32))
-        self._b = jnp.asarray(
-            (rng.random((self.n_tables, self.n_hashes)) * w)
-            .astype(np.float32))
-        self._combine = jnp.asarray(rng.integers(
-            1, self._PRIME, size=(self.n_tables, self.n_hashes))
-            .astype(np.int32))
-
-    def _h(self, X):
-        """[L, n, m] integer hashes + fractional part (for multiprobe)."""
-        proj = (jnp.einsum("lmd,nd->lnm", self._a, X)
-                + self._b[:, None, :]) / self._w_eff
-        return jnp.floor(proj).astype(jnp.int32), proj - jnp.floor(proj)
-
-    def _key_of(self, h):
-        return jnp.sum(h * self._combine[:, None, :], axis=-1) % self._PRIME
-
-    def _keys(self, X):
-        h, _ = self._h(X)
-        return self._key_of(h)
-
-    def _probe_keys(self, Q, probes):
-        h, frac = self._h(Q)                          # [L, bq, m]
-        h = jnp.swapaxes(h, 0, 1)                     # [bq, L, m]
-        frac = jnp.swapaxes(frac, 0, 1)
-        base = jnp.swapaxes(self._key_of(jnp.swapaxes(h, 0, 1)), 0, 1)
-        keys = [base]
-        if probes > 1:
-            # boundary distances: +1 costs (1-frac), -1 costs frac
-            cost = jnp.concatenate([frac, 1.0 - frac], axis=-1)   # [bq,L,2m]
-            nprobe = min(probes - 1, 2 * self.n_hashes)
-            _, pos = jax.lax.top_k(-cost, nprobe)
-            for p in range(nprobe):
-                j = pos[..., p] % self.n_hashes
-                sign = jnp.where(pos[..., p] < self.n_hashes, -1, 1)
-                coeff = jnp.take_along_axis(
-                    jnp.broadcast_to(self._combine[None, :, :], h.shape),
-                    j[..., None], axis=-1)[..., 0]
-                keys.append((base + sign * coeff) % self._PRIME)
-        return jnp.stack(keys, axis=-1)

@@ -2,15 +2,16 @@
 
 Build (host, numpy): each tree recursively splits the point set by the
 hyperplane equidistant to two randomly chosen points (Annoy's rule;
-through-origin for angular).  Trees are flattened into dense arrays.
+through-origin for angular).  Trees are flattened into dense arrays in an
+:class:`IndexState`.
 
-Query (device, jitted): Annoy's priority-queue over split margins does not
-vectorise; the TPU adaptation descends every tree once recording |margin| at
-each split, then *backtracks*: the ``probe-1`` smallest-margin split nodes on
-the root paths get their other child descended greedily too ("spill"
-search).  Candidates from all leaves are deduplicated and exactly reranked.
-Recall/QPS is controlled by (n_trees, leaf_size) at build and ``probe`` at
-query — the same knobs as Annoy's (n_trees, search_k).
+Query (device, jitted, pure): Annoy's priority-queue over split margins does
+not vectorise; the TPU adaptation descends every tree once recording
+|margin| at each split, then *backtracks*: the ``probe-1`` smallest-margin
+split nodes on the root paths get their other child descended greedily too
+("spill" search).  Candidates from all leaves are deduplicated and exactly
+reranked.  Recall/QPS is controlled by (n_trees, leaf_size) at build and
+``probe`` at query — the same knobs as Annoy's (n_trees, search_k).
 
 The Hamming-space variant from the paper's Q4 (bitsampling node splits +
 popcount rerank) lives in repro/ann/hamming.py.
@@ -23,8 +24,10 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
-from repro.ann.topk import topk_unique
-from repro.core.interface import BaseANN
+from repro.ann.functional import (FunctionalSpec, IndexState, prepare_points,
+                                  prepare_queries, register_functional)
+from repro.ann.lsh import rerank_candidates
+from repro.core.interface import FunctionalANN
 from repro.core.registry import register
 
 
@@ -68,13 +71,114 @@ class _TreeBuilder:
         return w, 0.0
 
 
+# --------------------------------------------------------------- functional
+def build(X: np.ndarray, *, metric: str = "euclidean", n_trees: int = 10,
+          leaf_size: int = 32, seed: int = 0) -> IndexState:
+    X = prepare_points(X, metric)
+    n, d = X.shape
+    n_trees, leaf_size = int(n_trees), int(leaf_size)
+    rng = np.random.default_rng(int(seed))
+    max_depth = int(np.ceil(np.log2(
+        max(2.0, n / max(1, leaf_size))))) + 4
+
+    trees = []
+    for _ in range(n_trees):
+        tb = _TreeBuilder(X, leaf_size, metric == "angular", rng, max_depth)
+        root = tb.build(np.arange(n))
+        trees.append((tb, root))
+
+    max_nodes = max(max(len(tb.normals), 1) for tb, _ in trees)
+    max_leaves = max(len(tb.leaves) for tb, _ in trees)
+    T = n_trees
+    normals = np.zeros((T, max_nodes, d), np.float32)
+    offsets = np.zeros((T, max_nodes), np.float32)
+    children = np.zeros((T, max_nodes, 2), np.int32)
+    leaf_pts = np.full((T, max_leaves, leaf_size), -1, np.int32)
+    roots = np.zeros((T,), np.int32)
+    for t, (tb, root) in enumerate(trees):
+        roots[t] = root
+        for i, (w, b, ch) in enumerate(
+                zip(tb.normals, tb.offsets, tb.children)):
+            normals[t, i], offsets[t, i], children[t, i] = w, b, ch
+        for li, ids in enumerate(tb.leaves):
+            leaf_pts[t, li, :len(ids)] = ids[:leaf_size]
+    return IndexState("RPForest", metric, {
+        "X": jnp.asarray(X),
+        "normals": jnp.asarray(normals),
+        "offsets": jnp.asarray(offsets),
+        "children": jnp.asarray(children),
+        "leaf_pts": jnp.asarray(leaf_pts),
+        "roots": jnp.asarray(roots),
+    }, {"n": n, "d": d, "n_trees": T, "leaf_size": leaf_size,
+        "max_depth": max_depth})
+
+
+def _descend(state: IndexState, Q, cur):
+    """Greedy descent to leaves.  Q [b,d]; cur [b,T] signed node ids.
+    Returns (leaf [b,T], margins [b,T,D], others [b,T,D])."""
+    T = state.stat("n_trees")
+    tree_ids = jnp.arange(T)[None, :]
+    margins, others = [], []
+    for _ in range(state.stat("max_depth")):
+        is_leaf = cur < 0
+        node = jnp.maximum(cur, 0)
+        w = state["normals"][tree_ids, node]            # [b,T,d]
+        b = state["offsets"][tree_ids, node]
+        m = jnp.einsum("btd,bd->bt", w, Q) - b
+        side = (m > 0).astype(jnp.int32)
+        nxt = state["children"][tree_ids, node, side]
+        other = state["children"][tree_ids, node, 1 - side]
+        margins.append(jnp.where(is_leaf, jnp.inf, jnp.abs(m)))
+        others.append(jnp.where(is_leaf, cur, other))
+        cur = jnp.where(is_leaf, cur, nxt)
+    return cur, jnp.stack(margins, -1), jnp.stack(others, -1)
+
+
+def search(state: IndexState, Q, *, k: int, probe: int = 1):
+    """Spill search over all trees + exact rerank.  Pure and jittable;
+    ``probe`` is static (it shapes the candidate window)."""
+    Q = prepare_queries(Q, state.metric)
+    b = Q.shape[0]
+    T = state.stat("n_trees")
+    probe = max(1, int(probe))
+    start = jnp.broadcast_to(state["roots"][None, :], (b, T))
+    leaf, margins, others = _descend(state, Q, start)
+    leaves = [leaf]
+    if probe > 1:
+        # other-children of the (probe-1) smallest-margin splits
+        nprobe = min(probe - 1, margins.shape[-1])
+        _, pos = jax.lax.top_k(-margins, nprobe)        # [b,T,p]
+        alt = jnp.take_along_axis(others, pos, axis=-1)
+        for p in range(nprobe):
+            alt_leaf, _, _ = _descend(state, Q, alt[..., p])
+            leaves.append(alt_leaf)
+    # gather candidate ids from every visited leaf
+    tree_ids = jnp.arange(T)[None, :]
+    cands = []
+    for lf in leaves:
+        lidx = jnp.maximum(-lf - 1, 0)
+        pts = state["leaf_pts"][tree_ids, lidx]         # [b,T,leaf]
+        pts = jnp.where((lf < 0)[..., None], pts, -1)
+        cands.append(pts.reshape(b, -1))
+    cand = jnp.concatenate(cands, axis=1)               # [b, Tcap]
+    return rerank_candidates(state, Q, cand, k)
+
+
+SPEC = register_functional(FunctionalSpec(
+    name="RPForest", build=build, search=search,
+    query_params=("probe",), query_defaults=(1,),
+))
+
+
+# ------------------------------------------------------------ legacy class
 @register("RPForest")
-class RPForest(BaseANN):
+class RPForest(FunctionalANN):
     supported_metrics = ("euclidean", "angular")
 
     def __init__(self, metric: str, n_trees: int = 10, leaf_size: int = 32,
                  seed: int = 0):
-        super().__init__(metric)
+        super().__init__(metric, build_params=dict(
+            n_trees=int(n_trees), leaf_size=int(leaf_size), seed=int(seed)))
         self.n_trees = int(n_trees)
         self.leaf_size = int(leaf_size)
         self.seed = int(seed)
@@ -82,125 +186,26 @@ class RPForest(BaseANN):
         self.name = f"RPForest(T={n_trees},leaf={leaf_size})"
         self._dist_comps = 0
 
+    def _sync_state(self):
+        self._n = self._state.stat("n")
+        self._d = self._state.stat("d")
+
     def set_query_arguments(self, probe: int) -> None:
         self.probe = max(1, int(probe))
+        self._qparams["probe"] = self.probe
 
-    # ------------------------------------------------------------------ fit
-    def fit(self, X: np.ndarray) -> None:
-        X = np.asarray(X, np.float32)
-        if self.metric == "angular":
-            X = X / np.maximum(np.linalg.norm(X, axis=1, keepdims=True), 1e-12)
-        self._n, self._d = X.shape
-        self._Xj = jnp.asarray(X)
-        rng = np.random.default_rng(self.seed)
-        self._max_depth = int(np.ceil(np.log2(
-            max(2.0, self._n / max(1, self.leaf_size))))) + 4
-
-        trees = []
-        for _ in range(self.n_trees):
-            tb = _TreeBuilder(X, self.leaf_size, self.metric == "angular",
-                              rng, self._max_depth)
-            root = tb.build(np.arange(self._n))
-            trees.append((tb, root))
-
-        max_nodes = max(max(len(tb.normals), 1) for tb, _ in trees)
-        max_leaves = max(len(tb.leaves) for tb, _ in trees)
-        T = self.n_trees
-        normals = np.zeros((T, max_nodes, self._d), np.float32)
-        offsets = np.zeros((T, max_nodes), np.float32)
-        children = np.zeros((T, max_nodes, 2), np.int32)
-        leaf_pts = np.full((T, max_leaves, self.leaf_size), -1, np.int32)
-        roots = np.zeros((T,), np.int32)
-        for t, (tb, root) in enumerate(trees):
-            roots[t] = root
-            for i, (w, b, ch) in enumerate(
-                    zip(tb.normals, tb.offsets, tb.children)):
-                normals[t, i], offsets[t, i], children[t, i] = w, b, ch
-            for l, ids in enumerate(tb.leaves):
-                leaf_pts[t, l, :len(ids)] = ids[:self.leaf_size]
-        self._normals = jnp.asarray(normals)
-        self._offsets = jnp.asarray(offsets)
-        self._children = jnp.asarray(children)
-        self._leaf_pts = jnp.asarray(leaf_pts)
-        self._roots = jnp.asarray(roots)
-        self._rebuild()
-
-    def _rebuild(self):
-        self._jq = jax.jit(self._query_block, static_argnames=("k", "probe"))
-
-    # ---------------------------------------------------------------- query
-    def _descend(self, Q, cur):
-        """Greedy descent to leaves.  Q [b,d]; cur [b,T] signed node ids.
-        Returns (leaf [b,T], margins [b,T,D], others [b,T,D])."""
-        T = self.n_trees
-        tree_ids = jnp.arange(T)[None, :]
-        margins, others = [], []
-        for _ in range(self._max_depth):
-            is_leaf = cur < 0
-            node = jnp.maximum(cur, 0)
-            w = self._normals[tree_ids, node]            # [b,T,d]
-            b = self._offsets[tree_ids, node]
-            m = jnp.einsum("btd,bd->bt", w, Q) - b
-            side = (m > 0).astype(jnp.int32)
-            nxt = self._children[tree_ids, node, side]
-            other = self._children[tree_ids, node, 1 - side]
-            margins.append(jnp.where(is_leaf, jnp.inf, jnp.abs(m)))
-            others.append(jnp.where(is_leaf, cur, other))
-            cur = jnp.where(is_leaf, cur, nxt)
-        return cur, jnp.stack(margins, -1), jnp.stack(others, -1)
-
-    def _query_block(self, Q, *, k: int, probe: int):
-        Q = Q.astype(jnp.float32)
-        if self.metric == "angular":
-            Q = Q / jnp.maximum(jnp.linalg.norm(Q, axis=1, keepdims=True),
-                                1e-12)
-        b = Q.shape[0]
-        T = self.n_trees
-        start = jnp.broadcast_to(self._roots[None, :], (b, T))
-        leaf, margins, others = self._descend(Q, start)
-        leaves = [leaf]
-        if probe > 1:
-            # other-children of the (probe-1) smallest-margin splits
-            nprobe = min(probe - 1, margins.shape[-1])
-            _, pos = jax.lax.top_k(-margins, nprobe)     # [b,T,p]
-            alt = jnp.take_along_axis(others, pos, axis=-1)
-            for p in range(nprobe):
-                alt_leaf, _, _ = self._descend(Q, alt[..., p])
-                leaves.append(alt_leaf)
-        # gather candidate ids from every visited leaf
-        tree_ids = jnp.arange(T)[None, :]
-        cands = []
-        for lf in leaves:
-            lidx = jnp.maximum(-lf - 1, 0)
-            pts = self._leaf_pts[tree_ids, lidx]         # [b,T,leaf]
-            pts = jnp.where((lf < 0)[..., None], pts, -1)
-            cands.append(pts.reshape(b, -1))
-        cand = jnp.concatenate(cands, axis=1)            # [b, Tcap]
-        safe = jnp.maximum(cand, 0)
-        x = self._Xj[safe]                               # [b, C, d]
-        if self.metric == "angular":
-            d = 1.0 - jnp.einsum("bcd,bd->bc", x, Q)
-        else:
-            diff = x - Q[:, None, :]
-            d = jnp.sum(diff * diff, axis=-1)
-        d = jnp.where(cand >= 0, d, jnp.inf)
-        return topk_unique(d, cand, min(k, cand.shape[1]))
+    def _batch_block_size(self, k: int) -> int:
+        return max(1, 32_000_000 //
+                   max(self.n_trees * self.probe * self.leaf_size
+                       * self._d, 1))
 
     def query(self, q: np.ndarray, k: int) -> np.ndarray:
-        _, ids = self._jq(jnp.asarray(q)[None, :], k=k, probe=self.probe)
+        out = super().query(q, k)
         self._dist_comps += self.n_trees * self.probe * self.leaf_size
-        return np.asarray(ids[0])
+        return out
 
     def batch_query(self, Q: np.ndarray, k: int) -> None:
-        per_block = max(1, 32_000_000 //
-                        max(self.n_trees * self.probe * self.leaf_size
-                            * self._d, 1))
-        outs = []
-        Qj = jnp.asarray(Q)
-        for s in range(0, Q.shape[0], per_block):
-            _, ids = self._jq(Qj[s:s + per_block], k=k, probe=self.probe)
-            outs.append(ids)
-        self._batch_results = jax.block_until_ready(jnp.concatenate(outs))
+        super().batch_query(Q, k)
         self._dist_comps += Q.shape[0] * self.n_trees * self.probe * self.leaf_size
 
     def get_additional(self):

@@ -18,11 +18,17 @@ for balance), each shard probes only the lists it owns, and the same
 hierarchical merge applies.  This mirrors FAISS's distributed IVF
 sharding; with nprobe = n_clusters it degenerates to exact sharded brute
 force (tested).
+
+Functional core: the IndexState carries the sharded device arrays plus the
+mesh *recipe* (axis names + shape) in its static dict, so states remain
+pure pytrees and checkpoints stay mesh-portable — ``search`` reconstructs
+(and caches) the shard_map'd top-k function from the recipe, or uses an
+explicitly passed ``mesh``.
 """
 
 from __future__ import annotations
 
-from functools import partial
+import functools
 from typing import Optional, Sequence
 
 import numpy as np
@@ -33,8 +39,10 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 from jax.experimental.shard_map import shard_map
 
 from repro.ann import distances as D
+from repro.ann.functional import (FunctionalSpec, IndexState, prepare_points,
+                                  prepare_queries, register_functional)
 from repro.ann.topk import merge_topk, topk_smallest, topk_with_ids
-from repro.core.interface import BaseANN
+from repro.core.interface import FunctionalANN
 from repro.core.registry import register
 
 
@@ -126,8 +134,117 @@ def make_sharded_topk(mesh: Mesh, shard_axes: Sequence[str], k: int,
     return jax.jit(shmapped)
 
 
+# ------------------------------------------------------------ mesh plumbing
+@functools.lru_cache(maxsize=8)
+def _mesh_for(shape: tuple, axes: tuple) -> Mesh:
+    return jax.make_mesh(shape, axes)
+
+
+def _default_mesh():
+    return jax.make_mesh((jax.device_count(),), ("data",)), ("data",)
+
+
+def _mesh_recipe(mesh: Mesh, axes: tuple) -> dict:
+    return {"shard_axes": axes,
+            "mesh_shape": tuple(int(mesh.shape[a]) for a in axes)}
+
+
+def _resolve_mesh(state: IndexState, mesh: Optional[Mesh]):
+    axes = state.stat("shard_axes")
+    if mesh is None:
+        mesh = _mesh_for(state.stat("mesh_shape"), axes)
+    return mesh, axes
+
+
+# Bounded FIFO cache of compiled shard_map functions.  Module-global so
+# functional callers (Engine, direct search) share executables across
+# IndexStates on the same mesh, but bounded so a long benchmark sweep over
+# many (dataset, k, nprobe) combinations cannot pin compiled programs (and
+# their meshes) for the process lifetime.
+_SHARDED_FNS: dict = {}
+_SHARDED_FNS_MAX = 64
+
+
+def _cached_fn(key, builder):
+    fn = _SHARDED_FNS.get(key)
+    if fn is None:
+        if len(_SHARDED_FNS) >= _SHARDED_FNS_MAX:
+            _SHARDED_FNS.pop(next(iter(_SHARDED_FNS)))
+        fn = _SHARDED_FNS[key] = builder()
+    return fn
+
+
+# ------------------------------------------------- sharded brute force
+def bruteforce_build(X: np.ndarray, *, metric: str = "euclidean",
+                     mesh: Optional[Mesh] = None,
+                     shard_axes: Optional[Sequence[str]] = None,
+                     corpus_block: Optional[int] = None) -> IndexState:
+    if mesh is None:
+        mesh, shard_axes = _default_mesh()
+    axes = tuple(shard_axes or mesh.axis_names)
+    n_shards = int(np.prod([mesh.shape[a] for a in axes]))
+    n = X.shape[0]
+    pad = (-n) % n_shards
+    if metric == "hamming":
+        X = np.asarray(X, np.uint32)
+        Xp = np.concatenate([X, np.zeros((pad,) + X.shape[1:], X.dtype)])
+    else:
+        X = prepare_points(X, metric)
+        # pad with +inf-distance sentinels (ids -1 keep them out)
+        Xp = np.concatenate([X, np.zeros((pad, X.shape[1]), X.dtype)])
+    ids = np.concatenate([np.arange(n, dtype=np.int32),
+                          np.full(pad, -1, np.int32)])
+    xsq = (Xp.astype(np.float32) ** 2).sum(1) if metric == "euclidean" \
+        else np.zeros(len(Xp), np.float32)
+    # sentinel rows must never win: give them infinite norm
+    if pad and metric == "euclidean":
+        xsq[n:] = np.inf
+    spec = NamedSharding(mesh, P(axes))
+    static = {"n": n, "pad": pad, "n_shards": n_shards,
+              "corpus_block": corpus_block}
+    static.update(_mesh_recipe(mesh, axes))
+    return IndexState("ShardedBruteForce", metric, {
+        "X": jax.device_put(Xp, spec),
+        "ids": jax.device_put(ids, spec),
+        "xsq": jax.device_put(xsq, spec),
+    }, static)
+
+
+def _mask_pad(state: IndexState, vals, ids):
+    if state.metric != "euclidean" and state.stat("pad"):
+        # angular/hamming sentinels could win; drop id==-1 entries
+        vals = jnp.where(ids >= 0, vals, jnp.inf)
+        vals, pos = topk_smallest(vals, vals.shape[-1])
+        ids = jnp.take_along_axis(ids, pos, axis=-1)
+    return vals, ids
+
+
+def bruteforce_search(state: IndexState, Q, *, k: int,
+                      mesh: Optional[Mesh] = None):
+    """Exact sharded top-k; the shard_map'd merge tree is rebuilt (and
+    cached) from the state's mesh recipe unless ``mesh`` is given."""
+    mesh, axes = _resolve_mesh(state, mesh)
+    k = min(k, state.stat("n"))
+    block = state.stat("corpus_block")
+    fn = _cached_fn(
+        ("bf", mesh, axes, k, state.metric, block),
+        lambda: make_sharded_topk(mesh, axes, k, state.metric,
+                                  corpus_block=block))
+    Q = prepare_queries(Q, state.metric)
+    vals, ids = fn(Q, state["X"], state["ids"], state["xsq"])
+    return _mask_pad(state, vals, ids)
+
+
+register_functional(FunctionalSpec(
+    name="ShardedBruteForce", build=bruteforce_build,
+    search=bruteforce_search, query_params=(),
+    static_query_params=("mesh",),
+    supported_metrics=("euclidean", "angular", "hamming"),
+))
+
+
 @register("ShardedBruteForce")
-class ShardedBruteForce(BaseANN):
+class ShardedBruteForce(FunctionalANN):
     """Exact brute force over a sharded corpus.  On a 1-device host this
     degenerates to BruteForce; on a mesh it is the multi-pod serving path
     (dry-run: launch/bench_ann.py)."""
@@ -144,79 +261,27 @@ class ShardedBruteForce(BaseANN):
         self.mesh = mesh
         self.shard_axes = tuple(shard_axes or mesh.axis_names)
         self.corpus_block = corpus_block
+        self._build_params = dict(mesh=mesh, shard_axes=self.shard_axes,
+                                  corpus_block=corpus_block)
+        self._qparams = {"mesh": mesh}
         suffix = ",streaming" if corpus_block else ""
         self.name = (f"ShardedBruteForce(axes={','.join(self.shard_axes)}"
                      f"{suffix})")
         self._dist_comps = 0
 
+    def _sync_state(self):
+        self._n = self._state.stat("n")
+
     def _n_shards(self) -> int:
         return int(np.prod([self.mesh.shape[a] for a in self.shard_axes]))
 
-    def fit(self, X: np.ndarray) -> None:
-        n_shards = self._n_shards()
-        n = X.shape[0]
-        pad = (-n) % n_shards
-        if self.metric == "hamming":
-            X = np.asarray(X, np.uint32)
-            Xp = np.concatenate([X, np.zeros((pad,) + X.shape[1:], X.dtype)])
-        else:
-            X = np.asarray(X, np.float32)
-            if self.metric == "angular":
-                X = X / np.maximum(np.linalg.norm(X, axis=1, keepdims=True),
-                                   1e-12)
-            # pad with +inf-distance sentinels (ids -1 keep them out)
-            Xp = np.concatenate([X, np.zeros((pad, X.shape[1]), X.dtype)])
-        ids = np.concatenate([np.arange(n, dtype=np.int32),
-                              np.full(pad, -1, np.int32)])
-        xsq = (Xp.astype(np.float32) ** 2).sum(1) if self.metric == "euclidean" \
-            else np.zeros(len(Xp), np.float32)
-        # sentinel rows must never win: give them infinite norm
-        if pad and self.metric == "euclidean":
-            xsq[n:] = np.inf
-        self._pad = pad
-        self._n = n
-        spec = NamedSharding(self.mesh, P(self.shard_axes))
-        self._X = jax.device_put(Xp, spec)
-        self._ids = jax.device_put(ids, spec)
-        self._xsq = jax.device_put(xsq, spec)
-        self._fns = {}
-
-    def _rebuild(self):
-        self._fns = {}
-
-    def _fn(self, k):
-        if k not in self._fns:
-            self._fns[k] = make_sharded_topk(self.mesh, self.shard_axes, k,
-                                             self.metric,
-                                             corpus_block=self.corpus_block)
-        return self._fns[k]
-
-    def _mask_pad(self, vals, ids):
-        if self.metric != "euclidean" and self._pad:
-            # angular/hamming sentinels could win; drop id==-1 entries
-            vals = jnp.where(ids >= 0, vals, jnp.inf)
-            vals, pos = topk_smallest(vals, vals.shape[-1])
-            ids = jnp.take_along_axis(ids, pos, axis=-1)
-        return vals, ids
-
     def query(self, q: np.ndarray, k: int) -> np.ndarray:
-        dt = jnp.uint32 if self.metric == "hamming" else jnp.float32
-        vals, ids = self._fn(min(k, self._n))(
-            jnp.asarray(q, dt)[None, :], self._X, self._ids, self._xsq)
-        vals, ids = self._mask_pad(vals, ids)
+        out = super().query(q, k)
         self._dist_comps += self._n
-        return np.asarray(ids[0])
+        return out
 
     def batch_query(self, Q: np.ndarray, k: int) -> None:
-        dt = jnp.uint32 if self.metric == "hamming" else jnp.float32
-        fn = self._fn(min(k, self._n))
-        outs = []
-        Qj = jnp.asarray(np.asarray(Q), dt)
-        for s in range(0, Q.shape[0], 4096):
-            vals, ids = fn(Qj[s:s + 4096], self._X, self._ids, self._xsq)
-            _, ids = self._mask_pad(vals, ids)
-            outs.append(ids)
-        self._batch_results = jax.block_until_ready(jnp.concatenate(outs))
+        super().batch_query(Q, k)
         self._dist_comps += self._n * Q.shape[0]
 
     def get_additional(self):
@@ -224,8 +289,126 @@ class ShardedBruteForce(BaseANN):
                 "n_shards": self._n_shards()}
 
 
+# --------------------------------------------------------------- sharded IVF
+def ivf_build(X: np.ndarray, *, metric: str = "euclidean",
+              n_clusters: int = 100, mesh: Optional[Mesh] = None,
+              shard_axes: Optional[Sequence[str]] = None,
+              n_iters: int = 10, seed: int = 0) -> IndexState:
+    from repro.ann.kmeans import kmeans
+
+    if mesh is None:
+        mesh, shard_axes = _default_mesh()
+    axes = tuple(shard_axes or mesh.axis_names)
+    X = prepare_points(X, metric)
+    n, d = X.shape
+    C = min(int(n_clusters), n)
+    centers, assign = kmeans(X, C, n_iters=int(n_iters), seed=int(seed))
+    sizes = np.bincount(assign, minlength=C)
+    S = int(np.prod([mesh.shape[a] for a in axes]))
+    # greedy balance: biggest cluster to currently-lightest shard
+    owner = np.zeros(C, np.int32)
+    load = np.zeros(S, np.int64)
+    for c in np.argsort(-sizes):
+        s = int(np.argmin(load))
+        owner[c] = s
+        load[s] += sizes[c]
+    L = int(load.max()) if S > 0 else 0
+    L = max(L, 1)
+
+    xs = np.zeros((S, L, d), np.float32)
+    ids = np.full((S, L), -1, np.int32)
+    starts = np.zeros((S, C), np.int32)
+    lsizes = np.zeros((S, C), np.int32)
+    cursor = np.zeros(S, np.int64)
+    order = np.argsort(assign, kind="stable")
+    sorted_assign = assign[order]
+    cstart = np.searchsorted(sorted_assign, np.arange(C))
+    for c in range(C):
+        s = owner[c]
+        rows = order[cstart[c]:cstart[c] + sizes[c]]
+        lo = int(cursor[s])
+        starts[s, c] = lo
+        lsizes[s, c] = sizes[c]
+        xs[s, lo:lo + sizes[c]] = X[rows]
+        ids[s, lo:lo + sizes[c]] = rows
+        cursor[s] += sizes[c]
+
+    spec = NamedSharding(mesh, P(axes))
+    static = {"n": n, "d": d, "n_clusters": C, "pad": int(sizes.max()),
+              "n_shards": S}
+    static.update(_mesh_recipe(mesh, axes))
+    return IndexState("ShardedIVF", metric, {
+        "centers": jnp.asarray(centers),
+        "xs": jax.device_put(xs, spec),
+        "ids": jax.device_put(ids, spec),
+        "starts": jax.device_put(starts, spec),
+        "sizes": jax.device_put(lsizes, spec),
+    }, static)
+
+
+def _make_sharded_ivf_fn(mesh: Mesh, axes: tuple, k: int, nprobe: int,
+                         metric: str, M: int):
+    def fn(q, centers, xs, ids, starts, sizes):
+        # local block: xs [1, L, d], ids [1, L], starts/sizes [1, C];
+        # q and the coarse quantizer are replicated
+        x, idl = xs[0], ids[0]
+        st, sz = starts[0], sizes[0]
+        cd = D.sq_l2_matrix(q, centers)
+        _, probes = jax.lax.top_k(-cd, nprobe)          # [b, P]
+        lo = st[probes]                                 # [b, P]
+        ln = sz[probes]
+        offs = jnp.arange(M, dtype=jnp.int32)
+        cand = lo[..., None] + offs[None, None, :]
+        valid = offs[None, None, :] < ln[..., None]
+        cand = jnp.minimum(cand, x.shape[0] - 1).reshape(q.shape[0], -1)
+        valid = valid.reshape(q.shape[0], -1)
+        xc = x[cand]
+        if metric == "euclidean":
+            diff = xc - q[:, None, :]
+            d = jnp.sum(diff * diff, axis=-1)
+        else:
+            d = 1.0 - jnp.einsum("bnd,bd->bn", xc, q)
+        d = jnp.where(valid, d, jnp.inf)
+        out_ids = jnp.where(valid, idl[cand], -1)
+        vals, out_ids = topk_with_ids(d, out_ids, min(k, d.shape[1]))
+        for ax in reversed(axes):
+            vals = jax.lax.all_gather(vals, ax, axis=1, tiled=True)
+            out_ids = jax.lax.all_gather(out_ids, ax, axis=1,
+                                         tiled=True)
+            vals, out_ids = topk_with_ids(vals, out_ids, k)
+        return vals, out_ids
+
+    shmapped = shard_map(
+        fn, mesh=mesh,
+        in_specs=(P(), P(), P(axes), P(axes), P(axes), P(axes)),
+        out_specs=(P(), P()), check_rep=False)
+    return jax.jit(shmapped)
+
+
+def ivf_search(state: IndexState, Q, *, k: int, n_probes: int = 1,
+               mesh: Optional[Mesh] = None):
+    mesh, axes = _resolve_mesh(state, mesh)
+    C = state.stat("n_clusters")
+    nprobe = max(1, min(int(n_probes), C))
+    k = min(k, state.stat("n"))
+    M = state.stat("pad")
+    fn = _cached_fn(
+        ("ivf", mesh, axes, k, nprobe, state.metric, M),
+        lambda: _make_sharded_ivf_fn(mesh, axes, k, nprobe, state.metric, M))
+    Q = prepare_queries(Q, state.metric)
+    return fn(Q, state["centers"], state["xs"], state["ids"],
+              state["starts"], state["sizes"])
+
+
+register_functional(FunctionalSpec(
+    name="ShardedIVF", build=ivf_build, search=ivf_search,
+    query_params=("n_probes",), query_defaults=(1,),
+    static_query_params=("n_probes", "mesh"),
+))
+
+
 @register("ShardedIVF")
-class ShardedIVF(BaseANN):
+class ShardedIVF(FunctionalANN):
     """Distributed IVF: whole inverted lists partitioned across the mesh.
 
     fit(): k-means on the host driver; clusters are assigned to shards
@@ -237,6 +420,7 @@ class ShardedIVF(BaseANN):
     """
 
     supported_metrics = ("euclidean", "angular")
+    batch_block = 2048
 
     def __init__(self, metric: str, n_clusters: int = 100,
                  mesh: Optional[Mesh] = None,
@@ -252,143 +436,36 @@ class ShardedIVF(BaseANN):
         self.n_iters = int(n_iters)
         self.seed = int(seed)
         self.n_probes = 1
+        self._build_params = dict(
+            n_clusters=self.n_clusters, mesh=mesh,
+            shard_axes=self.shard_axes, n_iters=self.n_iters, seed=self.seed)
+        self._qparams = {"n_probes": 1, "mesh": mesh}
         self.name = f"ShardedIVF(C={n_clusters})"
         self._dist_comps = 0
 
-    def set_query_arguments(self, n_probes: int) -> None:
-        self.n_probes = max(1, int(n_probes))
+    def _sync_state(self):
+        self._n = self._state.stat("n")
+        self._pad = self._state.stat("pad")
 
     def _n_shards(self) -> int:
         return int(np.prod([self.mesh.shape[a] for a in self.shard_axes]))
 
-    # ------------------------------------------------------------------ fit
-    def fit(self, X: np.ndarray) -> None:
-        from repro.ann.kmeans import kmeans
-
-        X = np.asarray(X, np.float32)
-        if self.metric == "angular":
-            X = X / np.maximum(np.linalg.norm(X, axis=1, keepdims=True),
-                               1e-12)
-        self._n, self._d = X.shape
-        C = min(self.n_clusters, self._n)
-        centers, assign = kmeans(X, C, n_iters=self.n_iters, seed=self.seed)
-        sizes = np.bincount(assign, minlength=C)
-        S = self._n_shards()
-        # greedy balance: biggest cluster to currently-lightest shard
-        owner = np.zeros(C, np.int32)
-        load = np.zeros(S, np.int64)
-        for c in np.argsort(-sizes):
-            s = int(np.argmin(load))
-            owner[c] = s
-            load[s] += sizes[c]
-        L = int(load.max()) if S > 0 else 0
-        L = max(L, 1)
-
-        xs = np.zeros((S, L, self._d), np.float32)
-        ids = np.full((S, L), -1, np.int32)
-        starts = np.zeros((S, C), np.int32)
-        lsizes = np.zeros((S, C), np.int32)
-        cursor = np.zeros(S, np.int64)
-        order = np.argsort(assign, kind="stable")
-        sorted_assign = assign[order]
-        cstart = np.searchsorted(sorted_assign, np.arange(C))
-        for c in range(C):
-            s = owner[c]
-            rows = order[cstart[c]:cstart[c] + sizes[c]]
-            lo = int(cursor[s])
-            starts[s, c] = lo
-            lsizes[s, c] = sizes[c]
-            xs[s, lo:lo + sizes[c]] = X[rows]
-            ids[s, lo:lo + sizes[c]] = rows
-            cursor[s] += sizes[c]
-
-        spec = NamedSharding(self.mesh, P(self.shard_axes))
-        self._centers = jnp.asarray(centers)
-        self._xs = jax.device_put(xs, spec)
-        self._ids = jax.device_put(ids, spec)
-        self._starts = jax.device_put(starts, spec)
-        self._sizes = jax.device_put(lsizes, spec)
-        self._pad = int(sizes.max())
-        self._sizes_np = sizes
-        self._fns = {}
-
-    def _rebuild(self):
-        self._fns = {}
-
-    def _make_fn(self, k: int, nprobe: int):
-        axes = self.shard_axes
-        metric = self.metric
-        centers = self._centers
-        M = self._pad
-
-        def fn(q, xs, ids, starts, sizes):
-            # local block: xs [1, L, d], ids [1, L], starts/sizes [1, C]
-            x, idl = xs[0], ids[0]
-            st, sz = starts[0], sizes[0]
-            cd = D.sq_l2_matrix(q, centers)
-            _, probes = jax.lax.top_k(-cd, nprobe)          # [b, P]
-            lo = st[probes]                                 # [b, P]
-            ln = sz[probes]
-            offs = jnp.arange(M, dtype=jnp.int32)
-            cand = lo[..., None] + offs[None, None, :]
-            valid = offs[None, None, :] < ln[..., None]
-            cand = jnp.minimum(cand, x.shape[0] - 1).reshape(q.shape[0], -1)
-            valid = valid.reshape(q.shape[0], -1)
-            xc = x[cand]
-            if metric == "euclidean":
-                diff = xc - q[:, None, :]
-                d = jnp.sum(diff * diff, axis=-1)
-            else:
-                d = 1.0 - jnp.einsum("bnd,bd->bn", xc, q)
-            d = jnp.where(valid, d, jnp.inf)
-            out_ids = jnp.where(valid, idl[cand], -1)
-            vals, out_ids = topk_with_ids(d, out_ids, min(k, d.shape[1]))
-            for ax in reversed(axes):
-                vals = jax.lax.all_gather(vals, ax, axis=1, tiled=True)
-                out_ids = jax.lax.all_gather(out_ids, ax, axis=1,
-                                             tiled=True)
-                vals, out_ids = topk_with_ids(vals, out_ids, k)
-            return vals, out_ids
-
-        shmapped = shard_map(
-            fn, mesh=self.mesh,
-            in_specs=(P(), P(axes), P(axes), P(axes), P(axes)),
-            out_specs=(P(), P()), check_rep=False)
-        return jax.jit(shmapped)
-
-    def _fn(self, k, nprobe):
-        key = (k, nprobe)
-        if key not in self._fns:
-            self._fns[key] = self._make_fn(k, nprobe)
-        return self._fns[key]
-
-    def _prep_q(self, Q):
-        Q = jnp.asarray(np.asarray(Q, np.float32))
-        if self.metric == "angular":
-            Q = Q / jnp.maximum(jnp.linalg.norm(Q, axis=1, keepdims=True),
-                                1e-12)
-        return Q
+    def set_query_arguments(self, n_probes: int) -> None:
+        self.n_probes = max(1, int(n_probes))
+        self._qparams["n_probes"] = self.n_probes
 
     def query(self, q: np.ndarray, k: int) -> np.ndarray:
-        nprobe = min(self.n_probes, int(self._centers.shape[0]))
-        fn = self._fn(min(k, self._n), nprobe)
-        _, ids = fn(self._prep_q(np.asarray(q)[None, :]), self._xs,
-                    self._ids, self._starts, self._sizes)
-        self._dist_comps += int(self._centers.shape[0]) + nprobe * self._pad
-        return np.asarray(ids[0])
+        out = super().query(q, k)
+        nprobe = min(self.n_probes, int(self._state["centers"].shape[0]))
+        self._dist_comps += (int(self._state["centers"].shape[0])
+                             + nprobe * self._pad)
+        return out
 
     def batch_query(self, Q: np.ndarray, k: int) -> None:
-        nprobe = min(self.n_probes, int(self._centers.shape[0]))
-        fn = self._fn(min(k, self._n), nprobe)
-        Qj = self._prep_q(Q)
-        outs = []
-        for s in range(0, Q.shape[0], 2048):
-            _, ids = fn(Qj[s:s + 2048], self._xs, self._ids, self._starts,
-                        self._sizes)
-            outs.append(ids)
-        self._batch_results = jax.block_until_ready(jnp.concatenate(outs))
+        super().batch_query(Q, k)
+        nprobe = min(self.n_probes, int(self._state["centers"].shape[0]))
         self._dist_comps += Q.shape[0] * (
-            int(self._centers.shape[0]) + nprobe * self._pad)
+            int(self._state["centers"].shape[0]) + nprobe * self._pad)
 
     def get_additional(self):
         return {"dist_comps": self._dist_comps,

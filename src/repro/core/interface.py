@@ -22,6 +22,14 @@ The interface mirrors ann-benchmarks' wrapper protocol:
                                computations (Table 1's N).
   index_size()              -- size of the built data structure in kB.
   done()                    -- release resources.
+
+Since the functional redesign (repro/ann/functional.py) the protocol above
+is a *compatibility adapter*: the canonical form of every algorithm is a
+pure ``build(X, **params) -> IndexState`` plus ``search(state, Q, k,
+**query_params)`` pair, and :class:`FunctionalANN` maps this interface onto
+that core — ``fit`` builds the pytree state, ``query``/``batch_query`` run
+one jitted search, ``set_query_arguments`` records keyword overrides.  The
+experiment loop, config expansion and registry are unchanged.
 """
 
 from __future__ import annotations
@@ -113,6 +121,108 @@ class BaseANN(abc.ABC):
 
     def __str__(self) -> str:  # pragma: no cover - cosmetic
         return self.name
+
+
+class FunctionalANN(BaseANN):
+    """Generic BaseANN adapter over a functional ``(build, search)`` spec.
+
+    Either construct directly (``FunctionalANN("euclidean", algo="IVF",
+    build_params={"n_clusters": 64})``) or subclass: every built-in
+    algorithm class is a thin subclass that maps its legacy constructor
+    signature onto ``build_params`` and its ``set_query_arguments``
+    positions onto the spec's ``query_params``.
+
+    The built index lives in ``self._state`` (an immutable
+    :class:`repro.ann.functional.IndexState` pytree); the query path is one
+    jitted call of the spec's pure ``search`` shared by ``query`` and
+    ``batch_query``.
+    """
+
+    #: default block size for the blocked batch_query loop.
+    batch_block: int = 4096
+
+    def __init__(self, metric: str, algo: Optional[str] = None,
+                 build_params: Optional[Dict[str, Any]] = None,
+                 query_params: Optional[Dict[str, Any]] = None):
+        from repro.ann.functional import get_functional
+
+        spec = get_functional(algo or type(self).registry_name)
+        self.supported_metrics = spec.supported_metrics
+        super().__init__(metric)
+        self._spec = spec
+        self._build_params = dict(build_params or {})
+        self._qparams = spec.default_query_params()
+        if query_params:
+            self._qparams.update(query_params)
+        self._state = None
+        self._jq = None
+        if algo is not None:
+            self.name = f"Functional({spec.name})"
+
+    # ---------------------------------------------------------------- build
+    def fit(self, X: np.ndarray) -> None:
+        self._state = self._spec.build(X, metric=self.metric,
+                                       **self._build_params)
+        self._sync_state()
+        self._rebuild()
+
+    def _sync_state(self) -> None:
+        """Hook: subclasses mirror host-side attributes from the state."""
+
+    def _rebuild(self) -> None:
+        import jax
+
+        static = ("k",) + tuple(self._spec.static_params)
+        self._jq = jax.jit(self._search_fn(), static_argnames=static)
+
+    def _search_fn(self):
+        """Hook: the pure function to jit (default: the spec's search)."""
+        return self._spec.search
+
+    # ---------------------------------------------------------------- query
+    def set_query_arguments(self, *args: Any) -> None:
+        names = self._spec.query_params
+        if len(args) > len(names):
+            raise TypeError(
+                f"{self._spec.name} takes at most {len(names)} query "
+                f"arguments {names}, got {len(args)}")
+        self._qparams.update(zip(names, args))
+
+    def _postprocess(self, out: Any, Q: Any, k: int):
+        """Hook: raw search output -> (dists, ids); record per-run stats."""
+        return out
+
+    def _run_search(self, Q, k: int):
+        out = self._jq(self._state, Q, k=int(k), **self._qparams)
+        return self._postprocess(out, Q, k)
+
+    def _batch_block_size(self, k: int) -> int:
+        return self.batch_block
+
+    def query(self, q: np.ndarray, k: int) -> np.ndarray:
+        import jax.numpy as jnp
+
+        _, ids = self._run_search(jnp.asarray(q)[None, :], k)
+        return np.asarray(ids[0])
+
+    def batch_query(self, Q: np.ndarray, k: int) -> None:
+        import jax
+        import jax.numpy as jnp
+
+        block = max(1, int(self._batch_block_size(k)))
+        Qj = jnp.asarray(Q)
+        outs = []
+        for s in range(0, Q.shape[0], block):
+            _, ids = self._run_search(Qj[s:s + block], k)
+            outs.append(ids)
+        self._batch_results = jax.block_until_ready(
+            jnp.concatenate(outs, axis=0))
+
+    # ------------------------------------------------------------- metadata
+    def index_size(self) -> float:
+        if self._state is not None:
+            return self._state.nbytes() / 1024.0
+        return super().index_size()
 
 
 def _nbytes(v: Any) -> int:

@@ -69,24 +69,39 @@ class RunRecord:
 _ATOL = 1e-3
 
 
+def recall_from_arrays(distances: np.ndarray, gt_distances: np.ndarray,
+                       count: int, epsilon: float = 0.0,
+                       neighbors: Optional[np.ndarray] = None) -> np.ndarray:
+    """Per-query distance-based (1+eps)-recall from raw arrays (paper §2.1).
+
+    The single recall definition shared by the benchmark results layer
+    (via :func:`recall` / :func:`recall_per_query`) and the serving path
+    (launch/serve, examples/serve_ann, the CI serve-smoke gate) — so
+    serve-time and benchmark-time recall cannot drift.
+
+    ``distances``     [nq, >=count] re-computed distances of the returned
+                      candidates (inf where missing).
+    ``gt_distances``  [nq, >=count] true NN distances, sorted ascending.
+    ``neighbors``     optional [nq, >=count] candidate ids; -1 entries are
+                      treated as missing.
+    """
+    k = int(count)
+    thresholds = gt_distances[:, k - 1]                # [nq]
+    d = distances[:, :k]
+    valid = neighbors[:, :k] >= 0 if neighbors is not None \
+        else np.isfinite(d)
+    within = (d <= (1.0 + epsilon) * thresholds[:, None] + _ATOL) & valid
+    return np.sum(within, axis=1) / k
+
+
 def recall(run: RunRecord, epsilon: float = 0.0) -> float:
     """Mean distance-based (1+eps)-recall over the query set (paper §2.1)."""
-    k = run.count
-    # threshold = distance of the k-th true nearest neighbor, per query
-    thresholds = run.gt_distances[:, k - 1]            # [nq]
-    valid = run.neighbors[:, :k] >= 0                  # [nq, k]
-    d = run.distances[:, :k]
-    within = (d <= (1.0 + epsilon) * thresholds[:, None] + _ATOL) & valid
-    return float(np.mean(np.sum(within, axis=1) / k))
+    return float(np.mean(recall_per_query(run, epsilon)))
 
 
 def recall_per_query(run: RunRecord, epsilon: float = 0.0) -> np.ndarray:
-    k = run.count
-    thresholds = run.gt_distances[:, k - 1]
-    valid = run.neighbors[:, :k] >= 0
-    within = (run.distances[:, :k]
-              <= (1.0 + epsilon) * thresholds[:, None] + _ATOL) & valid
-    return np.sum(within, axis=1) / k
+    return recall_from_arrays(run.distances, run.gt_distances, run.count,
+                              epsilon, neighbors=run.neighbors)
 
 
 def set_recall(run: RunRecord) -> float:

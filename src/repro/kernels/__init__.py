@@ -9,11 +9,11 @@ Each kernel lives in its own subpackage with three files:
 
 Kernels:
     distance/      tiled L2/IP/cosine distance matrix (MXU matmul + epilogue)
-    topk_scan/     fused distance + running top-k corpus scan (never
-                   materialises the full distance matrix in HBM)
     distance_topk/ streaming fused distance + top-k: VMEM-scratch top-k
                    accumulators, d-tiling, and query-block streaming so
                    nq and n are both unbounded by HBM (O(nq*k) output)
+    topk_scan/     RETIRED — deprecation shim re-exporting distance_topk
+                   under the old names
     hamming/       XOR + popcount distances over packed uint32 codes
     embedbag/      embedding-bag gather-reduce (recsys hot path)
     decode_attn/   single-token decode attention with online softmax

@@ -4,8 +4,8 @@ The paper's Q4 finding (Hamming-aware implementations are 2-3x faster) rests
 on popcount distance computation.  TPU mapping: codes live as uint32 lanes;
 a (bq, bn) tile XORs query and corpus words broadcast in VMEM and reduces
 with the VPU's population_count — no MXU involvement, entirely
-bandwidth/VPU bound.  Top-k selection reuses the scan-merge from
-topk_scan (k rounds of min/argmin per tile).
+bandwidth/VPU bound.  Top-k selection reuses the shared scan-merge helper
+from the streaming kernel (k rounds of min/argmin per tile).
 
 Grid: (nq/bq, n/bn), corpus axis sequential.
 """
@@ -21,7 +21,8 @@ from jax.experimental.pallas import tpu as pltpu
 
 from repro.kernels import tpu_compiler_params
 
-from repro.kernels.topk_scan.topk_scan import _merge_topk_rounds, NEG_ONE
+from repro.kernels.distance_topk.distance_topk import (NEG_ONE,
+                                                       merge_topk_rounds)
 
 
 def _hamming_kernel(q_ref, x_ref, nvalid_ref, vals_ref, idx_ref, *,
@@ -45,7 +46,7 @@ def _hamming_kernel(q_ref, x_ref, nvalid_ref, vals_ref, idx_ref, *,
 
     cand_d = jnp.concatenate([vals_ref[...], d], axis=1)
     cand_i = jnp.concatenate([idx_ref[...], ids], axis=1)
-    out_d, out_i = _merge_topk_rounds(cand_d, cand_i, k)
+    out_d, out_i = merge_topk_rounds(cand_d, cand_i, k)
     vals_ref[...] = out_d
     idx_ref[...] = out_i
 

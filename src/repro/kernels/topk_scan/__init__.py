@@ -1,4 +1,47 @@
-from repro.kernels.topk_scan.ops import distance_topk
-from repro.kernels.topk_scan.ref import distance_topk_ref
+"""DEPRECATED shim — ``topk_scan`` is retired (ROADMAP open item).
 
-__all__ = ["distance_topk", "distance_topk_ref"]
+The old fused scan kernel round-tripped its running top-k state through the
+output VMEM tiles every corpus step; ``kernels/distance_topk`` supersedes it
+(VMEM-scratch accumulators, tiled contraction dim, in-kernel sentinel
+masking, query-block streaming) and is exact on the same contract.  This
+package now only re-exports the streaming implementation under the old
+names so downstream imports keep working one release longer:
+
+    distance_topk(...)    -> distance_topk.stream_topk (emits
+                             DeprecationWarning)
+    distance_topk_ref(...)-> distance_topk.stream_topk_ref
+    merge_topk_rounds     -> the shared in-kernel top-k merge helper
+                             (canonical home: distance_topk.distance_topk)
+"""
+
+from __future__ import annotations
+
+import warnings
+
+from repro.kernels.distance_topk import stream_topk, stream_topk_ref
+from repro.kernels.distance_topk.distance_topk import (NEG_ONE,
+                                                       merge_topk_rounds)
+
+# legacy private alias (pre-retirement name used by kernel callers)
+_merge_topk_rounds = merge_topk_rounds
+
+
+def distance_topk(Q, X, *, k: int, metric: str = "euclidean",
+                  bq: int | None = None, bn: int | None = None,
+                  interpret: bool | None = None):
+    """Deprecated alias for :func:`repro.kernels.distance_topk.stream_topk`."""
+    warnings.warn(
+        "repro.kernels.topk_scan is deprecated; call "
+        "repro.kernels.distance_topk.stream_topk instead",
+        DeprecationWarning, stacklevel=2)
+    return stream_topk(Q, X, k=k, metric=metric, bq=bq, bn=bn,
+                       interpret=interpret)
+
+
+def distance_topk_ref(Q, X, *, k: int, mode: str = "l2sq"):
+    """Deprecated alias for stream_topk_ref (same oracle)."""
+    return stream_topk_ref(Q, X, k=k, mode=mode)
+
+
+__all__ = ["distance_topk", "distance_topk_ref", "merge_topk_rounds",
+           "NEG_ONE"]

@@ -1,80 +1,35 @@
-"""ANN serving launcher: build an index over a dataset and serve batched
-query streams, reporting the paper's metrics (recall vs QPS) live.
+"""ANN serving launcher: build a functional index over a dataset and serve
+micro-batched query streams through the Engine, reporting the paper's
+metrics (recall vs QPS) live.
 
     PYTHONPATH=src python -m repro.launch.serve --dataset blobs-euclidean-20000 \
-        --algorithm IVF --args 64 --query-args 8 --batch-size 512
+        --algorithm IVF --build n_clusters=64 --query n_probes=8 \
+        --batch-size 512
 
-This is the "production" face of the benchmark framework: the same
-BaseANN implementations behind the experiment loop serve request batches,
-with index checkpointing (save/load) so restarts skip the build phase.
+This is the "production" face of the benchmark framework: the same pure
+``search`` functions behind the experiment loop serve request batches from
+one jitted trace (fixed padded batch shape — no retrace per request size),
+with pytree index checkpointing (``--index-cache``) so restarts skip the
+build phase.  Recall is routed through ``core.metrics.recall_from_arrays``
+— the exact definition the benchmark results layer uses — so serve-time
+and benchmark-time recall cannot drift.
+
+Legacy positional ``--args``/``--query-args`` are still accepted and mapped
+through the functional spec's parameter names.
 """
 
 from __future__ import annotations
 
 import argparse
-import pickle
 import time
-from pathlib import Path
 
 import numpy as np
 
-from repro.core.registry import resolve
+from repro.ann import distances as D
+from repro.ann.functional import get_functional
+from repro.core.metrics import recall_from_arrays
 from repro.data import get_dataset
-
-
-def main(argv=None):
-    p = argparse.ArgumentParser()
-    p.add_argument("--dataset", default="blobs-euclidean-20000")
-    p.add_argument("--algorithm", default="IVF")
-    p.add_argument("--args", nargs="*", default=[])
-    p.add_argument("--query-args", nargs="*", default=[])
-    p.add_argument("--count", type=int, default=10)
-    p.add_argument("--batch-size", type=int, default=256)
-    p.add_argument("--n-batches", type=int, default=8)
-    p.add_argument("--index-cache", default=None)
-    args = p.parse_args(argv)
-
-    ds = get_dataset(args.dataset)
-    cls = resolve(args.algorithm)
-    ctor_args = [_coerce(a) for a in args.args]
-    algo = cls(ds.metric, *ctor_args)
-
-    cache = Path(args.index_cache) if args.index_cache else None
-    if cache and cache.exists():
-        algo = pickle.loads(cache.read_bytes())
-        print(f"[serve] restored index from {cache}")
-    else:
-        t0 = time.perf_counter()
-        algo.fit(ds.train)
-        print(f"[serve] built index in {time.perf_counter() - t0:.2f}s "
-              f"({algo.index_size():.0f} kB)")
-        if cache:
-            cache.write_bytes(pickle.dumps(algo))
-
-    if args.query_args:
-        algo.set_query_arguments(*[_coerce(a) for a in args.query_args])
-
-    rng = np.random.default_rng(0)
-    total_q, total_t = 0, 0.0
-    for b in range(args.n_batches):
-        idx = rng.integers(0, len(ds.test), args.batch_size)
-        Q = ds.test[idx]
-        t0 = time.perf_counter()
-        algo.batch_query(Q, args.count)
-        dt = time.perf_counter() - t0
-        res = algo.get_batch_results()
-        # recall against ground truth for the sampled queries
-        thr = ds.distances[idx, args.count - 1]
-        from repro.ann import distances as D
-        dists = D.pairwise_rows(Q, ds.train, res[:, :args.count], ds.metric)
-        rec = float(np.mean(np.sum(
-            dists <= thr[:, None] + 1e-3, axis=1) / args.count))
-        total_q += len(Q)
-        total_t += dt
-        print(f"  batch {b}: {len(Q) / dt:9.0f} QPS  recall@{args.count} "
-              f"= {rec:.3f}")
-    print(f"[serve] aggregate {total_q / total_t:.0f} QPS over "
-          f"{total_q} queries")
+from repro.serve import CheckpointError, Engine
 
 
 def _coerce(a: str):
@@ -84,7 +39,122 @@ def _coerce(a: str):
         try:
             return float(a)
         except ValueError:
+            if a in ("True", "true"):
+                return True
+            if a in ("False", "false"):
+                return False
             return a
+
+
+def _kv(pairs):
+    """["n_clusters=64", ...] -> {"n_clusters": 64, ...}"""
+    out = {}
+    for p in pairs:
+        key, _, value = p.partition("=")
+        if not _:
+            raise SystemExit(f"expected key=value, got {p!r}")
+        out[key] = _coerce(value)
+    return out
+
+
+def build_or_restore(args, ds) -> Engine:
+    spec = get_functional(args.algorithm)
+    if args.index_cache:
+        try:
+            eng = Engine.load(args.index_cache, k=args.count,
+                              batch_size=args.batch_size)
+            if eng.state.algo != spec.name:
+                raise CheckpointError(
+                    f"cache holds {eng.state.algo}, requested {spec.name}")
+            print(f"[serve] restored {eng.state.algo} index from "
+                  f"{args.index_cache} ({eng.index_size_kb():.0f} kB)")
+            return eng
+        except CheckpointError as e:
+            print(f"[serve] cache miss ({e}); building")
+    build_params = _kv(args.build)
+    # legacy positional --args map onto nothing structured; accept the old
+    # IVF/LSH convention of a single leading int = first build knob
+    for value, name in zip([_coerce(a) for a in args.args],
+                           _positional_build_names(spec)):
+        build_params.setdefault(name, value)
+    t0 = time.perf_counter()
+    eng = Engine.build(spec.name, ds.train, metric=ds.metric,
+                       build_params=build_params, k=args.count,
+                       batch_size=args.batch_size)
+    print(f"[serve] built {spec.name} index in "
+          f"{time.perf_counter() - t0:.2f}s ({eng.index_size_kb():.0f} kB)")
+    if args.index_cache:
+        eng.save(args.index_cache)
+        print(f"[serve] checkpointed to {args.index_cache}")
+    return eng
+
+
+def _positional_build_names(spec):
+    """Build-knob order for the legacy positional --args form."""
+    import inspect
+
+    sig = inspect.signature(spec.build)
+    return [name for name, p in sig.parameters.items()
+            if p.kind == p.KEYWORD_ONLY and name != "metric"]
+
+
+def main(argv=None):
+    p = argparse.ArgumentParser()
+    p.add_argument("--dataset", default="blobs-euclidean-20000")
+    p.add_argument("--algorithm", default="IVF")
+    p.add_argument("--args", nargs="*", default=[],
+                   help="legacy positional build args")
+    p.add_argument("--query-args", nargs="*", default=[],
+                   help="legacy positional query args")
+    p.add_argument("--build", nargs="*", default=[],
+                   help="build params as key=value")
+    p.add_argument("--query", nargs="*", default=[],
+                   help="query params as key=value")
+    p.add_argument("--count", type=int, default=10)
+    p.add_argument("--batch-size", type=int, default=256)
+    p.add_argument("--n-batches", type=int, default=8)
+    p.add_argument("--index-cache", default=None)
+    p.add_argument("--assert-recall", type=float, default=None,
+                   help="exit non-zero unless aggregate recall >= this")
+    args = p.parse_args(argv)
+
+    ds = get_dataset(args.dataset)
+    eng = build_or_restore(args, ds)
+
+    spec = eng.spec
+    # explicit --query key=value wins over legacy positional --query-args,
+    # matching the --build vs --args precedence on the build side
+    qparams = _kv(args.query)
+    for name, value in zip(spec.query_params,
+                           [_coerce(a) for a in args.query_args]):
+        qparams.setdefault(name, value)
+    eng.query_params.update(qparams)
+
+    rng = np.random.default_rng(0)
+    k = args.count
+    total_q, total_t, recalls = 0, 0.0, []
+    for b in range(args.n_batches):
+        idx = rng.integers(0, len(ds.test), args.batch_size)
+        Q = ds.test[idx]
+        t0 = time.perf_counter()
+        _, ids = eng.search(Q)
+        dt = time.perf_counter() - t0
+        # recall via the shared metrics definition (framework re-computes
+        # candidate distances, paper §3.6)
+        dists = D.pairwise_rows(Q, ds.train, ids[:, :k], ds.metric)
+        rec = float(np.mean(recall_from_arrays(
+            dists, ds.distances[idx], k, neighbors=ids[:, :k])))
+        recalls.append(rec)
+        total_q += len(Q)
+        total_t += dt
+        print(f"  batch {b}: {len(Q) / dt:9.0f} QPS  recall@{k} "
+              f"= {rec:.3f}")
+    agg = float(np.mean(recalls))
+    print(f"[serve] aggregate {total_q / total_t:.0f} QPS over "
+          f"{total_q} queries, mean recall@{k} = {agg:.3f}")
+    if args.assert_recall is not None and agg < args.assert_recall:
+        raise SystemExit(
+            f"[serve] recall {agg:.3f} < required {args.assert_recall}")
 
 
 if __name__ == "__main__":

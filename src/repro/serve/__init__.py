@@ -1,0 +1,7 @@
+"""Serving layer: micro-batching Engine over the functional index core."""
+
+from repro.serve.engine import (CHECKPOINT_VERSION, CheckpointError, Engine,
+                                load_state, save_state)
+
+__all__ = ["Engine", "CheckpointError", "CHECKPOINT_VERSION",
+           "save_state", "load_state"]

@@ -1,0 +1,149 @@
+"""Functional core: adapter parity for EVERY registered algorithm.
+
+The redesign contract (ISSUE 2): each algorithm is a pure
+``build(X, **params) -> IndexState`` + ``search(state, Q, k, **qparams)``
+pair, and the legacy BaseANN class is a thin adapter over it.  These tests
+pin that contract:
+
+  * the functional registry covers exactly the class registry;
+  * for every algorithm, the functional build/search path returns neighbor
+    sets identical to the legacy ``query``/``batch_query`` path on a fixed
+    dataset (builds are seeded, so the two independently-built indexes
+    must agree bit-for-bit);
+  * IndexState round-trips flatten/unflatten as a pytree (jit boundary).
+"""
+
+import numpy as np
+import pytest
+
+import jax
+
+from repro.ann.functional import available_functional, get_functional
+from repro.core.registry import available
+
+
+# algorithm -> (dataset fixture name, build params, query params)
+CASES = {
+    "BruteForce": ("small_dataset", {}, {}),
+    "BruteForceHamming": ("small_hamming", {}, {}),
+    "IVF": ("small_dataset", {"n_clusters": 30}, {"n_probes": 5}),
+    "E2LSH": ("small_dataset",
+              {"n_tables": 8, "n_hashes": 6, "width": 2.0, "cap": 128},
+              {"n_probes": 4}),
+    "HyperplaneLSH": ("small_angular",
+                      {"n_tables": 8, "n_bits": 10, "cap": 128},
+                      {"n_probes": 4}),
+    "RPForest": ("small_dataset", {"n_trees": 8, "leaf_size": 32},
+                 {"probe": 3}),
+    "KNNGraph": ("small_dataset", {"degree": 16}, {"ef": 48}),
+    "HNSW": ("tiny_dataset", {"M": 8, "ef_construction": 40}, {"ef": 32}),
+    "BitsamplingAnnoy": ("small_hamming", {"n_trees": 6}, {"probe": 3}),
+    "MultiIndexHashing": ("small_hamming", {"n_chunks": 16, "cap": 64},
+                          {"radius": 1}),
+    "ShardedBruteForce": ("small_dataset", {}, {}),
+    "ShardedIVF": ("small_dataset", {"n_clusters": 30}, {"n_probes": 5}),
+}
+
+
+@pytest.fixture(scope="session")
+def tiny_dataset():
+    from repro.data import get_dataset
+    return get_dataset("blobs-euclidean-700")
+
+
+def test_registries_agree():
+    """Every registered BaseANN has a functional spec and vice versa."""
+    assert set(available()) == set(available_functional())
+
+
+def test_every_algorithm_has_a_parity_case():
+    assert set(CASES) == set(available()), (
+        "new algorithm registered without an adapter-parity case")
+
+
+@pytest.mark.parametrize("name", sorted(CASES))
+def test_adapter_parity(name, request):
+    """Functional build/search == legacy BaseANN query/batch_query."""
+    fixture, build_params, qparams = CASES[name]
+    ds = request.getfixturevalue(fixture)
+    k = 10
+
+    # legacy path: class adapter, positional set_query_arguments
+    cls = available()[name]
+    algo = cls(ds.metric, **build_params)
+    algo.fit(ds.train)
+    if qparams:
+        algo.set_query_arguments(*qparams.values())
+    algo.batch_query(ds.test, k)
+    legacy_batch = algo.get_batch_results()
+    legacy_single = np.stack([algo.query(q, k) for q in ds.test[:4]])
+
+    # functional path: independent seeded build + one jitted pure search
+    spec = get_functional(name)
+    state = spec.build(ds.train, metric=ds.metric, **build_params)
+    jq = spec.jit_search()
+    _, ids = jq(state, ds.test, k=k, **qparams)
+    functional = np.asarray(ids)
+
+    np.testing.assert_array_equal(
+        np.sort(functional, axis=1), np.sort(legacy_batch, axis=1),
+        err_msg=f"{name}: functional vs batch_query neighbor sets differ")
+    np.testing.assert_array_equal(
+        np.sort(functional[:4], axis=1), np.sort(legacy_single, axis=1),
+        err_msg=f"{name}: functional vs single-query neighbor sets differ")
+
+
+def test_index_state_is_a_pytree(small_dataset):
+    from repro.ann import bruteforce
+
+    state = bruteforce.build(small_dataset.train, metric="euclidean")
+    leaves, treedef = jax.tree_util.tree_flatten(state)
+    assert len(leaves) == len(state.arrays)
+    rebuilt = jax.tree_util.tree_unflatten(treedef, leaves)
+    assert rebuilt.algo == state.algo
+    assert rebuilt.static == state.static
+    assert sorted(rebuilt.arrays) == sorted(state.arrays)
+    # static metadata must ride the aux data => jit sees it as constant
+    _, ids0 = bruteforce.search(state, small_dataset.test[:4], k=5)
+    _, ids1 = jax.jit(bruteforce.search, static_argnames=("k",))(
+        rebuilt, small_dataset.test[:4], k=5)
+    np.testing.assert_array_equal(np.asarray(ids0), np.asarray(ids1))
+
+
+def test_ivf_overprobe_small_corpus():
+    """n_probes > built cluster count (C = min(n_clusters, n)) must clamp
+    everywhere — search AND the dist_comps instrumentation."""
+    from repro.ann.ivf import IVF
+
+    X = np.random.default_rng(0).standard_normal((50, 8)).astype(np.float32)
+    algo = IVF("euclidean", n_clusters=100)
+    algo.fit(X)
+    algo.set_query_arguments(60)
+    assert algo.query(X[0], 5).shape == (5,)
+    algo.batch_query(X[:4], 5)
+    assert algo.get_batch_results().shape == (4, 5)
+    assert algo.get_additional()["dist_comps"] > 0
+
+
+def test_ivf_traced_n_probes_single_trace(small_dataset):
+    """One trace (static max_probes) serves every probe count: results match
+    the per-value static traces exactly."""
+    import jax.numpy as jnp
+
+    from repro.ann import ivf
+
+    state = ivf.build(small_dataset.train, metric="euclidean", n_clusters=30)
+    trace_count = {"n": 0}
+
+    def counted(state, Q, *, k, n_probes, max_probes):
+        trace_count["n"] += 1          # runs at trace time only
+        return ivf.search(state, Q, k=k, n_probes=n_probes,
+                          max_probes=max_probes)
+
+    traced = jax.jit(counted, static_argnames=("k", "max_probes"))
+    for p in (1, 4, 30):
+        _, got = traced(state, small_dataset.test, k=10,
+                        n_probes=jnp.int32(p), max_probes=30)
+        _, want = ivf.search(state, small_dataset.test, k=10, n_probes=p)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+    assert trace_count["n"] == 1, "traced knob retraced"
