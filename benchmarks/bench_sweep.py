@@ -1,0 +1,121 @@
+"""Sweep-vs-retrace benchmark (ISSUE 3 acceptance): a multi-value query-knob
+sweep served by ONE trace (the traced-cap path / ``search_sweep``) against
+the legacy per-group retrace path, at equal recall.
+
+The paper's config system reconfigures query arguments per group so the
+built index is reused ("greatly reducing duplicated work", §2.2) — but a
+jitted search still recompiles per knob value because the knob shapes the
+candidate window.  The traced-cap treatment removes that tax.  Three paths
+are timed over the same knob grid, cold (compiles included — compiling IS
+the workload under sweep churn):
+
+  * **per_group_retrace** — one jitted search with the knob static: every
+    new value compiles a fresh executable (the legacy experiment loop /
+    pre-ISSUE-3 Engine behaviour).
+  * **traced_cap** — one jitted search with the knob traced under a static
+    ``max_*`` cap: one compile, then one device call per value.
+  * **search_sweep** — the whole grid vmapped inside one trace: one
+    compile, ONE device call for all values.
+
+Results are asserted identical across paths per knob value (equal recall
+by construction).
+
+    PYTHONPATH=src python benchmarks/bench_sweep.py [--smoke]
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import numpy as np
+
+try:
+    from benchmarks.common import Row, dataset_size
+except ModuleNotFoundError:          # direct script invocation
+    import pathlib
+    import sys
+    sys.path.insert(0, str(pathlib.Path(__file__).resolve().parents[1]))
+    from benchmarks.common import Row, dataset_size
+from repro.ann import functional
+from repro.ann.functional import get_functional, search_sweep
+from repro.data import get_dataset
+
+K = 10
+NQ = 256
+
+# algorithm -> (build params, knob values); caps = max(values)
+SWEEPS = {
+    "IVF": ({"n_clusters": 64}, (2, 8, 16, 32)),
+    "RPForest": ({"n_trees": 8, "leaf_size": 32}, (1, 2, 3, 4)),
+}
+
+
+def _timed_sweep(step, values):
+    """Total seconds for one pass over the grid (compiles included)."""
+    t0 = time.perf_counter()
+    outs = [jax.block_until_ready(step(v)) for v in values]
+    return time.perf_counter() - t0, [np.asarray(o[1]) for o in outs]
+
+
+def run(scale: str = "default"):
+    n = dataset_size(scale)
+    ds = get_dataset(f"blobs-euclidean-{n}")
+    Q = ds.test[:NQ]
+    rows = []
+
+    for name, (build_params, values) in SWEEPS.items():
+        spec = get_functional(name)
+        (knob, cap_name), = spec.traced_knobs
+        state = spec.build(ds.train, metric=ds.metric, **build_params)
+        cap = max(values)
+
+        functional.TRACE_COUNTS.clear()
+        jq_static = spec.jit_search()
+        t_retrace, ids_static = _timed_sweep(
+            lambda v: jq_static(state, Q, k=K, **{knob: v}), values)
+        retraces = functional.TRACE_COUNTS[name]
+
+        functional.TRACE_COUNTS.clear()
+        jq_traced = spec.jit_search(traced=(knob,))
+        t_traced, ids_traced = _timed_sweep(
+            lambda v: jq_traced(state, Q, k=K,
+                                **{knob: v, cap_name: cap}), values)
+        traces = functional.TRACE_COUNTS[name]
+
+        t0 = time.perf_counter()
+        _, sweep_ids = jax.block_until_ready(
+            search_sweep(state, Q, k=K, knob_grid={knob: values}))
+        t_sweep = time.perf_counter() - t0
+
+        # equal recall by construction: identical neighbors per knob value
+        for i in range(len(values)):
+            np.testing.assert_array_equal(ids_static[i], ids_traced[i])
+            np.testing.assert_array_equal(ids_static[i],
+                                          np.asarray(sweep_ids)[i])
+
+        grid = f"{knob}x{len(values)}"
+        rows.append(Row(f"sweep/{name}/per_group_retrace/{grid}",
+                        t_retrace * 1e6,
+                        f"traces={retraces};nq={NQ}"))
+        rows.append(Row(f"sweep/{name}/traced_cap/{grid}", t_traced * 1e6,
+                        f"traces={traces};x={t_retrace / t_traced:.2f};"
+                        f"equal_recall=True"))
+        rows.append(Row(f"sweep/{name}/search_sweep/{grid}", t_sweep * 1e6,
+                        f"x={t_retrace / t_sweep:.2f};equal_recall=True"))
+    return rows
+
+
+if __name__ == "__main__":
+    import argparse
+
+    p = argparse.ArgumentParser()
+    p.add_argument("--smoke", action="store_true",
+                   help="tiny dataset (CI smoke lane)")
+    p.add_argument("--scale", default=None,
+                   choices=["smoke", "default", "full"])
+    args = p.parse_args()
+    scale = args.scale or ("smoke" if args.smoke else "default")
+    print("name,us_per_call,derived")
+    for row in run(scale):
+        print(row.csv())

@@ -33,11 +33,52 @@ The legacy class interface survives as a thin adapter
 
 from __future__ import annotations
 
+import collections
 import dataclasses
+import functools
 from typing import Any, Callable, Dict, Mapping, Optional, Sequence, Tuple
 
 import jax
 import numpy as np
+
+#: jit-trace counter keyed by algorithm name.  Every function jitted through
+#: :func:`jit_search_fn` (so: ``FunctionalSpec.jit_search``, the
+#: ``FunctionalANN`` adapter, the serve ``Engine`` and ``search_sweep``)
+#: increments its spec's entry each time jax actually re-traces it.  Tests
+#: reset it and assert "exactly one trace per knob sweep"; production code
+#: never reads it.
+TRACE_COUNTS: "collections.Counter[str]" = collections.Counter()
+
+
+def _note_trace(name: str) -> None:
+    TRACE_COUNTS[name] += 1
+
+
+def jit_search_fn(fn: Callable, spec: "FunctionalSpec",
+                  traced: Sequence[str] = ()) -> Callable:
+    """jit ``fn`` with the spec's knobs pinned static, minus ``traced``.
+
+    ``traced`` demotes spec-static query knobs to runtime values — legal
+    only for knobs the spec declares a cap partner for (``traced_knobs``);
+    the corresponding ``max_*`` cap must then be passed (static) at call
+    time and bounds the in-kernel mask.  The returned callable counts its
+    traces in :data:`TRACE_COUNTS` under the spec's name.
+    """
+    traced = tuple(traced)
+    caps = dict(spec.traced_knobs)
+    unknown = [t for t in traced if t not in caps]
+    if unknown:
+        raise ValueError(
+            f"{spec.name}: knob(s) {unknown} have no traced-cap treatment; "
+            f"traceable knobs: {sorted(caps)}")
+    static = ("k",) + tuple(p for p in spec.static_params if p not in traced)
+
+    @functools.wraps(fn)
+    def probe(*args, **kwargs):
+        _note_trace(spec.name)        # runs at trace time only
+        return fn(*args, **kwargs)
+
+    return jax.jit(probe, static_argnames=static)
 
 
 def _freeze(value: Any) -> Any:
@@ -122,6 +163,20 @@ class FunctionalSpec:
     ``static_query_params`` knobs that must be trace-time constants
                             (shape-affecting).  Knobs not listed here may be
                             traced runtime values.
+    ``traced_knobs``        (knob, cap) pairs: knobs that MAY be demoted to
+                            traced runtime values once their static ``max_*``
+                            cap partner is pinned — the search then sizes its
+                            candidate window by the cap and masks work past
+                            the knob value in-kernel, so ONE trace serves
+                            every knob value up to the cap (exact parity with
+                            the static path).  Two traced-mode caveats: a
+                            knob value ABOVE the cap is silently clamped to
+                            it (shapes are fixed at trace time; reject
+                            over-cap requests host-side like serve.Engine
+                            does), and the output is min(k, cap) wide — for
+                            knob values where the static path would return
+                            fewer than k columns, the tail is (+inf, -1)
+                            padding instead of a narrower array.
     """
 
     name: str
@@ -131,6 +186,7 @@ class FunctionalSpec:
     query_defaults: Tuple[Any, ...] = ()
     static_query_params: Optional[Tuple[str, ...]] = None
     supported_metrics: Tuple[str, ...] = ("euclidean", "angular")
+    traced_knobs: Tuple[Tuple[str, str], ...] = ()
 
     @property
     def static_params(self) -> Tuple[str, ...]:
@@ -141,10 +197,23 @@ class FunctionalSpec:
     def default_query_params(self) -> Dict[str, Any]:
         return dict(zip(self.query_params, self.query_defaults))
 
-    def jit_search(self):
-        """The search function jitted with k + static knobs pinned."""
-        static = ("k",) + tuple(self.static_params)
-        return jax.jit(self.search, static_argnames=static)
+    def cap_for(self, knob: str) -> str:
+        """The static cap partner of a traced-capable knob."""
+        caps = dict(self.traced_knobs)
+        if knob not in caps:
+            raise KeyError(
+                f"{self.name} has no traced-cap treatment for knob "
+                f"{knob!r}; traced knobs: {sorted(caps)}")
+        return caps[knob]
+
+    def jit_search(self, traced: Sequence[str] = ()):
+        """The search function jitted with k + static knobs pinned.
+
+        ``traced`` names knobs to demote to runtime values (their ``max_*``
+        caps must then be passed as static arguments) — see
+        :func:`jit_search_fn`.
+        """
+        return jit_search_fn(self.search, self, traced)
 
 
 FUNCTIONAL: Dict[str, FunctionalSpec] = {}
@@ -195,6 +264,84 @@ def available_functional() -> Dict[str, FunctionalSpec]:
 
     importlib.import_module("repro.ann")
     return dict(FUNCTIONAL)
+
+
+# --------------------------------------------------------------------------
+# retrace-free knob sweeps
+# --------------------------------------------------------------------------
+
+# Bounded FIFO cache of jitted sweep executables, keyed by everything that
+# determines trace identity EXCEPT the knob values themselves — so re-running
+# a sweep with different values (same grid length) reuses the same trace.
+_SWEEP_FNS: Dict[Any, Callable] = {}
+_SWEEP_FNS_MAX = 64
+
+
+def _sweep_searcher(spec: "FunctionalSpec", knob: str, cap_name: str,
+                    cap: int, k: int, fixed_items: tuple) -> Callable:
+    key = (spec.name, knob, cap_name, cap, k, fixed_items)
+    fn = _SWEEP_FNS.get(key)
+    if fn is None:
+        if len(_SWEEP_FNS) >= _SWEEP_FNS_MAX:
+            _SWEEP_FNS.pop(next(iter(_SWEEP_FNS)))
+        fixed = dict(fixed_items)
+
+        def one(state, Q, v):
+            _note_trace(spec.name)    # runs at trace time only
+            params = {knob: v, cap_name: cap, **fixed}
+            return spec.search(state, Q, k=k, **params)
+
+        fn = _SWEEP_FNS[key] = jax.jit(
+            jax.vmap(one, in_axes=(None, None, 0)))
+    return fn
+
+
+def search_sweep(state: IndexState, Q, *, k: int,
+                 knob_grid: Mapping[str, Sequence],
+                 **query_params) -> Tuple[Any, Any]:
+    """Evaluate a whole query-knob grid in ONE trace: vmap over knob values.
+
+    ``knob_grid`` maps one traced-capable knob (see the spec's
+    ``traced_knobs``) to the values to sweep; the knob's static ``max_*``
+    cap is pinned to ``max(values)`` unless passed explicitly in
+    ``query_params``.  Returns ``(dists [S, b, kk], ids [S, b, kk])`` with
+    ``S = len(values)`` — row ``i`` is exactly what the static path returns
+    for ``values[i]``.
+
+    The compiled executable is cached on (algo, knob, cap, k, other
+    params), so repeated sweeps — including sweeps over *different* values
+    of the same grid length — never retrace; a sweep is one device call
+    instead of one compile + one call per knob value.
+    """
+    import jax.numpy as jnp
+
+    spec = get_functional(state.algo)
+    if len(knob_grid) != 1:
+        raise ValueError(
+            f"search_sweep sweeps exactly one knob per call, got "
+            f"{sorted(knob_grid)}")
+    (knob, values), = knob_grid.items()
+    cap_name = spec.cap_for(knob)
+    values = jnp.asarray(np.asarray(list(values)))
+    if values.ndim != 1 or values.shape[0] == 0:
+        raise ValueError("knob values must be a non-empty 1-D sequence")
+    fixed = dict(query_params)
+    if knob in fixed:
+        raise ValueError(
+            f"{knob!r} appears in both knob_grid and query_params; its "
+            f"value comes from the grid — drop it from query_params")
+    vmax = int(np.asarray(values).max())
+    cap = fixed.pop(cap_name, None)
+    if cap is None:
+        cap = vmax
+    elif vmax > int(cap):
+        raise ValueError(
+            f"knob_grid value {vmax} exceeds {cap_name}={int(cap)}; the "
+            f"in-kernel mask would clamp it and mislabel the row — raise "
+            f"the cap or drop the value")
+    fn = _sweep_searcher(spec, knob, cap_name, int(cap), int(k),
+                         tuple(sorted(fixed.items())))
+    return fn(state, Q, values)
 
 
 # --------------------------------------------------------------------------

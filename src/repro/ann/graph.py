@@ -99,22 +99,22 @@ def _dist_to(state: IndexState, q, ids):
     return D.masked_rows_to(state["X"], q, ids, state.metric)
 
 
-def _search_one(state: IndexState, q, *, k: int, ef: int):
-    """Beam search for one query; returns (dists [k], ids [k], iters)."""
-    entries = state["entries"]
-    graph = state["graph"]
-    n_entry = entries.shape[0]
-    pool_ids = jnp.full((ef,), -1, jnp.int32)
-    pool_d = jnp.full((ef,), jnp.inf, jnp.float32)
-    pool_exp = jnp.zeros((ef,), bool)
-    e_d = _dist_to(state, q, entries)
-    ids0 = jnp.concatenate([entries, pool_ids])[:ef]
-    d0 = jnp.concatenate([e_d, pool_d])[:ef]
-    order = jnp.argsort(d0)
-    st = (ids0[order], d0[order], pool_exp, jnp.int32(0))
+def beam_search(dist_fn, adj, ids0, d0, *, ef, cap: int, max_iter):
+    """Masked fixed-beam best-first search, shared by KNNGraph and HNSW's
+    layer 0 (:mod:`repro.ann.hnsw`).
 
-    deg = graph.shape[1]
-    max_iter = ef + n_entry
+    Pool of ``cap`` (dist, id, expanded) registers; every iteration expands
+    the best unexpanded entry and dedupe-merges its adjacency row
+    ``adj[cur]`` (distances via ``dist_fn(nbrs)``), keeping the best
+    ``cap`` by distance with slots past ``ef`` re-masked to (+inf, -1) —
+    so the live beam is exactly ``ef`` wide.  ``ef`` (and ``max_iter``)
+    may be traced runtime values when ``cap`` is pinned static: one trace
+    then serves every ef <= cap.  Callers must pass ``ids0``/``d0`` with
+    positions past ``ef`` already dead.  Returns the final loop state
+    ``(ids [cap], d [cap], expanded [cap], iterations)``.
+    """
+    deg = adj.shape[1]
+    live = jnp.arange(cap) < ef                  # all-true when cap == ef
 
     def cond(st):
         _, d, exp, it = st
@@ -126,9 +126,8 @@ def _search_one(state: IndexState, q, *, k: int, ef: int):
         sel = jnp.argmin(jnp.where(exp, jnp.inf, d))
         cur = ids[sel]
         exp = exp.at[sel].set(True)
-        nbrs = graph[jnp.maximum(cur, 0)]                # [deg]
-        nbrs = jnp.where(cur >= 0, nbrs, -1)
-        nd = _dist_to(state, q, nbrs)
+        nbrs = jnp.where(cur >= 0, adj[jnp.maximum(cur, 0)], -1)   # [deg]
+        nd = dist_fn(nbrs)
         # merge pool and neighbors; dedupe by id keeping expanded entries
         all_ids = jnp.concatenate([ids, nbrs])
         all_d = jnp.concatenate([d, nd])
@@ -142,29 +141,67 @@ def _search_one(state: IndexState, q, *, k: int, ef: int):
         dup = (si == prev) | (si < 0)
         sd = jnp.where(dup, jnp.inf, sd)
         si = jnp.where(dup, -1, si)
-        # keep best ef by distance
-        order2 = jnp.argsort(sd)[:ef]
-        return (si[order2], sd[order2], se[order2], it + 1)
+        # keep best ef by distance (cap-wide sort, slots past ef re-masked)
+        order2 = jnp.argsort(sd)[:cap]
+        si, sd, se = si[order2], sd[order2], se[order2]
+        si = jnp.where(live, si, -1)
+        sd = jnp.where(live, sd, jnp.inf)
+        se = jnp.where(live, se, False)
+        return (si, sd, se, it + 1)
 
-    ids, d, _, it = jax.lax.while_loop(cond, body, st)
-    kk = min(k, ef)
+    exp0 = jnp.zeros((cap,), bool)
+    return jax.lax.while_loop(cond, body, (ids0, d0, exp0, jnp.int32(0)))
+
+
+def _search_one(state: IndexState, q, *, k: int, ef, max_ef=None):
+    """Beam search for one query; returns (dists [kk], ids [kk], iters).
+
+    With ``max_ef`` (static) the candidate pool is allocated at the cap and
+    ``ef`` may be a traced runtime value — one trace serves every
+    ef <= max_ef, bit-identical to the static path for k <= ef (with
+    ef < k the output keeps min(k, cap) columns, the tail being (+inf, -1)
+    padding where the static path would return a narrower array).
+    """
+    entries = state["entries"]
+    graph = state["graph"]
+    n_entry = entries.shape[0]
+    cap = int(ef) if max_ef is None else int(max_ef)
+    live = jnp.arange(cap) < ef                  # all-true when max_ef=None
+    pool_ids = jnp.full((cap,), -1, jnp.int32)
+    pool_d = jnp.full((cap,), jnp.inf, jnp.float32)
+    e_d = _dist_to(state, q, entries)
+    ids0 = jnp.concatenate([entries, pool_ids])[:cap]
+    d0 = jnp.concatenate([e_d, pool_d])[:cap]
+    # entries past ef are dead (static path truncates the pool at ef)
+    ids0 = jnp.where(live, ids0, -1)
+    d0 = jnp.where(live, d0, jnp.inf)
+    order = jnp.argsort(d0)
+    ids, d, _, it = beam_search(
+        lambda nbrs: _dist_to(state, q, nbrs), graph,
+        ids0[order], d0[order], ef=ef, cap=cap, max_iter=ef + n_entry)
+    kk = min(k, cap)
     return d[:kk], ids[:kk], it
 
 
-def search_with_stats(state: IndexState, Q, *, k: int, ef: int = 32):
+def search_with_stats(state: IndexState, Q, *, k: int, ef: int = 32,
+                      max_ef=None):
     """(dists [b, kk], ids [b, kk], expansions [b]).  Pure + jittable."""
     Q = prepare_queries(Q, state.metric)
-    return jax.vmap(lambda q: _search_one(state, q, k=k, ef=int(ef)))(Q)
+    if max_ef is None:
+        ef = int(ef)
+    return jax.vmap(
+        lambda q: _search_one(state, q, k=k, ef=ef, max_ef=max_ef))(Q)
 
 
-def search(state: IndexState, Q, *, k: int, ef: int = 32):
-    d, ids, _ = search_with_stats(state, Q, k=k, ef=ef)
+def search(state: IndexState, Q, *, k: int, ef: int = 32, max_ef=None):
+    d, ids, _ = search_with_stats(state, Q, k=k, ef=ef, max_ef=max_ef)
     return d, ids
 
 
 SPEC = register_functional(FunctionalSpec(
     name="KNNGraph", build=build, search=search,
-    query_params=("ef",), query_defaults=(32,),
+    query_params=("ef", "max_ef"), query_defaults=(32, None),
+    traced_knobs=(("ef", "max_ef"),),
 ))
 
 

@@ -269,24 +269,31 @@ def _bitsampling_descend(state: IndexState, Q, cur):
     return cur, others
 
 
-def bitsampling_search(state: IndexState, Q, *, k: int, probe: int = 1):
+def bitsampling_search(state: IndexState, Q, *, k: int, probe: int = 1,
+                       max_probe=None):
+    """With ``max_probe`` (static) all cap leaves are descended and the
+    candidates of alternates past the traced ``probe`` are masked to -1 —
+    one trace serves every probe count up to the cap."""
     Q = prepare_queries(Q, "hamming")
     bq = Q.shape[0]
     T = state.stat("n_trees")
-    probe = max(1, int(probe))
+    P = max(1, int(probe)) if max_probe is None else max(1, int(max_probe))
     start = jnp.broadcast_to(state["roots"][None, :], (bq, T))
     leaf, others = _bitsampling_descend(state, Q, start)
     leaves = [leaf]
     # probe deepest not-taken branches (bit splits have no margins)
-    for p in range(min(probe - 1, len(others))):
+    for p in range(min(P - 1, len(others))):
         alt, _ = _bitsampling_descend(state, Q, others[-(p + 1)])
         leaves.append(alt)
     tree_ids = jnp.arange(T)[None, :]
     cands = []
-    for lf in leaves:
+    for j, lf in enumerate(leaves):
         lidx = jnp.maximum(-lf - 1, 0)
         pts = state["leaves"][tree_ids, lidx]
         pts = jnp.where((lf < 0)[..., None], pts, -1)
+        if max_probe is not None and j > 0:
+            # alternate j exists in the static path iff probe > j
+            pts = jnp.where(jnp.asarray(probe) > j, pts, -1)
         cands.append(pts.reshape(bq, -1))
     cand = jnp.concatenate(cands, axis=1)
     return _hamming_rerank(state, Q, cand, k)
@@ -294,8 +301,10 @@ def bitsampling_search(state: IndexState, Q, *, k: int, probe: int = 1):
 
 register_functional(FunctionalSpec(
     name="BitsamplingAnnoy", build=bitsampling_build,
-    search=bitsampling_search, query_params=("probe",), query_defaults=(1,),
+    search=bitsampling_search,
+    query_params=("probe", "max_probe"), query_defaults=(1, None),
     supported_metrics=("hamming",),
+    traced_knobs=(("probe", "max_probe"),),
 ))
 
 
@@ -386,15 +395,21 @@ def _mih_query_chunks(state: IndexState, Q):
     return jnp.stack(keys, axis=1), bits
 
 
-def mih_search(state: IndexState, Q, *, k: int, radius: int = 0):
+def mih_search(state: IndexState, Q, *, k: int, radius: int = 0,
+               max_radius=None):
+    """With ``max_radius`` (static) the probe-key tensor is enumerated at
+    the cap and columns whose flip count exceeds the traced ``radius`` get
+    key -1 (chunk keys are non-negative bit sums, so the lookup matches
+    nothing) — one trace serves every radius up to the cap."""
     Q = prepare_queries(Q, "hamming")
     bq = Q.shape[0]
     m = state.stat("n_chunks")
     chunk_bits = state.stat("chunk_bits")
+    R = int(radius) if max_radius is None else int(max_radius)
     base, bits = _mih_query_chunks(state, Q)               # [b, m]
-    # probe keys: all chunk codes within hamming radius <= radius
+    # probe keys: all chunk codes within hamming radius <= R
     flips: list[tuple[int, ...]] = [()]
-    for r in range(1, int(radius) + 1):
+    for r in range(1, R + 1):
         flips += list(itertools.combinations(range(chunk_bits), r))
     probe_keys = []
     bw = state["bit_weights"]
@@ -407,6 +422,10 @@ def mih_search(state: IndexState, Q, *, k: int, radius: int = 0):
                     jnp.where(qb > 0, -bw[bitpos], bw[bitpos]))
         probe_keys.append(base + delta)
     qkeys = jnp.stack(probe_keys, axis=-1)                 # [b, m, P]
+    if max_radius is not None:
+        flip_r = jnp.asarray([len(f) for f in flips])      # [P]
+        live = flip_r <= jnp.maximum(radius, 0)
+        qkeys = jnp.where(live[None, None, :], qkeys, -1)
     cand = bucket_lookup(state["keys"], state["ids"], qkeys,
                          state.stat("cap"))
     return _hamming_rerank(state, Q, cand, k)
@@ -414,8 +433,9 @@ def mih_search(state: IndexState, Q, *, k: int, radius: int = 0):
 
 register_functional(FunctionalSpec(
     name="MultiIndexHashing", build=mih_build, search=mih_search,
-    query_params=("radius",), query_defaults=(0,),
+    query_params=("radius", "max_radius"), query_defaults=(0, None),
     supported_metrics=("hamming",),
+    traced_knobs=(("radius", "max_radius"),),
 ))
 
 

@@ -191,66 +191,57 @@ def _greedy_layer(state, q, cur, adj):
     return cur
 
 
-def _beam_layer0(state, q, entry, *, k, ef):
-    """Fixed-beam ef search on layer 0 (same scheme as KNNGraph)."""
+def _beam_layer0(state, q, entry, *, k, ef, max_ef=None):
+    """Fixed-beam ef search on layer 0 — the shared masked
+    :func:`repro.ann.graph.beam_search` machinery, entered from the
+    hierarchy's single entry point.
+
+    With ``max_ef`` (static) the pool is allocated at the cap and ``ef``
+    may be a traced runtime value — one trace serves every ef <= max_ef,
+    bit-identical to the static path for k <= ef (with ef < k the output
+    keeps min(k, cap) columns, the tail being (+inf, -1) padding where the
+    static path would return a narrower array).
+    """
+    from repro.ann.graph import beam_search
+
     adj = state["layers"][0]
-    deg = adj.shape[1]
-    ids0 = jnp.full((ef,), -1, jnp.int32).at[0].set(entry)
-    d0 = jnp.full((ef,), jnp.inf, jnp.float32).at[0].set(
+    cap = int(ef) if max_ef is None else int(max_ef)
+    ids0 = jnp.full((cap,), -1, jnp.int32).at[0].set(entry)
+    d0 = jnp.full((cap,), jnp.inf, jnp.float32).at[0].set(
         _dist_to(state, q, entry[None])[0])
-    exp0 = jnp.zeros((ef,), bool)
-    max_iter = ef + 8
-
-    def cond(st):
-        _, d, exp, it = st
-        return jnp.any(~exp & jnp.isfinite(d)) & (it < max_iter)
-
-    def body(st):
-        ids, d, exp, it = st
-        sel = jnp.argmin(jnp.where(exp, jnp.inf, d))
-        cur = ids[sel]
-        exp = exp.at[sel].set(True)
-        nbrs = jnp.where(cur >= 0, adj[jnp.maximum(cur, 0)], -1)
-        nd = _dist_to(state, q, nbrs)
-        all_ids = jnp.concatenate([ids, nbrs])
-        all_d = jnp.concatenate([d, nd])
-        all_exp = jnp.concatenate([exp, jnp.zeros((deg,), bool)])
-        order = jnp.lexsort((~all_exp, all_ids))
-        si, sd, se = all_ids[order], all_d[order], all_exp[order]
-        prev = jnp.concatenate([jnp.full((1,), -2, si.dtype), si[:-1]])
-        dup = (si == prev) | (si < 0)
-        sd = jnp.where(dup, jnp.inf, sd)
-        si = jnp.where(dup, -1, si)
-        order2 = jnp.argsort(sd)[:ef]
-        return (si[order2], sd[order2], se[order2], it + 1)
-
-    ids, d, _, it = jax.lax.while_loop(cond, body, (ids0, d0, exp0,
-                                                    jnp.int32(0)))
-    kk = min(k, ef)
+    ids, d, _, it = beam_search(
+        lambda nbrs: _dist_to(state, q, nbrs), adj, ids0, d0,
+        ef=ef, cap=cap, max_iter=ef + 8)
+    kk = min(k, cap)
     return d[:kk], ids[:kk], it
 
 
-def _search_one(state, q, *, k, ef):
+def _search_one(state, q, *, k, ef, max_ef=None):
     cur = jnp.int32(state.stat("entry"))
     for lv in range(state.stat("top"), 0, -1):   # greedy upper layers
         cur = _greedy_layer(state, q, cur, state["layers"][lv])
-    return _beam_layer0(state, q, cur, k=k, ef=ef)
+    return _beam_layer0(state, q, cur, k=k, ef=ef, max_ef=max_ef)
 
 
-def search_with_stats(state: IndexState, Q, *, k: int, ef: int = 32):
+def search_with_stats(state: IndexState, Q, *, k: int, ef: int = 32,
+                      max_ef=None):
     """(dists [b, kk], ids [b, kk], layer-0 iterations [b])."""
     Q = prepare_queries(Q, state.metric)
-    return jax.vmap(lambda q: _search_one(state, q, k=k, ef=int(ef)))(Q)
+    if max_ef is None:
+        ef = int(ef)
+    return jax.vmap(
+        lambda q: _search_one(state, q, k=k, ef=ef, max_ef=max_ef))(Q)
 
 
-def search(state: IndexState, Q, *, k: int, ef: int = 32):
-    d, ids, _ = search_with_stats(state, Q, k=k, ef=ef)
+def search(state: IndexState, Q, *, k: int, ef: int = 32, max_ef=None):
+    d, ids, _ = search_with_stats(state, Q, k=k, ef=ef, max_ef=max_ef)
     return d, ids
 
 
 SPEC = register_functional(FunctionalSpec(
     name="HNSW", build=build, search=search,
-    query_params=("ef",), query_defaults=(32,),
+    query_params=("ef", "max_ef"), query_defaults=(32, None),
+    traced_knobs=(("ef", "max_ef"),),
 ))
 
 

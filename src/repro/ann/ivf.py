@@ -133,6 +133,7 @@ SPEC = register_functional(FunctionalSpec(
     name="IVF", build=build, search=search,
     query_params=("n_probes", "max_probes"), query_defaults=(1, None),
     static_query_params=("n_probes", "max_probes"),
+    traced_knobs=(("n_probes", "max_probes"),),
 ))
 
 

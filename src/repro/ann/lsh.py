@@ -119,9 +119,22 @@ def _hyperplane_probe_keys(state: IndexState, Q, probes: int):
     return jnp.stack(keys, axis=-1)                      # [bq, L, P]
 
 
-def hyperplane_search(state: IndexState, Q, *, k: int, n_probes: int = 1):
+def _mask_probe_keys(qkeys, n_probes):
+    """Dead probe columns get key -1 (bucket keys are non-negative, so the
+    lookup matches nothing): probes past the traced ``n_probes`` contribute
+    no candidates, making one max_probes-wide trace serve every count."""
+    P = qkeys.shape[-1]
+    live = jnp.arange(P) < jnp.maximum(n_probes, 1)
+    return jnp.where(live[None, None, :], qkeys, -1)
+
+
+def hyperplane_search(state: IndexState, Q, *, k: int, n_probes: int = 1,
+                      max_probes=None):
     Q = prepare_queries(Q, state.metric)
-    qkeys = _hyperplane_probe_keys(state, Q, max(1, int(n_probes)))
+    P = max(1, int(n_probes)) if max_probes is None else max(1, int(max_probes))
+    qkeys = _hyperplane_probe_keys(state, Q, P)
+    if max_probes is not None:
+        qkeys = _mask_probe_keys(qkeys, n_probes)
     cand = bucket_lookup(state["keys"], state["ids"], qkeys,
                          state.stat("cap"))
     return rerank_candidates(state, Q, cand, k)
@@ -129,8 +142,9 @@ def hyperplane_search(state: IndexState, Q, *, k: int, n_probes: int = 1):
 
 register_functional(FunctionalSpec(
     name="HyperplaneLSH", build=hyperplane_build, search=hyperplane_search,
-    query_params=("n_probes",), query_defaults=(1,),
+    query_params=("n_probes", "max_probes"), query_defaults=(1, None),
     supported_metrics=("angular",),
+    traced_knobs=(("n_probes", "max_probes"),),
 ))
 
 
@@ -205,9 +219,14 @@ def _e2_probe_keys(state: IndexState, Q, probes: int):
     return jnp.stack(keys, axis=-1)
 
 
-def e2lsh_search(state: IndexState, Q, *, k: int, n_probes: int = 1):
+def e2lsh_search(state: IndexState, Q, *, k: int, n_probes: int = 1,
+                 max_probes=None):
     Q = prepare_queries(Q, state.metric)
-    qkeys = _e2_probe_keys(state, Q, max(1, int(n_probes)))
+    P = max(1, int(n_probes)) if max_probes is None else max(1, int(max_probes))
+    qkeys = _e2_probe_keys(state, Q, P)
+    if max_probes is not None:
+        # E2 keys are reduced mod a positive prime, so -1 is unreachable
+        qkeys = _mask_probe_keys(qkeys, n_probes)
     cand = bucket_lookup(state["keys"], state["ids"], qkeys,
                          state.stat("cap"))
     return rerank_candidates(state, Q, cand, k)
@@ -215,8 +234,9 @@ def e2lsh_search(state: IndexState, Q, *, k: int, n_probes: int = 1):
 
 register_functional(FunctionalSpec(
     name="E2LSH", build=e2lsh_build, search=e2lsh_search,
-    query_params=("n_probes",), query_defaults=(1,),
+    query_params=("n_probes", "max_probes"), query_defaults=(1, None),
     supported_metrics=("euclidean",),
+    traced_knobs=(("n_probes", "max_probes"),),
 ))
 
 

@@ -134,19 +134,24 @@ def _descend(state: IndexState, Q, cur):
     return cur, jnp.stack(margins, -1), jnp.stack(others, -1)
 
 
-def search(state: IndexState, Q, *, k: int, probe: int = 1):
-    """Spill search over all trees + exact rerank.  Pure and jittable;
-    ``probe`` is static (it shapes the candidate window)."""
+def search(state: IndexState, Q, *, k: int, probe: int = 1, max_probe=None):
+    """Spill search over all trees + exact rerank.  Pure and jittable.
+
+    ``probe`` is static by default (it shapes the candidate window).  With
+    ``max_probe`` (static) the spill window is sized at the cap and
+    ``probe`` may be a traced runtime value: candidates from alternates
+    past ``probe`` are masked to -1, so one trace serves every probe count
+    up to the cap."""
     Q = prepare_queries(Q, state.metric)
     b = Q.shape[0]
     T = state.stat("n_trees")
-    probe = max(1, int(probe))
+    P = max(1, int(probe)) if max_probe is None else max(1, int(max_probe))
     start = jnp.broadcast_to(state["roots"][None, :], (b, T))
     leaf, margins, others = _descend(state, Q, start)
     leaves = [leaf]
-    if probe > 1:
-        # other-children of the (probe-1) smallest-margin splits
-        nprobe = min(probe - 1, margins.shape[-1])
+    if P > 1:
+        # other-children of the (P-1) smallest-margin splits
+        nprobe = min(P - 1, margins.shape[-1])
         _, pos = jax.lax.top_k(-margins, nprobe)        # [b,T,p]
         alt = jnp.take_along_axis(others, pos, axis=-1)
         for p in range(nprobe):
@@ -155,10 +160,13 @@ def search(state: IndexState, Q, *, k: int, probe: int = 1):
     # gather candidate ids from every visited leaf
     tree_ids = jnp.arange(T)[None, :]
     cands = []
-    for lf in leaves:
+    for j, lf in enumerate(leaves):
         lidx = jnp.maximum(-lf - 1, 0)
         pts = state["leaf_pts"][tree_ids, lidx]         # [b,T,leaf]
         pts = jnp.where((lf < 0)[..., None], pts, -1)
+        if max_probe is not None and j > 0:
+            # alternate j exists in the static path iff probe > j
+            pts = jnp.where(jnp.asarray(probe) > j, pts, -1)
         cands.append(pts.reshape(b, -1))
     cand = jnp.concatenate(cands, axis=1)               # [b, Tcap]
     return rerank_candidates(state, Q, cand, k)
@@ -166,7 +174,8 @@ def search(state: IndexState, Q, *, k: int, probe: int = 1):
 
 SPEC = register_functional(FunctionalSpec(
     name="RPForest", build=build, search=search,
-    query_params=("probe",), query_defaults=(1,),
+    query_params=("probe", "max_probe"), query_defaults=(1, None),
+    traced_knobs=(("probe", "max_probe"),),
 ))
 
 

@@ -347,19 +347,26 @@ def ivf_build(X: np.ndarray, *, metric: str = "euclidean",
 
 
 def _make_sharded_ivf_fn(mesh: Mesh, axes: tuple, k: int, nprobe: int,
-                         metric: str, M: int):
-    def fn(q, centers, xs, ids, starts, sizes):
+                         metric: str, M: int, traced: bool = False):
+    """With ``traced=True`` the probe window is sized at ``nprobe`` (the
+    static cap) and the function takes an extra replicated runtime
+    ``n_probes`` scalar: probes past it are masked out of the candidate
+    window, so one shard_map trace serves every probe count <= the cap."""
+    def fn(q, n_probes, centers, xs, ids, starts, sizes):
         # local block: xs [1, L, d], ids [1, L], starts/sizes [1, C];
         # q and the coarse quantizer are replicated
         x, idl = xs[0], ids[0]
         st, sz = starts[0], sizes[0]
         cd = D.sq_l2_matrix(q, centers)
         _, probes = jax.lax.top_k(-cd, nprobe)          # [b, P]
+        probe_live = jnp.arange(nprobe, dtype=jnp.int32) \
+            < jnp.clip(n_probes, 1, nprobe)             # [P]
         lo = st[probes]                                 # [b, P]
         ln = sz[probes]
         offs = jnp.arange(M, dtype=jnp.int32)
         cand = lo[..., None] + offs[None, None, :]
         valid = offs[None, None, :] < ln[..., None]
+        valid = valid & probe_live[None, :, None]
         cand = jnp.minimum(cand, x.shape[0] - 1).reshape(q.shape[0], -1)
         valid = valid.reshape(q.shape[0], -1)
         xc = x[cand]
@@ -380,30 +387,47 @@ def _make_sharded_ivf_fn(mesh: Mesh, axes: tuple, k: int, nprobe: int,
 
     shmapped = shard_map(
         fn, mesh=mesh,
-        in_specs=(P(), P(), P(axes), P(axes), P(axes), P(axes)),
+        in_specs=(P(), P(), P(), P(axes), P(axes), P(axes), P(axes)),
         out_specs=(P(), P()), check_rep=False)
-    return jax.jit(shmapped)
+    if traced:
+        return jax.jit(shmapped)
+    # static knob: bake the probe count in (window == live probes)
+    return jax.jit(lambda q, c, xs, ids, st, sz: shmapped(
+        q, jnp.int32(nprobe), c, xs, ids, st, sz))
 
 
-def ivf_search(state: IndexState, Q, *, k: int, n_probes: int = 1,
+def ivf_search(state: IndexState, Q, *, k: int, n_probes=1,
+               max_probes: Optional[int] = None,
                mesh: Optional[Mesh] = None):
+    """``max_probes`` (static) sizes the probed window; ``n_probes`` may
+    then be a traced runtime value (same contract as single-device IVF)."""
     mesh, axes = _resolve_mesh(state, mesh)
     C = state.stat("n_clusters")
-    nprobe = max(1, min(int(n_probes), C))
     k = min(k, state.stat("n"))
     M = state.stat("pad")
-    fn = _cached_fn(
-        ("ivf", mesh, axes, k, nprobe, state.metric, M),
-        lambda: _make_sharded_ivf_fn(mesh, axes, k, nprobe, state.metric, M))
     Q = prepare_queries(Q, state.metric)
-    return fn(Q, state["centers"], state["xs"], state["ids"],
-              state["starts"], state["sizes"])
+    args = (Q, state["centers"], state["xs"], state["ids"],
+            state["starts"], state["sizes"])
+    if max_probes is None:
+        nprobe = max(1, min(int(n_probes), C))
+        fn = _cached_fn(
+            ("ivf", mesh, axes, k, nprobe, state.metric, M),
+            lambda: _make_sharded_ivf_fn(mesh, axes, k, nprobe,
+                                         state.metric, M))
+        return fn(*args)
+    cap = max(1, min(int(max_probes), C))
+    fn = _cached_fn(
+        ("ivf-traced", mesh, axes, k, cap, state.metric, M),
+        lambda: _make_sharded_ivf_fn(mesh, axes, k, cap, state.metric, M,
+                                     traced=True))
+    return fn(Q, jnp.asarray(n_probes, jnp.int32), *args[1:])
 
 
 register_functional(FunctionalSpec(
     name="ShardedIVF", build=ivf_build, search=ivf_search,
-    query_params=("n_probes",), query_defaults=(1,),
-    static_query_params=("n_probes", "mesh"),
+    query_params=("n_probes", "max_probes"), query_defaults=(1, None),
+    static_query_params=("n_probes", "max_probes", "mesh"),
+    traced_knobs=(("n_probes", "max_probes"),),
 ))
 
 

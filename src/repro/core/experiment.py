@@ -91,6 +91,11 @@ def _experiment_loop(algo, definition, dataset, settings) -> List[RunRecord]:
     records: List[RunRecord] = []
 
     qgroups: Sequence[tuple] = definition.query_argument_groups or ((),)
+    if len(qgroups) > 1 and hasattr(algo, "prepare_query_sweep"):
+        # Traced-knob sweep (paper §2.2's per-query-args reconfiguration,
+        # minus the recompilation): pin each sweepable knob's static cap to
+        # the max across groups so ONE jit trace serves every group below.
+        algo.prepare_query_sweep(qgroups)
     for qargs in qgroups:
         if qargs:
             algo.set_query_arguments(*qargs)

@@ -156,6 +156,7 @@ class FunctionalANN(BaseANN):
             self._qparams.update(query_params)
         self._state = None
         self._jq = None
+        self._traced_knobs: tuple = ()
         if algo is not None:
             self.name = f"Functional({spec.name})"
 
@@ -170,10 +171,10 @@ class FunctionalANN(BaseANN):
         """Hook: subclasses mirror host-side attributes from the state."""
 
     def _rebuild(self) -> None:
-        import jax
+        from repro.ann.functional import jit_search_fn
 
-        static = ("k",) + tuple(self._spec.static_params)
-        self._jq = jax.jit(self._search_fn(), static_argnames=static)
+        self._jq = jit_search_fn(self._search_fn(), self._spec,
+                                 traced=self._traced_knobs)
 
     def _search_fn(self):
         """Hook: the pure function to jit (default: the spec's search)."""
@@ -187,6 +188,37 @@ class FunctionalANN(BaseANN):
                 f"{self._spec.name} takes at most {len(names)} query "
                 f"arguments {names}, got {len(args)}")
         self._qparams.update(zip(names, args))
+
+    def prepare_query_sweep(self, qgroups: Sequence[tuple]) -> tuple:
+        """Arrange for ONE jit trace to serve every query-args group.
+
+        For each knob the spec declares a traced-cap treatment for
+        (``traced_knobs``), pin its static ``max_*`` cap to the largest
+        value across ``qgroups`` and demote the knob itself to a traced
+        runtime value.  The experiment loop calls this before its
+        query-args sweep; subsequent ``set_query_arguments`` calls then
+        change behaviour without recompilation.  Returns the knobs traced
+        (empty when no sweep-worthy knob was found — e.g. a single group).
+        """
+        traced = []
+        for knob, cap in self._spec.traced_knobs:
+            if knob not in self._spec.query_params:
+                continue
+            pos = self._spec.query_params.index(knob)
+            vals = [g[pos] for g in qgroups
+                    if len(g) > pos and isinstance(g[pos], (int, np.integer))]
+            if len(set(vals)) < 2:       # nothing to sweep: stay static
+                continue
+            default = self._qparams.get(knob)
+            if isinstance(default, (int, np.integer)):
+                vals.append(default)     # cap covers the pre-sweep default
+            self._qparams[cap] = int(max(vals))
+            traced.append(knob)
+        if traced:
+            self._traced_knobs = tuple(traced)
+            if self._state is not None:
+                self._rebuild()
+        return tuple(traced)
 
     def _postprocess(self, out: Any, Q: Any, k: int):
         """Hook: raw search output -> (dists, ids); record per-run stats."""

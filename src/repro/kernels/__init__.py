@@ -12,8 +12,7 @@ Kernels:
     distance_topk/ streaming fused distance + top-k: VMEM-scratch top-k
                    accumulators, d-tiling, and query-block streaming so
                    nq and n are both unbounded by HBM (O(nq*k) output)
-    topk_scan/     RETIRED — deprecation shim re-exporting distance_topk
-                   under the old names
+                   (supersedes the retired topk_scan kernel)
     hamming/       XOR + popcount distances over packed uint32 codes
     embedbag/      embedding-bag gather-reduce (recsys hot path)
     decode_attn/   single-token decode attention with online softmax

@@ -18,8 +18,12 @@ open-ended stream of variable-size requests.  ``Engine`` turns an immutable
     stale file).  A version mismatch raises :class:`CheckpointError`.
 
 Query-time knobs ride along per engine (``query_params=``) and can be
-overridden per call; traced knobs (e.g. IVF's ``n_probes`` under a static
-``max_probes`` cap) change behaviour *without* recompilation.
+overridden per ``search()`` call or per ``submit()``-ed request; a knob
+whose static ``max_*`` cap partner is pinned in ``query_params`` is
+automatically demoted to a traced runtime value (the spec's
+``traced_knobs``), so per-request quality settings — e.g. IVF's
+``n_probes`` under ``max_probes``, HNSW's ``ef`` under ``max_ef`` —
+change behaviour *without* recompilation.
 """
 
 from __future__ import annotations
@@ -171,12 +175,15 @@ class Engine:
         self.query_params.update(query_params or {})
         # ``traced_params`` demotes spec-static knobs to runtime values —
         # e.g. IVF's n_probes under a pinned max_probes cap: the knob then
-        # sweeps recall/QPS with zero retraces.
-        self.traced_params = tuple(traced_params)
-        static = ("k",) + tuple(p for p in self.spec.static_params
-                                if p not in self.traced_params)
-        self._search = jax.jit(self.spec.search, static_argnames=static)
-        self._pending: list = []            # (ticket, np.ndarray [d])
+        # sweeps recall/QPS with zero retraces.  Knobs whose static cap
+        # partner is pinned in ``query_params`` are demoted automatically.
+        traced = list(traced_params)
+        for knob, cap in self.spec.traced_knobs:
+            if knob not in traced and self.query_params.get(cap) is not None:
+                traced.append(knob)
+        self.traced_params = tuple(traced)
+        self._search = self.spec.jit_search(traced=self.traced_params)
+        self._pending: list = []    # (ticket, np.ndarray [d], key, overrides)
         self._results: Dict[int, Tuple[np.ndarray, np.ndarray]] = {}
         self._next_ticket = 0
         self.stats = {"queries": 0, "batches": 0, "padded": 0,
@@ -210,10 +217,29 @@ class Engine:
         })
 
     # -------------------------------------------------------------- serving
+    def _check_caps(self, params) -> None:
+        """Reject knob values above their static cap: the traced search
+        would silently clamp them (shapes are fixed at trace time), which
+        must not masquerade as the requested quality setting."""
+        for knob, cap in self.spec.traced_knobs:
+            cap_v, knob_v = params.get(cap), params.get(knob)
+            if cap_v is None or knob_v is None:
+                continue
+            try:
+                knob_i = int(np.asarray(knob_v))
+            except (TypeError, ValueError):
+                continue
+            if knob_i > int(cap_v):
+                raise ValueError(
+                    f"{knob}={knob_i} exceeds the engine's static "
+                    f"{cap}={int(cap_v)} (the trace would clamp it); "
+                    f"rebuild the Engine with a larger {cap}")
+
     def _run_padded(self, Qb: np.ndarray, n_live: int, overrides):
         """One fixed-shape device call: Qb is already [batch_size, d]."""
         params = dict(self.query_params)
         params.update(overrides)
+        self._check_caps(params)
         t0 = time.perf_counter()
         dists, ids = self._search(self.state, Qb, k=self.k, **params)
         ids = jax.block_until_ready(ids)
@@ -254,26 +280,48 @@ class Engine:
         return np.concatenate(dists_out), np.concatenate(ids_out)
 
     # ------------------------------------------------------- request stream
-    def submit(self, q) -> int:
-        """Queue one query; returns a ticket redeemable after flush()."""
+    def submit(self, q, **overrides) -> int:
+        """Queue one query; returns a ticket redeemable after flush().
+
+        Keyword overrides are per-request query params (e.g. a traced
+        ``n_probes``): requests sharing the same overrides are answered in
+        the same micro-batch, and a traced knob never retraces.
+        """
+        # Validate caps HERE, before anything is queued: a bad override
+        # must fail its own submit(), never a later flush() that would
+        # jeopardise other clients' queued tickets.
+        merged = dict(self.query_params)
+        merged.update(overrides)
+        self._check_caps(merged)
         ticket = self._next_ticket
         self._next_ticket += 1
-        self._pending.append((ticket, np.asarray(q)))
+        self._pending.append((ticket, np.asarray(q),
+                              _override_key(overrides), overrides))
         if len(self._pending) >= self.batch_size:
             self.flush()
         return ticket
 
     def flush(self) -> None:
-        """Answer every pending query in fixed-shape micro-batches."""
+        """Answer every pending query in fixed-shape micro-batches,
+        grouped by per-request overrides (submission order within each
+        group is preserved).  Requests leave the queue only once their
+        micro-batch succeeds, so a failure leaves the rest pending."""
         while self._pending:
-            chunk = self._pending[:self.batch_size]
-            self._pending = self._pending[self.batch_size:]
-            Qb = np.stack([q for _, q in chunk])
+            key0 = self._pending[0][2]
+            chunk, rest = [], []
+            for item in self._pending:
+                if item[2] == key0 and len(chunk) < self.batch_size:
+                    chunk.append(item)
+                else:
+                    rest.append(item)
+            Qb = np.stack([q for _, q, _, _ in chunk])
             live = Qb.shape[0]
-            dists, ids = self._run_padded(self._pad_batch(Qb), live, {})
+            dists, ids = self._run_padded(self._pad_batch(Qb), live,
+                                          chunk[0][3])
+            self._pending = rest
             ids = np.asarray(ids)
             dists = np.asarray(dists)
-            for i, (ticket, _) in enumerate(chunk):
+            for i, (ticket, _, _, _) in enumerate(chunk):
                 self._results[ticket] = (dists[i], ids[i])
 
     def result(self, ticket: int) -> Tuple[np.ndarray, np.ndarray]:
@@ -299,3 +347,16 @@ class Engine:
 def _is_plain(v) -> bool:
     """query params that survive a JSON round-trip (meshes etc. do not)."""
     return isinstance(v, (int, float, str, bool, type(None), tuple, list))
+
+
+def _override_key(overrides: Dict[str, Any]) -> tuple:
+    """Hashable grouping key for per-request overrides (scalar arrays
+    collapse to their python value so e.g. jnp.int32(8) == 8)."""
+    def norm(v):
+        if np.ndim(v) == 0 and not isinstance(v, (str, bytes)):
+            try:
+                return np.asarray(v).item()
+            except (TypeError, ValueError):
+                pass
+        return repr(v)
+    return tuple(sorted((name, norm(v)) for name, v in overrides.items()))

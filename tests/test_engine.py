@@ -138,6 +138,78 @@ def test_engine_traced_knob_survives_checkpoint(small_dataset, tmp_path):
     np.testing.assert_array_equal(a, b)
 
 
+def test_engine_per_request_overrides_do_not_retrace(small_dataset):
+    """A pinned max_probes cap auto-demotes n_probes to a traced knob:
+    per-request overrides through search() AND the submit()/flush() ticket
+    stream sweep the knob with exactly ONE jit trace."""
+    from repro.ann import functional, ivf
+
+    eng = Engine.build("IVF", small_dataset.train, metric="euclidean",
+                       build_params={"n_clusters": 30},
+                       query_params={"max_probes": 30, "n_probes": 2},
+                       k=10, batch_size=16)
+    assert "n_probes" in eng.traced_params     # auto-traced via the cap
+    functional.TRACE_COUNTS.clear()
+    for p in (1, 8, 30):
+        _, got = eng.search(small_dataset.test[:20], n_probes=p)
+        _, want = ivf.search(eng.state, small_dataset.test[:20], k=10,
+                             n_probes=p)
+        np.testing.assert_array_equal(got, np.asarray(want))
+    # ticket stream: interleaved per-request knobs, answered in override
+    # groups, still zero new traces
+    tickets = [(engq, p) for p in (1, 8, 30, 8)
+               for engq in [eng.submit(small_dataset.test[0], n_probes=p)]]
+    eng.flush()
+    for t, p in tickets:
+        _, ids = eng.result(t)
+        _, want = ivf.search(eng.state, small_dataset.test[:1], k=10,
+                             n_probes=p)
+        np.testing.assert_array_equal(ids, np.asarray(want)[0])
+    assert functional.TRACE_COUNTS["IVF"] == 1, (
+        f"engine retraced: {functional.TRACE_COUNTS['IVF']} traces")
+
+
+def test_engine_rejects_override_above_cap(small_dataset):
+    """A traced knob above its static cap would be silently clamped by the
+    in-kernel mask; the engine must reject it instead of serving degraded
+    results as if they were the requested setting."""
+    eng = Engine.build("IVF", small_dataset.train, metric="euclidean",
+                       build_params={"n_clusters": 30},
+                       query_params={"max_probes": 8, "n_probes": 2},
+                       k=10, batch_size=16)
+    with pytest.raises(ValueError, match="exceeds the engine's static"):
+        eng.search(small_dataset.test[:4], n_probes=9)
+    # a bad override fails its own submit() — queued tickets of other
+    # clients are untouched and still redeemable
+    good = eng.submit(small_dataset.test[0], n_probes=4)
+    with pytest.raises(ValueError, match="exceeds the engine's static"):
+        eng.submit(small_dataset.test[1], n_probes=9)
+    eng.flush()
+    dists, ids_one = eng.result(good)
+    assert ids_one.shape == (10,)
+    _, ids = eng.search(small_dataset.test[:4], n_probes=8)   # at cap: fine
+    assert ids.shape == (4, 10)
+
+
+def test_engine_checkpoint_roundtrips_static_caps(small_dataset, tmp_path):
+    """The static max_* cap is engine configuration: it must survive a
+    checkpoint round-trip so a restored engine keeps serving traced knob
+    values under the same cap."""
+    eng = Engine.build("IVF", small_dataset.train, metric="euclidean",
+                       build_params={"n_clusters": 30},
+                       query_params={"max_probes": 30, "n_probes": 2},
+                       k=10, batch_size=16)
+    path = tmp_path / "capped.ckpt"
+    eng.save(path)
+    restored = Engine.load(path)
+    assert restored.query_params["max_probes"] == 30
+    assert restored.query_params["n_probes"] == 2
+    assert "n_probes" in restored.traced_params
+    _, a = eng.search(small_dataset.test[:8], n_probes=12)
+    _, b = restored.search(small_dataset.test[:8], n_probes=12)
+    np.testing.assert_array_equal(a, b)
+
+
 def test_engine_recall_gate(small_dataset):
     """The serve-smoke contract: a few hundred micro-batched queries
     through the Engine reach recall >= 0.9, via the shared metrics path."""

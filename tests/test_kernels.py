@@ -40,31 +40,6 @@ def test_distance_kernel_dtypes(dtype):
                                rtol=tol, atol=tol * 10)
 
 
-# ------------------------------------------------- topk_scan (retired shim)
-def test_topk_scan_shim_warns_and_matches_stream_topk():
-    """kernels/topk_scan is retired: the old names must still resolve, emit
-    a DeprecationWarning, and return exactly the streaming kernel's
-    results."""
-    from repro.kernels.distance_topk import stream_topk
-    from repro.kernels.topk_scan import distance_topk, distance_topk_ref
-
-    rng = np.random.default_rng(11)
-    Q = rng.standard_normal((16, 32)).astype(np.float32)
-    X = rng.standard_normal((300, 32)).astype(np.float32)
-    with pytest.warns(DeprecationWarning):
-        v, i = distance_topk(jnp.asarray(Q), jnp.asarray(X), k=7,
-                             metric="euclidean", bn=256)
-    sv, si = stream_topk(jnp.asarray(Q), jnp.asarray(X), k=7,
-                         metric="euclidean", bn=256)
-    np.testing.assert_array_equal(np.asarray(i), np.asarray(si))
-    np.testing.assert_allclose(np.asarray(v), np.asarray(sv))
-    rv, ri = distance_topk_ref(jnp.asarray(Q), jnp.asarray(X), k=7,
-                               mode="l2sq")
-    np.testing.assert_allclose(np.asarray(v), np.asarray(rv), rtol=1e-4,
-                               atol=1e-4)
-    assert np.mean(np.asarray(i) == np.asarray(ri)) > 0.99
-
-
 # ------------------------------------------------- streaming distance+topk
 @pytest.mark.parametrize("nq,n,d,k", [(8, 256, 32, 5), (33, 700, 64, 10),
                                       (16, 1024, 300, 100), (3, 999, 17, 7)])

@@ -1,5 +1,7 @@
 """Hypothesis property tests on system invariants."""
 
+import functools
+
 import numpy as np
 import pytest
 
@@ -18,6 +20,63 @@ settings.load_profile("ci")
 
 floats = st.floats(min_value=-100, max_value=100, allow_nan=False,
                    width=32)
+
+
+# ------------------------------------------------ traced-cap knob parity
+# For every distance metric: searching with the knob traced under a static
+# cap must equal the static-knob path for ANY knob value under the cap (the
+# invariant the retrace-free sweep machinery rests on; see test_sweep.py
+# for the trace-count side).
+
+@functools.lru_cache(maxsize=None)
+def _traced_case(algo: str):
+    """(jitted traced-cap search, static search fn, state, Q, cap)."""
+    from repro.ann.functional import get_functional
+
+    rng = np.random.default_rng(7)
+    spec = get_functional(algo)
+    if algo == "IVF":
+        X = rng.standard_normal((300, 16)).astype(np.float32)
+        state = spec.build(X, metric="euclidean", n_clusters=20)
+        cap = 20
+    elif algo == "HyperplaneLSH":
+        X = rng.standard_normal((300, 16)).astype(np.float32)
+        state = spec.build(X, metric="angular", n_tables=6, n_bits=8,
+                           cap=64)
+        cap = 8
+    else:                                    # MultiIndexHashing
+        X = rng.integers(0, 2**32, (300, 4), dtype=np.uint32)
+        state = spec.build(X, metric="hamming", n_chunks=8, cap=64)
+        cap = 2
+    (knob, cap_name), = spec.traced_knobs
+    jq = spec.jit_search(traced=(knob,))
+    Q = X[:8]
+    return spec, jq, state, Q, knob, cap_name, cap
+
+
+def _assert_traced_equals_static(algo: str, value: int):
+    spec, jq, state, Q, knob, cap_name, cap = _traced_case(algo)
+    got_d, got = jq(state, Q, k=5, **{knob: value, cap_name: cap})
+    want_d, want = spec.search(state, Q, k=5, **{knob: value})
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+    # jit-vs-eager fusion differences leave float round-off near zero
+    np.testing.assert_allclose(np.asarray(got_d), np.asarray(want_d),
+                               rtol=1e-5, atol=1e-4)
+
+
+@given(st.integers(1, 20))
+def test_traced_cap_parity_euclidean_ivf(n_probes):
+    _assert_traced_equals_static("IVF", n_probes)
+
+
+@given(st.integers(1, 8))
+def test_traced_cap_parity_angular_lsh(n_probes):
+    _assert_traced_equals_static("HyperplaneLSH", n_probes)
+
+
+@given(st.integers(0, 2))
+def test_traced_cap_parity_hamming_mih(radius):
+    _assert_traced_equals_static("MultiIndexHashing", radius)
 
 
 @given(st.lists(floats, min_size=1, max_size=40), st.integers(1, 10))

@@ -1,0 +1,197 @@
+"""Retrace-free query-knob sweeps (ISSUE 3): trace-count + parity harness.
+
+The paper's configuration system reconfigures query arguments per group so
+"built data structures [are] reused, greatly reducing duplicated work"
+(§2.2/§3.3) — but in a jit world reuse of the *index* is not enough: a
+shape-affecting knob recompiles the search per value.  The traced-cap
+treatment (knob traced under a static ``max_*`` cap, work past the knob
+value masked in-kernel) makes the sweep free.  These tests pin that down
+for EVERY algorithm with a ``traced_knobs`` declaration:
+
+  * exactly ONE jit trace across a multi-value knob sweep (counted by the
+    :data:`repro.ann.functional.TRACE_COUNTS` hook inside ``jit_search``);
+  * bit-parity with the static path at every swept value;
+  * ``search_sweep`` (vmap over the knob grid inside one trace) returns,
+    per row, exactly what the static path returns — and repeated sweeps
+    with *different* values of the same grid length never retrace;
+  * the experiment loop serves a multi-group query-args sweep from one
+    trace end to end.
+"""
+
+import numpy as np
+import pytest
+
+from repro.ann import functional
+from repro.ann.functional import get_functional, search_sweep
+
+
+# name -> (dataset fixture, build params, swept values, extra query params)
+# Values exercise several points under the cap, cap = max(values).
+SWEEP_CASES = {
+    "IVF": ("small_dataset", {"n_clusters": 30}, (1, 4, 12, 30), {}),
+    "HNSW": ("small_dataset", {"M": 8, "ef_construction": 40},
+             (16, 32, 64), {}),
+    "KNNGraph": ("small_dataset", {"degree": 16}, (16, 32, 64), {}),
+    "HyperplaneLSH": ("small_angular",
+                      {"n_tables": 8, "n_bits": 10, "cap": 128},
+                      (1, 3, 6), {}),
+    "E2LSH": ("small_dataset",
+              {"n_tables": 8, "n_hashes": 6, "width": 2.0, "cap": 128},
+              (1, 3, 6), {}),
+    "RPForest": ("small_dataset", {"n_trees": 8, "leaf_size": 32},
+                 (1, 2, 4), {}),
+    "BitsamplingAnnoy": ("small_hamming", {"n_trees": 6}, (1, 2, 4), {}),
+    "MultiIndexHashing": ("small_hamming", {"n_chunks": 16, "cap": 64},
+                          (0, 1, 2), {}),
+    "ShardedIVF": ("small_dataset", {"n_clusters": 30}, (1, 4, 12, 30), {}),
+}
+
+K = 10
+
+_STATES: dict = {}
+
+
+@pytest.fixture
+def trace_counter():
+    functional.TRACE_COUNTS.clear()
+    yield functional.TRACE_COUNTS
+    functional.TRACE_COUNTS.clear()
+
+
+def _built_state(name, request):
+    """Session-cached build (builds are the slow part, sweeps the subject)."""
+    if name not in _STATES:
+        fixture, build_params, _, _ = SWEEP_CASES[name]
+        ds = request.getfixturevalue(fixture)
+        spec = get_functional(name)
+        _STATES[name] = (spec.build(ds.train, metric=ds.metric,
+                                    **build_params), ds)
+    return _STATES[name]
+
+
+def test_every_traced_knob_algorithm_has_a_sweep_case():
+    specs = functional.available_functional()
+    with_knobs = {n for n, s in specs.items() if s.traced_knobs}
+    assert with_knobs == set(SWEEP_CASES), (
+        "algorithm with traced knobs registered without a sweep case "
+        "(or vice versa)")
+
+
+@pytest.mark.parametrize("name", sorted(SWEEP_CASES))
+def test_single_trace_and_parity_across_knob_sweep(name, request,
+                                                   trace_counter):
+    """ONE trace serves every knob value <= the cap, and each traced-cap
+    result equals the static-knob path bit for bit."""
+    _, _, values, extra = SWEEP_CASES[name]
+    state, ds = _built_state(name, request)
+    spec = get_functional(name)
+    (knob, cap_name), = spec.traced_knobs
+    Q = ds.test[:32]
+
+    jq = spec.jit_search(traced=(knob,))
+    cap = max(values)
+    trace_counter.clear()
+    for v in values:
+        d, ids = jq(state, Q, k=K, **{knob: v, cap_name: cap}, **extra)
+        want_d, want = spec.search(state, Q, k=K, **{knob: v}, **extra)
+        np.testing.assert_array_equal(
+            np.asarray(ids)[:, :K], np.asarray(want)[:, :K],
+            err_msg=f"{name}: traced {knob}={v} (cap {cap}) != static path")
+        np.testing.assert_allclose(
+            np.asarray(d)[:, :K], np.asarray(want_d)[:, :K], rtol=1e-5,
+            err_msg=f"{name}: traced {knob}={v} distances differ")
+    assert trace_counter[name] == 1, (
+        f"{name}: {trace_counter[name]} traces for a "
+        f"{len(values)}-value {knob} sweep (want exactly 1)")
+
+
+@pytest.mark.parametrize("name", ["IVF", "KNNGraph", "RPForest",
+                                  "MultiIndexHashing"])
+def test_search_sweep_matches_static_per_row(name, request, trace_counter):
+    """search_sweep evaluates the whole grid in one trace; row i is the
+    static path's answer for values[i]."""
+    _, _, values, extra = SWEEP_CASES[name]
+    state, ds = _built_state(name, request)
+    spec = get_functional(name)
+    (knob, _), = spec.traced_knobs
+    Q = ds.test[:16]
+
+    trace_counter.clear()
+    d, ids = search_sweep(state, Q, k=K, knob_grid={knob: values}, **extra)
+    assert ids.shape[0] == len(values) and ids.shape[1] == Q.shape[0]
+    for i, v in enumerate(values):
+        _, want = spec.search(state, Q, k=K, **{knob: v}, **extra)
+        np.testing.assert_array_equal(
+            np.asarray(ids)[i, :, :K], np.asarray(want)[:, :K],
+            err_msg=f"{name}: search_sweep row {knob}={v} != static path")
+    assert trace_counter[name] == 1
+
+    # different values, same grid length, same cap: still zero new traces
+    shifted = tuple(max(1, v - 1) for v in values)
+    search_sweep(state, Q, k=K,
+                 knob_grid={knob: shifted},
+                 **{spec.cap_for(knob): max(values)}, **extra)
+    assert trace_counter[name] == 1
+
+
+def test_search_sweep_rejects_unknown_or_multi_knob(small_dataset, request):
+    state, _ = _built_state("IVF", request)
+    with pytest.raises(KeyError, match="traced-cap"):
+        search_sweep(state, small_dataset.test[:4], k=5,
+                     knob_grid={"bogus": (1, 2)})
+    with pytest.raises(ValueError, match="exactly one knob"):
+        search_sweep(state, small_dataset.test[:4], k=5,
+                     knob_grid={"n_probes": (1, 2), "max_probes": (4, 4)})
+    # the swept knob must come from the grid alone — a conflicting fixed
+    # value would silently mislabel every row
+    with pytest.raises(ValueError, match="both knob_grid and query_params"):
+        search_sweep(state, small_dataset.test[:4], k=5,
+                     knob_grid={"n_probes": (1, 2)}, n_probes=2)
+    # an explicit cap below the grid max would clamp rows in-kernel and
+    # present them as the requested value
+    with pytest.raises(ValueError, match="exceeds max_probes"):
+        search_sweep(state, small_dataset.test[:4], k=5,
+                     knob_grid={"n_probes": (1, 16)}, max_probes=8)
+
+
+def test_jit_search_rejects_capless_knob():
+    """Only knobs with a declared cap partner may be traced: anything else
+    fails fast with a clear error instead of an opaque tracer error deep
+    inside the search."""
+    spec = get_functional("IVF")
+    with pytest.raises(ValueError, match="no traced-cap treatment"):
+        spec.jit_search(traced=("max_probes",))
+    with pytest.raises(ValueError, match="no traced-cap treatment"):
+        spec.jit_search(traced=("bogus",))
+
+
+def test_experiment_loop_single_trace_across_query_args(small_dataset,
+                                                        trace_counter):
+    """End to end: a 4-group query-args sweep through the experiment loop
+    compiles the search exactly once (the per-group retrace is gone)."""
+    from repro.core.config import Definition
+    from repro.core.experiment import ExperimentSettings, run_definition
+    from repro.core.metrics import recall
+
+    d = Definition(algorithm="ivf", constructor="IVF", module=None,
+                   arguments=("euclidean", 30),
+                   query_argument_groups=((1,), (4,), (12,), (30,)))
+    records = run_definition(d, small_dataset,
+                             ExperimentSettings(count=10, batch_mode=True))
+    assert len(records) == 4
+    assert trace_counter["IVF"] == 1, (
+        f"experiment loop retraced: {trace_counter['IVF']} traces "
+        f"for 4 query-args groups")
+    recalls = [recall(r) for r in records]
+    assert recalls == sorted(recalls)        # more probes -> >= recall
+
+
+def test_prepare_query_sweep_noop_on_single_group(small_dataset):
+    """A single query-args group stays on the static path (no cap pinned,
+    nothing traced)."""
+    from repro.core.registry import available
+
+    algo = available()["IVF"]("euclidean", n_clusters=30)
+    algo.fit(small_dataset.train)
+    assert algo.prepare_query_sweep(((5,),)) == ()
+    assert algo._qparams.get("max_probes") is None
