@@ -66,7 +66,7 @@ def run(scale: str = "default"):
 
     for name, (build_params, values) in SWEEPS.items():
         spec = get_functional(name)
-        (knob, cap_name), = spec.traced_knobs
+        knob, cap_name = spec.traced_knobs[0]
         state = spec.build(ds.train, metric=ds.metric, **build_params)
         cap = max(values)
 

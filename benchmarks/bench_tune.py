@@ -1,0 +1,138 @@
+"""Multi-knob grid sweep + auto-tuner benchmark (ISSUE 4 acceptance).
+
+Two measurements per algorithm, cold (compiles included — compiling IS the
+workload under sweep churn):
+
+  * **per_combo_retrace** — the legacy way to evaluate a cartesian
+    query-knob grid: one static jitted search per combination, every
+    combination compiling its own executable.
+  * **grid_sweep** — the whole multi-knob grid vmapped inside ONE trace
+    (``functional.search_sweep``): one compile, one device call.
+
+Results are asserted identical per combination (equal recall by
+construction), and a tuner gate runs ``tune.grid_search`` under a recall
+floor and asserts the chosen config is feasible and QPS-optimal among the
+feasible grid points — the CI smoke lane fails if the tuner regresses.
+
+    PYTHONPATH=src python benchmarks/bench_tune.py [--smoke]
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import numpy as np
+
+try:
+    from benchmarks.common import Row, dataset_size
+except ModuleNotFoundError:          # direct script invocation
+    import pathlib
+    import sys
+    sys.path.insert(0, str(pathlib.Path(__file__).resolve().parents[1]))
+    from benchmarks.common import Row, dataset_size
+from repro import tune
+from repro.ann import functional
+from repro.ann.functional import get_functional, grid_combos, search_sweep
+from repro.data import get_dataset
+
+K = 10
+NQ = 256
+
+# algorithm -> (build params, cartesian grid over BOTH traced knob pairs)
+GRIDS = {
+    "IVF": ({"n_clusters": 64}, {"n_probes": (2, 8, 32), "scan": (16, 64)}),
+    "RPForest": ({"n_trees": 8, "leaf_size": 32},
+                 {"probe": (1, 2, 4), "trees": (4, 8)}),
+}
+
+
+def run(scale: str = "default"):
+    n = dataset_size(scale)
+    ds = get_dataset(f"blobs-euclidean-{n}")
+    Q = ds.test[:NQ]
+    rows = []
+
+    for name, (build_params, grid) in GRIDS.items():
+        spec = get_functional(name)
+        state = spec.build(ds.train, metric=ds.metric, **build_params)
+        combos = grid_combos(grid)
+
+        # legacy: one static compile + call per combination
+        functional.TRACE_COUNTS.clear()
+        jq_static = spec.jit_search()
+        t0 = time.perf_counter()
+        ids_static = [
+            np.asarray(jax.block_until_ready(
+                jq_static(state, Q, k=K, **combo))[1])
+            for combo in combos
+        ]
+        t_retrace = time.perf_counter() - t0
+        retraces = functional.TRACE_COUNTS[name]
+
+        # one vmapped trace for the whole grid
+        functional.TRACE_COUNTS.clear()
+        t0 = time.perf_counter()
+        _, sweep_ids = jax.block_until_ready(
+            search_sweep(state, Q, k=K, knob_grid=grid))
+        t_sweep = time.perf_counter() - t0
+        traces = functional.TRACE_COUNTS[name]
+        assert traces == 1, f"{name}: grid sweep took {traces} traces"
+
+        # equal recall by construction: identical neighbors per combination
+        sweep_ids = np.asarray(sweep_ids)
+        for i in range(len(combos)):
+            w = ids_static[i].shape[1]
+            np.testing.assert_array_equal(ids_static[i],
+                                          sweep_ids[i][:, :w])
+
+        shape = "x".join(str(len(v)) for v in grid.values())
+        gridname = f"{'+'.join(grid)}[{shape}]"
+        rows.append(Row(f"tune/{name}/per_combo_retrace/{gridname}",
+                        t_retrace * 1e6,
+                        f"traces={retraces};nq={NQ}"))
+        rows.append(Row(f"tune/{name}/grid_sweep/{gridname}",
+                        t_sweep * 1e6,
+                        f"traces=1;x={t_retrace / t_sweep:.2f};"
+                        f"equal_recall=True"))
+
+    # ---- tuner-constraint gate (IVF): chosen config must satisfy the
+    # recall floor and maximize QPS among feasible grid points
+    spec = get_functional("IVF")
+    state = spec.build(ds.train, metric=ds.metric, n_clusters=64)
+    floor = 0.9
+    t0 = time.perf_counter()
+    result = tune.grid_search(
+        state, Q, ds.distances[:NQ], k=K,
+        knob_grid={"n_probes": (1, 2, 4, 8, 16, 32, 64),
+                   "scan": (32, state.stat("pad"))},
+        constraint=tune.Constraint.min_recall(floor), repetitions=1)
+    t_tune = time.perf_counter() - t0
+    best = result.best
+    assert best is not None, f"tuner found no config with recall>={floor}"
+    assert best.recall >= floor
+    for p in result.points:
+        if p.recall >= floor:
+            assert best.qps >= p.qps, (
+                f"tuner chose {best.params} but feasible {p.params} "
+                f"is faster")
+    cfg = ",".join(f"{k}={v}" for k, v in best.params.items())
+    rows.append(Row("tune/IVF/grid_search", t_tune * 1e6,
+                    f"best={cfg};recall={best.recall:.3f};"
+                    f"qps={best.qps:.0f};floor={floor};gate=pass"))
+    return rows
+
+
+if __name__ == "__main__":
+    import argparse
+
+    p = argparse.ArgumentParser()
+    p.add_argument("--smoke", action="store_true",
+                   help="tiny dataset (CI smoke lane)")
+    p.add_argument("--scale", default=None,
+                   choices=["smoke", "default", "full"])
+    args = p.parse_args()
+    scale = args.scale or ("smoke" if args.smoke else "default")
+    print("name,us_per_call,derived")
+    for row in run(scale):
+        print(row.csv())

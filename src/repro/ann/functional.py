@@ -267,7 +267,7 @@ def available_functional() -> Dict[str, FunctionalSpec]:
 
 
 # --------------------------------------------------------------------------
-# retrace-free knob sweeps
+# retrace-free knob sweeps (multi-knob cartesian grids)
 # --------------------------------------------------------------------------
 
 # Bounded FIFO cache of jitted sweep executables, keyed by everything that
@@ -277,18 +277,22 @@ _SWEEP_FNS: Dict[Any, Callable] = {}
 _SWEEP_FNS_MAX = 64
 
 
-def _sweep_searcher(spec: "FunctionalSpec", knob: str, cap_name: str,
-                    cap: int, k: int, fixed_items: tuple) -> Callable:
-    key = (spec.name, knob, cap_name, cap, k, fixed_items)
+def _sweep_searcher(spec: "FunctionalSpec", knobs: Tuple[str, ...],
+                    caps: Tuple[Tuple[str, int], ...], k: int,
+                    fixed_items: tuple) -> Callable:
+    key = (spec.name, knobs, caps, k, fixed_items)
     fn = _SWEEP_FNS.get(key)
     if fn is None:
         if len(_SWEEP_FNS) >= _SWEEP_FNS_MAX:
             _SWEEP_FNS.pop(next(iter(_SWEEP_FNS)))
         fixed = dict(fixed_items)
+        cap_params = dict(caps)
 
-        def one(state, Q, v):
+        def one(state, Q, vs):
             _note_trace(spec.name)    # runs at trace time only
-            params = {knob: v, cap_name: cap, **fixed}
+            params = dict(zip(knobs, vs))
+            params.update(cap_params)
+            params.update(fixed)
             return spec.search(state, Q, k=k, **params)
 
         fn = _SWEEP_FNS[key] = jax.jit(
@@ -296,52 +300,105 @@ def _sweep_searcher(spec: "FunctionalSpec", knob: str, cap_name: str,
     return fn
 
 
-def search_sweep(state: IndexState, Q, *, k: int,
-                 knob_grid: Mapping[str, Sequence],
-                 **query_params) -> Tuple[Any, Any]:
-    """Evaluate a whole query-knob grid in ONE trace: vmap over knob values.
+def grid_combos(knob_grid: Mapping[str, Sequence]) -> list:
+    """Expand a knob grid into its cartesian combinations.
 
-    ``knob_grid`` maps one traced-capable knob (see the spec's
-    ``traced_knobs``) to the values to sweep; the knob's static ``max_*``
-    cap is pinned to ``max(values)`` unless passed explicitly in
-    ``query_params``.  Returns ``(dists [S, b, kk], ids [S, b, kk])`` with
-    ``S = len(values)`` — row ``i`` is exactly what the static path returns
-    for ``values[i]``.
+    Returns a list of ``{knob: value}`` dicts in row order of
+    :func:`search_sweep` — knobs iterate in ``knob_grid`` insertion order,
+    the LAST knob varying fastest (C order, like ``itertools.product``).
+    """
+    import itertools
 
-    The compiled executable is cached on (algo, knob, cap, k, other
+    names = list(knob_grid)
+    axes = [list(knob_grid[n]) for n in names]
+    if any(len(a) == 0 for a in axes):
+        raise ValueError("every knob in knob_grid needs at least one value")
+    return [dict(zip(names, combo)) for combo in itertools.product(*axes)]
+
+
+def search_sweep_points(state: IndexState, Q, *, k: int,
+                        points: Sequence[Mapping[str, Any]],
+                        **query_params) -> Tuple[Any, Any]:
+    """Evaluate explicit knob combinations in ONE trace: vmap over points.
+
+    ``points`` is a non-empty sequence of ``{knob: value}`` dicts, all with
+    the SAME set of traced-capable knobs (see the spec's ``traced_knobs``);
+    they need not form a full cartesian grid — the experiment loop feeds
+    its literal ``query-args`` groups through here.  Each knob's static
+    ``max_*`` cap is pinned to the max over points unless passed explicitly
+    in ``query_params``.  Returns ``(dists [S, b, kk], ids [S, b, kk])``
+    with ``S = len(points)`` — row ``i`` is exactly what the static path
+    returns for ``points[i]``.
+
+    The compiled executable is cached on (algo, knobs, caps, k, other
     params), so repeated sweeps — including sweeps over *different* values
-    of the same grid length — never retrace; a sweep is one device call
-    instead of one compile + one call per knob value.
+    of the same grid size — never retrace; a sweep is one device call
+    instead of one compile + one call per combination.
     """
     import jax.numpy as jnp
 
     spec = get_functional(state.algo)
-    if len(knob_grid) != 1:
-        raise ValueError(
-            f"search_sweep sweeps exactly one knob per call, got "
-            f"{sorted(knob_grid)}")
-    (knob, values), = knob_grid.items()
-    cap_name = spec.cap_for(knob)
-    values = jnp.asarray(np.asarray(list(values)))
-    if values.ndim != 1 or values.shape[0] == 0:
-        raise ValueError("knob values must be a non-empty 1-D sequence")
+    points = list(points)
+    if not points:
+        raise ValueError("points must be a non-empty sequence of knob dicts")
+    knobs = tuple(points[0])
+    if not knobs:
+        raise ValueError("each point must set at least one knob")
+    for pt in points:
+        if tuple(pt) != knobs:
+            raise ValueError(
+                f"every point must set the same knobs; got {sorted(knobs)} "
+                f"and {sorted(pt)}")
     fixed = dict(query_params)
-    if knob in fixed:
-        raise ValueError(
-            f"{knob!r} appears in both knob_grid and query_params; its "
-            f"value comes from the grid — drop it from query_params")
-    vmax = int(np.asarray(values).max())
-    cap = fixed.pop(cap_name, None)
-    if cap is None:
-        cap = vmax
-    elif vmax > int(cap):
-        raise ValueError(
-            f"knob_grid value {vmax} exceeds {cap_name}={int(cap)}; the "
-            f"in-kernel mask would clamp it and mislabel the row — raise "
-            f"the cap or drop the value")
-    fn = _sweep_searcher(spec, knob, cap_name, int(cap), int(k),
+    caps = []
+    for knob in knobs:
+        cap_name = spec.cap_for(knob)
+        if knob in fixed:
+            raise ValueError(
+                f"{knob!r} appears in both the sweep grid and "
+                f"query_params; its value comes from the grid — drop it "
+                f"from query_params")
+        vmax = max(int(pt[knob]) for pt in points)
+        cap = fixed.pop(cap_name, None)
+        if cap is None:
+            cap = vmax
+        elif vmax > int(cap):
+            raise ValueError(
+                f"sweep value {knob}={vmax} exceeds {cap_name}={int(cap)}; "
+                f"the in-kernel mask would clamp it and mislabel the row — "
+                f"raise the cap or drop the value")
+        caps.append((cap_name, int(cap)))
+    # [S, n_knobs] int32: row i carries point i's knob values, vmapped axis 0
+    values = jnp.asarray(
+        np.asarray([[int(pt[knob]) for knob in knobs] for pt in points],
+                   dtype=np.int32))
+    fn = _sweep_searcher(spec, knobs, tuple(caps), int(k),
                          tuple(sorted(fixed.items())))
     return fn(state, Q, values)
+
+
+def search_sweep(state: IndexState, Q, *, k: int,
+                 knob_grid: Mapping[str, Sequence],
+                 **query_params) -> Tuple[Any, Any]:
+    """Evaluate a cartesian query-knob grid in ONE trace: vmap over combos.
+
+    ``knob_grid`` maps one or more traced-capable knobs (the spec's
+    ``traced_knobs`` — all of them may be swept together) to the values to
+    sweep; the full cartesian product is evaluated in a single device call.
+    Each knob's static ``max_*`` cap is pinned to ``max(values)`` unless
+    passed explicitly in ``query_params``.  Returns ``(dists [S, b, kk],
+    ids [S, b, kk])`` with ``S = prod(len(values_i))`` — row ``i`` is
+    exactly what the static path returns for combination ``i`` in
+    :func:`grid_combos` order (knobs in ``knob_grid`` insertion order, the
+    last knob varying fastest).
+
+    The compiled executable is cached on (algo, knobs, caps, k, other
+    params), so repeated sweeps — including sweeps over *different* values
+    of the same grid shape — never retrace; a whole grid is one device
+    call instead of one compile + one call per combination.
+    """
+    return search_sweep_points(state, Q, k=k, points=grid_combos(knob_grid),
+                               **query_params)
 
 
 # --------------------------------------------------------------------------

@@ -33,6 +33,7 @@ import jax.numpy as jnp
 from repro.ann.functional import (FunctionalSpec, IndexState,
                                   prepare_queries, register_functional)
 from repro.ann.lsh import bucket_lookup, sorted_buckets
+from repro.ann.rpforest import forest_window, mask_dead_trees
 from repro.ann.topk import chunked_topk, topk_smallest, topk_unique
 from repro.core.interface import FunctionalANN
 from repro.core.registry import register
@@ -251,8 +252,7 @@ def bitsampling_build(X: np.ndarray, *, metric: str = "hamming",
 
 
 def _bitsampling_descend(state: IndexState, Q, cur):
-    T = state.stat("n_trees")
-    tree_ids = jnp.arange(T)[None, :]
+    tree_ids = jnp.arange(cur.shape[1])[None, :]
     others = []
     for _ in range(state.stat("depth")):
         is_leaf = cur < 0
@@ -270,15 +270,19 @@ def _bitsampling_descend(state: IndexState, Q, cur):
 
 
 def bitsampling_search(state: IndexState, Q, *, k: int, probe: int = 1,
-                       max_probe=None):
+                       trees=None, max_probe=None, max_trees=None):
     """With ``max_probe`` (static) all cap leaves are descended and the
     candidates of alternates past the traced ``probe`` are masked to -1 —
-    one trace serves every probe count up to the cap."""
+    one trace serves every probe count up to the cap.  ``trees`` /
+    ``max_trees`` is the same treatment along the tree axis (``None`` =
+    all built trees): static it slices the forest, traced it masks dead
+    trees' candidates — exact parity because the popcount rerank selects
+    via ``topk_unique`` (canonical on the (id, dist) set)."""
     Q = prepare_queries(Q, "hamming")
     bq = Q.shape[0]
-    T = state.stat("n_trees")
+    T, trees = forest_window(state.stat("n_trees"), trees, max_trees)
     P = max(1, int(probe)) if max_probe is None else max(1, int(max_probe))
-    start = jnp.broadcast_to(state["roots"][None, :], (bq, T))
+    start = jnp.broadcast_to(state["roots"][None, :T], (bq, T))
     leaf, others = _bitsampling_descend(state, Q, start)
     leaves = [leaf]
     # probe deepest not-taken branches (bit splits have no margins)
@@ -291,6 +295,7 @@ def bitsampling_search(state: IndexState, Q, *, k: int, probe: int = 1,
         lidx = jnp.maximum(-lf - 1, 0)
         pts = state["leaves"][tree_ids, lidx]
         pts = jnp.where((lf < 0)[..., None], pts, -1)
+        pts = mask_dead_trees(pts, trees)               # traced trees knob
         if max_probe is not None and j > 0:
             # alternate j exists in the static path iff probe > j
             pts = jnp.where(jnp.asarray(probe) > j, pts, -1)
@@ -302,9 +307,10 @@ def bitsampling_search(state: IndexState, Q, *, k: int, probe: int = 1,
 register_functional(FunctionalSpec(
     name="BitsamplingAnnoy", build=bitsampling_build,
     search=bitsampling_search,
-    query_params=("probe", "max_probe"), query_defaults=(1, None),
+    query_params=("probe", "trees", "max_probe", "max_trees"),
+    query_defaults=(1, None, None, None),
     supported_metrics=("hamming",),
-    traced_knobs=(("probe", "max_probe"),),
+    traced_knobs=(("probe", "max_probe"), ("trees", "max_trees")),
 ))
 
 
@@ -330,9 +336,11 @@ class BitsamplingAnnoy(FunctionalANN):
         self.name = f"BitsamplingAnnoy(T={n_trees},leaf={leaf_size})"
         self._dist_comps = 0
 
-    def set_query_arguments(self, probe: int) -> None:
+    def set_query_arguments(self, probe: int, trees=None) -> None:
         self.probe = max(1, int(probe))
         self._qparams["probe"] = self.probe
+        self._qparams["trees"] = None if trees is None \
+            else max(1, min(int(trees), self.n_trees))
 
     def query(self, q, k):
         out = super().query(q, k)

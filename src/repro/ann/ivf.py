@@ -40,7 +40,7 @@ from repro.ann import distances as D
 from repro.ann.functional import (FunctionalSpec, IndexState, prepare_points,
                                   prepare_queries, register_functional)
 from repro.ann.kmeans import kmeans
-from repro.ann.topk import chunked_topk, topk_with_ids
+from repro.ann.topk import chunked_topk, topk_unique
 from repro.core.interface import FunctionalANN
 from repro.core.registry import register
 
@@ -87,13 +87,25 @@ def _rerank_chunk(state: IndexState, Q, cand, valid):
     return d, ids
 
 
-def search(state: IndexState, Q, *, k: int, n_probes=1,
-           max_probes: Optional[int] = None):
+def search(state: IndexState, Q, *, k: int, n_probes=1, scan=None,
+           max_probes: Optional[int] = None,
+           max_scan: Optional[int] = None):
     """Q [b, d] -> (dists [b, kk], ids [b, kk]).  Fully jittable.
 
-    ``max_probes`` (static) sizes the probed-list window; ``n_probes`` may
-    then be traced (see module docstring).  With ``max_probes=None``,
-    ``n_probes`` must be a concrete int and is used as the static window.
+    Two traced-capable query knobs:
+
+    ``n_probes`` / ``max_probes``   how many inverted lists to probe.  The
+        static cap sizes the probed-list window; ``n_probes`` may then be
+        traced (see module docstring).  With ``max_probes=None``,
+        ``n_probes`` must be a concrete int and is used as the window.
+    ``scan`` / ``max_scan``   per-list scan budget: only the first ``scan``
+        entries of each probed list are reranked (``None`` = whole list).
+        Statically it narrows the gather window; under a static
+        ``max_scan`` cap it is a traced runtime value masked in-kernel.
+
+    The final select is ``topk_unique`` — canonical on the (id, dist) set,
+    so traced-mode masking (which shifts candidate positions) is
+    bit-identical to the static path regardless of distance ties.
     """
     C = state.stat("n_clusters")
     n = state.stat("n")
@@ -102,19 +114,27 @@ def search(state: IndexState, Q, *, k: int, n_probes=1,
         P = min(int(n_probes), C)
     else:
         P = min(int(max_probes), C)
+    if max_scan is None:
+        M = pad if scan is None else max(1, min(int(scan), pad))
+        scan = None                     # window == budget: no mask needed
+    else:
+        M = max(1, min(int(max_scan), pad))
     Q = prepare_queries(Q, state.metric)
     # 1. coarse quantizer: the P nearest centroids, probes past n_probes
     #    masked (traced knob) so one trace serves every probe count <= P
     cd = D.sq_l2_matrix(Q, state["centers"])             # [b, C]
     _, probes = jax.lax.top_k(-cd, P)                    # [b, P]
     probe_live = jnp.arange(P, dtype=jnp.int32) < n_probes       # [P]
-    # 2. padded window gather of each probed list
+    # 2. padded window gather of each probed list, entries past the traced
+    #    scan budget masked (same treatment as the probe mask)
     starts = state["starts"][probes]                     # [b, P]
     sizes = state["sizes"][probes]                       # [b, P]
-    offs = jnp.arange(pad, dtype=jnp.int32)              # [M]
+    offs = jnp.arange(M, dtype=jnp.int32)                # [M]
     cand = starts[..., None] + offs[None, None, :]       # [b, P, M]
     valid = offs[None, None, :] < sizes[..., None]
     valid = valid & probe_live[None, :, None]
+    if scan is not None:
+        valid = valid & (offs[None, None, :] < jnp.maximum(scan, 1))
     cand = jnp.minimum(cand, n - 1).reshape(Q.shape[0], -1)
     valid = valid.reshape(Q.shape[0], -1)                # [b, P*M]
     # 3. exact distances on the candidate set
@@ -124,16 +144,18 @@ def search(state: IndexState, Q, *, k: int, n_probes=1,
         def chunk(s, size):
             return _rerank_chunk(state, Q, cand[:, s:s + size],
                                  valid[:, s:s + size])
-        return chunked_topk(n_cand, min(k, n_cand), rerank_block, chunk)
+        return chunked_topk(n_cand, min(k, n_cand), rerank_block, chunk,
+                            unique=True)
     d, ids = _rerank_chunk(state, Q, cand, valid)
-    return topk_with_ids(d, ids, min(k, d.shape[1]))
+    return topk_unique(d, ids, min(k, d.shape[1]))
 
 
 SPEC = register_functional(FunctionalSpec(
     name="IVF", build=build, search=search,
-    query_params=("n_probes", "max_probes"), query_defaults=(1, None),
-    static_query_params=("n_probes", "max_probes"),
-    traced_knobs=(("n_probes", "max_probes"),),
+    query_params=("n_probes", "scan", "max_probes", "max_scan"),
+    query_defaults=(1, None, None, None),
+    static_query_params=("n_probes", "scan", "max_probes", "max_scan"),
+    traced_knobs=(("n_probes", "max_probes"), ("scan", "max_scan")),
 ))
 
 
@@ -166,9 +188,10 @@ class IVF(FunctionalANN):
         self._sizes_np = np.asarray(st["sizes"])
         self._centers = st["centers"]
 
-    def set_query_arguments(self, n_probes: int) -> None:
+    def set_query_arguments(self, n_probes: int, scan=None) -> None:
         self.n_probes = int(n_probes)
         self._qparams["n_probes"] = min(self.n_probes, self.n_clusters)
+        self._qparams["scan"] = None if scan is None else int(scan)
 
     def _batch_block_size(self, k: int) -> int:
         # block queries so [b, P*M, d] stays bounded

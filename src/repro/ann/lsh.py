@@ -128,13 +128,40 @@ def _mask_probe_keys(qkeys, n_probes):
     return jnp.where(live[None, None, :], qkeys, -1)
 
 
+def _mask_tables(qkeys, tables):
+    """Same treatment along the TABLE axis: tables past the traced
+    ``tables`` count get key -1 and contribute no candidates, so one trace
+    sized at every built table serves any consulted-table count.  Parity
+    with the static slice holds because the rerank select
+    (``topk_unique``) is canonical on the (id, dist) set."""
+    L = qkeys.shape[1]
+    live = jnp.arange(L) < jnp.maximum(tables, 1)
+    return jnp.where(live[None, :, None], qkeys, -1)
+
+
+def _table_window(qkeys, tables, max_tables):
+    """Static path: consult only the first ``tables`` tables (slice —
+    retraces per value); traced path (static ``max_tables`` cap): keep all
+    tables and mask the dead ones in-kernel."""
+    if max_tables is not None:
+        return qkeys if tables is None else _mask_tables(qkeys, tables)
+    if tables is not None:
+        return qkeys[:, :max(1, min(int(tables), qkeys.shape[1]))]
+    return qkeys
+
+
 def hyperplane_search(state: IndexState, Q, *, k: int, n_probes: int = 1,
-                      max_probes=None):
+                      tables=None, max_probes=None, max_tables=None):
+    """Query knobs: ``n_probes`` (multiprobe flips per table) under
+    ``max_probes`` and ``tables`` (hash tables consulted, ``None`` = all)
+    under ``max_tables`` — both traced-capable, both sweepable in one
+    :func:`repro.ann.functional.search_sweep` grid."""
     Q = prepare_queries(Q, state.metric)
     P = max(1, int(n_probes)) if max_probes is None else max(1, int(max_probes))
     qkeys = _hyperplane_probe_keys(state, Q, P)
     if max_probes is not None:
         qkeys = _mask_probe_keys(qkeys, n_probes)
+    qkeys = _table_window(qkeys, tables, max_tables)
     cand = bucket_lookup(state["keys"], state["ids"], qkeys,
                          state.stat("cap"))
     return rerank_candidates(state, Q, cand, k)
@@ -142,9 +169,10 @@ def hyperplane_search(state: IndexState, Q, *, k: int, n_probes: int = 1,
 
 register_functional(FunctionalSpec(
     name="HyperplaneLSH", build=hyperplane_build, search=hyperplane_search,
-    query_params=("n_probes", "max_probes"), query_defaults=(1, None),
+    query_params=("n_probes", "tables", "max_probes", "max_tables"),
+    query_defaults=(1, None, None, None),
     supported_metrics=("angular",),
-    traced_knobs=(("n_probes", "max_probes"),),
+    traced_knobs=(("n_probes", "max_probes"), ("tables", "max_tables")),
 ))
 
 
@@ -220,13 +248,16 @@ def _e2_probe_keys(state: IndexState, Q, probes: int):
 
 
 def e2lsh_search(state: IndexState, Q, *, k: int, n_probes: int = 1,
-                 max_probes=None):
+                 tables=None, max_probes=None, max_tables=None):
+    """Same knob pairs as :func:`hyperplane_search` (``n_probes`` /
+    ``tables``); E2 keys are reduced mod a positive prime, so the masks'
+    -1 sentinel is unreachable in live buckets."""
     Q = prepare_queries(Q, state.metric)
     P = max(1, int(n_probes)) if max_probes is None else max(1, int(max_probes))
     qkeys = _e2_probe_keys(state, Q, P)
     if max_probes is not None:
-        # E2 keys are reduced mod a positive prime, so -1 is unreachable
         qkeys = _mask_probe_keys(qkeys, n_probes)
+    qkeys = _table_window(qkeys, tables, max_tables)
     cand = bucket_lookup(state["keys"], state["ids"], qkeys,
                          state.stat("cap"))
     return rerank_candidates(state, Q, cand, k)
@@ -234,9 +265,10 @@ def e2lsh_search(state: IndexState, Q, *, k: int, n_probes: int = 1,
 
 register_functional(FunctionalSpec(
     name="E2LSH", build=e2lsh_build, search=e2lsh_search,
-    query_params=("n_probes", "max_probes"), query_defaults=(1, None),
+    query_params=("n_probes", "tables", "max_probes", "max_tables"),
+    query_defaults=(1, None, None, None),
     supported_metrics=("euclidean",),
-    traced_knobs=(("n_probes", "max_probes"),),
+    traced_knobs=(("n_probes", "max_probes"), ("tables", "max_tables")),
 ))
 
 
@@ -255,9 +287,11 @@ class _LSHBase(FunctionalANN):
         self._n = self._state.stat("n")
         self._d = self._state.stat("d")
 
-    def set_query_arguments(self, n_probes: int) -> None:
+    def set_query_arguments(self, n_probes: int, tables=None) -> None:
         self.n_probes = max(1, int(n_probes))
         self._qparams["n_probes"] = self.n_probes
+        self._qparams["tables"] = None if tables is None \
+            else max(1, min(int(tables), self.n_tables))
 
     def _batch_block_size(self, k: int) -> int:
         return max(1, 32_000_000 // max(

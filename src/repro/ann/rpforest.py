@@ -113,11 +113,39 @@ def build(X: np.ndarray, *, metric: str = "euclidean", n_trees: int = 10,
         "max_depth": max_depth})
 
 
+def forest_window(T: int, trees, max_trees):
+    """Resolve the consulted-tree window for a forest search (shared with
+    the Hamming bitsampling variant).  Returns ``(T_window, traced_trees)``:
+
+      * static path (``max_trees=None``): the window is ``trees`` itself —
+        the forest is sliced, retrace per value — and ``traced_trees`` is
+        ``None`` (no mask needed);
+      * traced path: the window is the static ``max_trees`` cap and
+        ``traced_trees`` is the runtime knob for :func:`mask_dead_trees`
+        (``None`` still means "all trees live").
+    """
+    if max_trees is None and trees is not None:
+        return max(1, min(int(trees), T)), None
+    if max_trees is not None:
+        return max(1, min(int(max_trees), T)), trees
+    return T, None
+
+
+def mask_dead_trees(pts, trees):
+    """Mask candidates of trees past the traced ``trees`` count to -1.
+    Parity with the static slice holds because the rerank selects are
+    canonical on the (id, dist) set (``topk_unique``)."""
+    if trees is None:
+        return pts
+    live = jnp.arange(pts.shape[1]) < jnp.maximum(trees, 1)
+    return jnp.where(live[None, :, None], pts, -1)
+
+
 def _descend(state: IndexState, Q, cur):
-    """Greedy descent to leaves.  Q [b,d]; cur [b,T] signed node ids.
+    """Greedy descent to leaves.  Q [b,d]; cur [b,T] signed node ids (T may
+    be a sliced prefix of the built trees — the static ``trees`` path).
     Returns (leaf [b,T], margins [b,T,D], others [b,T,D])."""
-    T = state.stat("n_trees")
-    tree_ids = jnp.arange(T)[None, :]
+    tree_ids = jnp.arange(cur.shape[1])[None, :]
     margins, others = [], []
     for _ in range(state.stat("max_depth")):
         is_leaf = cur < 0
@@ -134,19 +162,28 @@ def _descend(state: IndexState, Q, cur):
     return cur, jnp.stack(margins, -1), jnp.stack(others, -1)
 
 
-def search(state: IndexState, Q, *, k: int, probe: int = 1, max_probe=None):
-    """Spill search over all trees + exact rerank.  Pure and jittable.
+def search(state: IndexState, Q, *, k: int, probe: int = 1, trees=None,
+           max_probe=None, max_trees=None):
+    """Spill search + exact rerank.  Pure and jittable.
 
-    ``probe`` is static by default (it shapes the candidate window).  With
-    ``max_probe`` (static) the spill window is sized at the cap and
-    ``probe`` may be a traced runtime value: candidates from alternates
-    past ``probe`` are masked to -1, so one trace serves every probe count
-    up to the cap."""
+    Two traced-capable query knobs:
+
+    ``probe`` / ``max_probe``   spill width.  Static by default (it shapes
+        the candidate window); with a static ``max_probe`` cap, ``probe``
+        may be a traced runtime value — candidates from alternates past
+        ``probe`` are masked to -1.
+    ``trees`` / ``max_trees``   how many of the built trees to consult
+        (``None`` = all).  Statically it slices the forest (retrace per
+        value); under a static ``max_trees`` cap it is traced — dead
+        trees' candidates are masked to -1.  Parity with the static slice
+        holds because the rerank select (``topk_unique``) is canonical on
+        the (id, dist) set.
+    """
     Q = prepare_queries(Q, state.metric)
     b = Q.shape[0]
-    T = state.stat("n_trees")
+    T, trees = forest_window(state.stat("n_trees"), trees, max_trees)
     P = max(1, int(probe)) if max_probe is None else max(1, int(max_probe))
-    start = jnp.broadcast_to(state["roots"][None, :], (b, T))
+    start = jnp.broadcast_to(state["roots"][None, :T], (b, T))
     leaf, margins, others = _descend(state, Q, start)
     leaves = [leaf]
     if P > 1:
@@ -164,6 +201,7 @@ def search(state: IndexState, Q, *, k: int, probe: int = 1, max_probe=None):
         lidx = jnp.maximum(-lf - 1, 0)
         pts = state["leaf_pts"][tree_ids, lidx]         # [b,T,leaf]
         pts = jnp.where((lf < 0)[..., None], pts, -1)
+        pts = mask_dead_trees(pts, trees)               # traced trees knob
         if max_probe is not None and j > 0:
             # alternate j exists in the static path iff probe > j
             pts = jnp.where(jnp.asarray(probe) > j, pts, -1)
@@ -174,8 +212,9 @@ def search(state: IndexState, Q, *, k: int, probe: int = 1, max_probe=None):
 
 SPEC = register_functional(FunctionalSpec(
     name="RPForest", build=build, search=search,
-    query_params=("probe", "max_probe"), query_defaults=(1, None),
-    traced_knobs=(("probe", "max_probe"),),
+    query_params=("probe", "trees", "max_probe", "max_trees"),
+    query_defaults=(1, None, None, None),
+    traced_knobs=(("probe", "max_probe"), ("trees", "max_trees")),
 ))
 
 
@@ -199,9 +238,11 @@ class RPForest(FunctionalANN):
         self._n = self._state.stat("n")
         self._d = self._state.stat("d")
 
-    def set_query_arguments(self, probe: int) -> None:
+    def set_query_arguments(self, probe: int, trees=None) -> None:
         self.probe = max(1, int(probe))
         self._qparams["probe"] = self.probe
+        self._qparams["trees"] = None if trees is None \
+            else max(1, min(int(trees), self.n_trees))
 
     def _batch_block_size(self, k: int) -> int:
         return max(1, 32_000_000 //

@@ -220,6 +220,63 @@ class FunctionalANN(BaseANN):
                 self._rebuild()
         return tuple(traced)
 
+    def plan_query_sweep(self, qgroups: Sequence[tuple]):
+        """Map positional query-args groups onto ONE grid device call.
+
+        Returns ``(points, fixed)`` for :func:`run_query_sweep` — one
+        ``{knob: value}`` dict per group for every position whose value
+        VARIES across groups (those must all be traced-capable knobs),
+        plus the fixed query params shared by all groups — or ``None``
+        when the groups cannot be served by a single sweep (ragged
+        groups, a non-knob position varying, non-integer knob values, or
+        non-scalar fixed params such as a device mesh).
+        """
+        if self._state is None or not qgroups:
+            return None
+        names = self._spec.query_params
+        lens = {len(g) for g in qgroups}
+        if len(lens) != 1:
+            return None
+        width = lens.pop()
+        if width == 0 or width > len(names):
+            return None
+        caps = dict(self._spec.traced_knobs)
+        fixed = dict(self._qparams)
+        points: list = [dict() for _ in qgroups]
+        for pos, vals in enumerate(zip(*qgroups)):
+            name = names[pos]
+            if len(set(map(repr, vals))) == 1:
+                fixed[name] = vals[0]
+            elif name in caps and all(
+                    isinstance(v, (int, np.integer)) for v in vals):
+                for pt, v in zip(points, vals):
+                    pt[name] = int(v)
+            else:
+                return None
+        if not points[0]:
+            return None                  # nothing varies: per-group loop
+        for knob in points[0]:
+            fixed.pop(knob, None)
+            fixed.pop(caps[knob], None)
+        if not all(isinstance(v, (int, float, bool, str, type(None)))
+                   for v in fixed.values()):
+            return None                  # e.g. ShardedIVF's mesh object
+        return points, fixed
+
+    def run_query_sweep(self, Q, k: int, points, fixed):
+        """Run the whole query-args grid in ONE device call (the vmapped
+        single-trace :func:`repro.ann.functional.search_sweep_points`);
+        returns device ``(dists, ids)`` of shape [n_groups, nq, kk],
+        blocked until ready (the caller times this call)."""
+        import jax
+        import jax.numpy as jnp
+
+        from repro.ann.functional import search_sweep_points
+
+        out = search_sweep_points(self._state, jnp.asarray(Q), k=int(k),
+                                  points=points, **fixed)
+        return jax.block_until_ready(out)
+
     def _postprocess(self, out: Any, Q: Any, k: int):
         """Hook: raw search output -> (dists, ids); record per-run stats."""
         return out

@@ -38,15 +38,42 @@ def frontier(
     return sorted(out, key=lambda p: p[0])
 
 
+def pareto_mask(xs: np.ndarray, ys: np.ndarray,
+                x_better: str = "higher",
+                y_better: str = "higher") -> np.ndarray:
+    """Boolean mask of the Pareto-optimal points among (xs, ys).
+
+    Unlike :func:`frontier` this keeps the caller's indexing — the tuner
+    uses it to map frontier membership back onto operating points.
+    """
+    xs = np.asarray(xs, np.float64)
+    ys = np.asarray(ys, np.float64)
+    sx = 1.0 if x_better == "higher" else -1.0
+    sy = 1.0 if y_better == "higher" else -1.0
+    n = xs.shape[0]
+    mask = np.ones(n, bool)
+    for i in range(n):
+        dominated = ((sx * xs >= sx * xs[i]) & (sy * ys >= sy * ys[i])
+                     & ((sx * xs > sx * xs[i]) | (sy * ys > sy * ys[i])))
+        mask[i] = not bool(dominated.any())
+    return mask
+
+
 def metric_points(
     runs: Sequence[RunRecord], x_metric: str, y_metric: str
 ) -> Dict[str, List[Tuple[float, float, RunRecord]]]:
-    """Group (x, y, run) triples by algorithm."""
+    """Group (x, y, run) triples by algorithm.
+
+    Non-finite coordinates are dropped: NaN (undefined metrics) like
+    before, but also ±inf — a degenerate zero-time run reports qps=inf
+    (or queriessize=inf), and one such point would otherwise dominate and
+    poison the whole frontier.
+    """
     xm, ym = METRICS[x_metric], METRICS[y_metric]
     grouped: Dict[str, List[Tuple[float, float, RunRecord]]] = {}
     for run in runs:
         x, y = xm.function(run), ym.function(run)
-        if np.isnan(x) or np.isnan(y):
+        if not (np.isfinite(x) and np.isfinite(y)):
             continue
         grouped.setdefault(run.algorithm, []).append((x, y, run))
     return grouped

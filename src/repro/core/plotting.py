@@ -29,8 +29,14 @@ def plot_png(
     y_metric: str = "qps",
     title: Optional[str] = None,
     scatter: bool = False,
+    tuned: Optional[Sequence[tuple]] = None,
 ) -> Optional[Path]:
-    """Pareto-frontier (or scatter) plot as a PNG via matplotlib."""
+    """Pareto-frontier (or scatter) plot as a PNG via matplotlib.
+
+    ``tuned`` marks auto-tuner operating points on the frontier: a
+    sequence of ``(x, y, label)`` triples (e.g. the constrained argmax
+    from :func:`repro.tune.grid_search`), drawn as annotated stars.
+    """
     import matplotlib
     matplotlib.use("Agg")
     import matplotlib.pyplot as plt
@@ -51,11 +57,59 @@ def plot_png(
             if front:
                 ax.plot([p[0] for p in front], [p[1] for p in front],
                         "-o", ms=4, label=algo)
+    _mark_tuned(ax, tuned)
     if ym.name == "qps" or "size" in ym.name:
         ax.set_yscale("log")
     ax.set_xlabel(xm.description)
     ax.set_ylabel(ym.description)
     ax.set_title(title or f"{ym.description} vs {xm.description}")
+    ax.grid(True, alpha=0.3)
+    ax.legend(fontsize=8)
+    path = Path(path)
+    path.parent.mkdir(parents=True, exist_ok=True)
+    fig.savefig(path, dpi=110, bbox_inches="tight")
+    plt.close(fig)
+    return path
+
+
+def _mark_tuned(ax, tuned: Optional[Sequence[tuple]]) -> None:
+    """Overlay (x, y, label) operating points as annotated stars."""
+    for x, y, label in tuned or ():
+        ax.plot([x], [y], marker="*", ms=16, color="crimson", zorder=5,
+                linestyle="none",
+                label=f"tuned: {label}" if label else "tuned")
+        if label:
+            ax.annotate(label, (x, y), textcoords="offset points",
+                        xytext=(6, 6), fontsize=8)
+
+
+def tune_plot_png(result, path: str | Path,
+                  title: Optional[str] = None) -> Path:
+    """Recall/QPS picture of one :class:`repro.tune.TuneResult`: every grid
+    point, the Pareto frontier through them, and the chosen operating
+    point starred."""
+    import matplotlib
+    matplotlib.use("Agg")
+    import matplotlib.pyplot as plt
+
+    fig, ax = plt.subplots(figsize=(7, 5))
+    pts = result.points
+    ax.plot([p.recall for p in pts], [p.qps for p in pts], "o", ms=4,
+            color="#888", alpha=0.6, linestyle="none", label="grid")
+    front = sorted(result.pareto, key=lambda p: p.recall)
+    if front:
+        ax.plot([p.recall for p in front], [p.qps for p in front], "-o",
+                ms=5, label="pareto")
+    if result.best is not None:
+        label = ",".join(f"{k}={v}" for k, v in result.best.params.items())
+        _mark_tuned(ax, [(result.best.recall, result.best.qps, label)])
+    ax.set_yscale("log")
+    ax.set_xlabel("Recall")
+    ax.set_ylabel("Queries per second (1/s)")
+    default = "auto-tuned operating points"
+    if result.constraint is not None:
+        default += f" ({result.constraint})"
+    ax.set_title(title or default)
     ax.grid(True, alpha=0.3)
     ax.legend(fontsize=8)
     path = Path(path)

@@ -181,6 +181,15 @@ class Engine:
         for knob, cap in self.spec.traced_knobs:
             if knob not in traced and self.query_params.get(cap) is not None:
                 traced.append(knob)
+        # A traced knob whose value is None (= "no limit", e.g. IVF's
+        # ``scan``) is pinned to its cap: in traced mode the two are
+        # semantically identical, but None and int trace DIFFERENTLY
+        # (pytree structure), and serving must keep one trace across
+        # later integer updates — e.g. adopting an autotuned value.
+        for knob, cap in self.spec.traced_knobs:
+            if (knob in traced and self.query_params.get(knob) is None
+                    and self.query_params.get(cap) is not None):
+                self.query_params[knob] = int(self.query_params[cap])
         self.traced_params = tuple(traced)
         self._search = self.spec.jit_search(traced=self.traced_params)
         self._pending: list = []    # (ticket, np.ndarray [d], key, overrides)
@@ -329,6 +338,63 @@ class Engine:
         if ticket not in self._results:
             raise KeyError(f"ticket {ticket} not flushed (or already read)")
         return self._results.pop(ticket)
+
+    # ------------------------------------------------------------ autotuning
+    def autotune(self, Q, gt_distances, *, knob_grid,
+                 constraint, repetitions: int = 3):
+        """Pick this engine's knob defaults from the constrained tuner.
+
+        Runs :func:`repro.tune.grid_search` over ``knob_grid`` on the
+        engine's own index state and, if a grid point satisfies the
+        ``constraint`` (e.g. ``tune.Constraint.min_recall(0.9)``), adopts
+        its knob values as the engine's ``query_params`` — all subsequent
+        ``search()``/``submit()`` traffic serves at that operating point.
+
+        Every swept knob must be traced-capable.  If its static ``max_*``
+        cap is already pinned at or above the grid maximum (the usual
+        deployment: caps fixed at engine construction), the tuned knobs
+        are ordinary traced runtime values and adopting them triggers ZERO
+        recompiles of the serving trace.  Otherwise the cap is raised to
+        the grid maximum and the serving search re-jitted once.
+
+        Returns the full :class:`repro.tune.TuneResult` (grid, Pareto set,
+        chosen point); an infeasible constraint leaves the engine's
+        ``query_params`` untouched (``result.best is None``).
+        """
+        from repro.tune import grid_search
+
+        caps = dict(self.spec.traced_knobs)
+        saved = (dict(self.query_params), self.traced_params, self._search)
+        retrace_needed = False
+        for knob, values in knob_grid.items():
+            cap = caps.get(knob)
+            if cap is None:
+                raise ValueError(
+                    f"{self.state.algo}: knob {knob!r} has no traced-cap "
+                    f"treatment; tunable knobs: {sorted(caps)}")
+            need = max(int(v) for v in values)
+            have = self.query_params.get(cap)
+            if have is None or int(have) < need:
+                self.query_params[cap] = need
+                retrace_needed = True
+        traced = tuple(dict.fromkeys(
+            list(self.traced_params) + list(knob_grid)))
+        if retrace_needed or traced != self.traced_params:
+            self.traced_params = traced
+            self._search = self.spec.jit_search(traced=traced)
+        fixed = {name: v for name, v in self.query_params.items()
+                 if name not in knob_grid}
+        result = grid_search(self.state, Q, gt_distances, k=self.k,
+                             knob_grid=knob_grid, constraint=constraint,
+                             repetitions=repetitions, query_params=fixed)
+        if result.best is None:
+            # infeasible: restore EVERYTHING — a raised cap (e.g. a fresh
+            # max_scan) silently changes serving behaviour for knobs whose
+            # value means "no limit", and the promise is untouched serving
+            self.query_params, self.traced_params, self._search = saved
+        else:
+            self.query_params.update(result.best_params())
+        return result
 
     # ------------------------------------------------------------- metadata
     @property

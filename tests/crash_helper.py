@@ -1,0 +1,30 @@
+"""Deliberately-misbehaving algorithms for isolation tests.
+
+Lives in its own importable module (not inside a test) because the
+isolated experiment path spawns a fresh interpreter: the child resolves
+``Definition.module``/``constructor`` by import, so the class must be
+reachable outside the pytest process too.
+"""
+
+import os
+
+import numpy as np
+
+from repro.core.interface import BaseANN
+
+
+class ExitInFit(BaseANN):
+    """Dies like an OOM-killed container: hard process exit mid-fit, no
+    exception, nothing sent back over the result pipe."""
+
+    name = "ExitInFit"
+
+    def __init__(self, metric: str, exit_code: int = 7):
+        super().__init__(metric)
+        self.exit_code = int(exit_code)
+
+    def fit(self, X: np.ndarray) -> None:
+        os._exit(self.exit_code)
+
+    def query(self, q: np.ndarray, k: int) -> np.ndarray:
+        return np.arange(k)

@@ -72,3 +72,73 @@ def test_isolated_crash_contained(small_dataset):
         run_definition(bad, small_dataset,
                        ExperimentSettings(count=5, isolated=True,
                                           timeout=60))
+
+
+def test_isolated_child_killed_midrun_names_instance(small_dataset):
+    """A child that dies without reporting (OOM kill / hard crash) must
+    surface as a RuntimeError naming the instance — not a raw EOFError
+    from the result pipe."""
+    bad = Definition(algorithm="exit-in-fit", constructor="ExitInFit",
+                     module="crash_helper", arguments=("euclidean", 7),
+                     query_argument_groups=((),))
+    with pytest.raises(RuntimeError, match="exit-in-fit.*died before"):
+        run_definition(bad, small_dataset,
+                       ExperimentSettings(count=5, isolated=True,
+                                          timeout=120))
+
+
+def test_grid_sweep_fast_path_matches_per_group_loop(small_dataset):
+    """Batch mode + traced-knob query-args: the whole grid runs as ONE
+    sweep device call, and every per-group RunRecord carries the same
+    neighbors as the legacy per-group loop."""
+    d = Definition(algorithm="ivf", constructor="IVF", module=None,
+                   arguments=("euclidean", 20),
+                   query_argument_groups=((1,), (5,), (20,)))
+    fast = run_definition(d, small_dataset,
+                          ExperimentSettings(count=10, batch_mode=True))
+    slow = run_definition(d, small_dataset,
+                          ExperimentSettings(count=10, batch_mode=True,
+                                             grid_sweep=False))
+    assert len(fast) == len(slow) == 3
+    for f, s in zip(fast, slow):
+        assert f.attrs.get("grid_sweep") is True
+        assert "grid_sweep" not in s.attrs
+        # the fused sweep bypasses the per-algo dist_comps counters: the
+        # record must say "not measured", never a frontier-winning 0
+        assert "dist_comps" not in f.attrs
+        assert f.query_arguments == s.query_arguments
+        np.testing.assert_array_equal(f.neighbors, s.neighbors)
+        assert f.total_time > 0
+
+
+def test_grid_sweep_fast_path_multi_knob_groups(small_dataset):
+    """Two varying traced knobs per group — (n_probes, scan) — still one
+    sweep call with per-group parity."""
+    from repro.ann import functional
+
+    groups = ((1, 8), (5, 8), (5, 64), (20, 183))
+    d = Definition(algorithm="ivf", constructor="IVF", module=None,
+                   arguments=("euclidean", 20),
+                   query_argument_groups=groups)
+    functional.TRACE_COUNTS.clear()
+    fast = run_definition(d, small_dataset,
+                          ExperimentSettings(count=10, batch_mode=True))
+    assert functional.TRACE_COUNTS["IVF"] == 1
+    slow = run_definition(d, small_dataset,
+                          ExperimentSettings(count=10, batch_mode=True,
+                                             grid_sweep=False))
+    for f, s in zip(fast, slow):
+        np.testing.assert_array_equal(f.neighbors, s.neighbors)
+
+
+def test_single_query_mode_ignores_grid_sweep(small_dataset):
+    """The fast path is batch-mode only; single-query timing semantics
+    (per-query clock) must be untouched."""
+    d = Definition(algorithm="ivf", constructor="IVF", module=None,
+                   arguments=("euclidean", 20),
+                   query_argument_groups=((1,), (5,)))
+    recs = run_definition(d, small_dataset,
+                          ExperimentSettings(count=5, batch_mode=False))
+    assert all("grid_sweep" not in r.attrs for r in recs)
+    assert all(r.query_times.size == small_dataset.test.shape[0]
+               for r in recs)

@@ -1,6 +1,6 @@
 import numpy as np
 
-from repro.core.pareto import frontier
+from repro.core.pareto import frontier, metric_points, pareto_mask
 
 
 def brute_frontier(points, x_better="higher", y_better="higher"):
@@ -31,3 +31,39 @@ def test_frontier_matches_bruteforce():
 def test_frontier_empty_and_single():
     assert frontier([]) == []
     assert frontier([(1.0, 2.0)]) == [(1.0, 2.0)]
+
+
+def _run(total_time, recall_d=0.0):
+    from repro.core.metrics import RunRecord
+
+    nq, k = 4, 2
+    gt = np.full((nq, k), 1.0, np.float32)
+    return RunRecord(
+        algorithm="a", instance_name="a", query_arguments=(), dataset="d",
+        count=k, batch_mode=False,
+        neighbors=np.zeros((nq, k), np.int64),
+        distances=np.full((nq, k), recall_d, np.float32),
+        gt_neighbors=np.zeros((nq, k), np.int64), gt_distances=gt,
+        query_times=np.ones(nq), total_time=total_time, build_time=0.0,
+        index_size_kb=1.0)
+
+
+def test_metric_points_drops_nonfinite():
+    """A degenerate zero-time run reports qps=inf; it must be dropped from
+    frontier inputs (it would otherwise dominate every real point), same
+    as the long-standing NaN guard."""
+    good = _run(total_time=1.0)
+    degenerate = _run(total_time=0.0)            # qps == inf
+    grouped = metric_points([good, degenerate], "k-nn", "qps")
+    assert [y for _, y, _ in grouped["a"]] == [good.qps]
+    # and with no finite point at all, the algorithm disappears entirely
+    assert metric_points([degenerate], "k-nn", "qps") == {}
+
+
+def test_pareto_mask_matches_bruteforce():
+    rng = np.random.default_rng(5)
+    pts = rng.random((20, 2))
+    mask = pareto_mask(pts[:, 0], pts[:, 1])
+    want = brute_frontier([tuple(map(float, p)) for p in pts])
+    got = sorted(tuple(map(float, p)) for p in pts[mask])
+    assert got == sorted(want)

@@ -48,7 +48,7 @@ def _traced_case(algo: str):
         X = rng.integers(0, 2**32, (300, 4), dtype=np.uint32)
         state = spec.build(X, metric="hamming", n_chunks=8, cap=64)
         cap = 2
-    (knob, cap_name), = spec.traced_knobs
+    knob, cap_name = spec.traced_knobs[0]
     jq = spec.jit_search(traced=(knob,))
     Q = X[:8]
     return spec, jq, state, Q, knob, cap_name, cap
@@ -77,6 +77,77 @@ def test_traced_cap_parity_angular_lsh(n_probes):
 @given(st.integers(0, 2))
 def test_traced_cap_parity_hamming_mih(radius):
     _assert_traced_equals_static("MultiIndexHashing", radius)
+
+
+# ------------------------------------------------ multi-knob grid parity
+# For every distance metric: a multi-knob cartesian search_sweep grid must
+# return, per row, exactly what the static per-combination path returns —
+# for ANY drawn grid (the ISSUE 4 invariant; trace-count side in
+# tests/test_sweep.py).
+
+@functools.lru_cache(maxsize=None)
+def _grid_case(algo: str):
+    """(spec, state, Q, {knob: max legal value})."""
+    from repro.ann.functional import get_functional
+
+    rng = np.random.default_rng(11)
+    spec = get_functional(algo)
+    if algo == "IVF":
+        X = rng.standard_normal((300, 16)).astype(np.float32)
+        state = spec.build(X, metric="euclidean", n_clusters=20)
+        ranges = {"n_probes": 20, "scan": 40}
+    elif algo == "HyperplaneLSH":
+        X = rng.standard_normal((300, 16)).astype(np.float32)
+        state = spec.build(X, metric="angular", n_tables=6, n_bits=8,
+                           cap=64)
+        ranges = {"n_probes": 8, "tables": 6}
+    else:                                    # BitsamplingAnnoy
+        X = rng.integers(0, 2**32, (300, 4), dtype=np.uint32)
+        state = spec.build(X, metric="hamming", n_trees=6, leaf_size=16)
+        ranges = {"probe": 4, "trees": 6}
+    return spec, state, X[:6], ranges
+
+
+def _assert_grid_equals_static(algo: str, axis_a, axis_b):
+    from repro.ann.functional import grid_combos, search_sweep
+
+    spec, state, Q, ranges = _grid_case(algo)
+    (ka, va_max), (kb, vb_max) = ranges.items()
+    grid = {ka: sorted({1 + v % va_max for v in axis_a}),
+            kb: sorted({1 + v % vb_max for v in axis_b})}
+    # pin caps to the RANGE maxima (constant across draws) so every drawn
+    # grid of a given shape shares one executable: values change, trace
+    # identity does not — keeps the 30-example run to a handful of compiles
+    caps = {spec.cap_for(kn): rng_max
+            for kn, rng_max in ((ka, va_max), (kb, vb_max))}
+    d, ids = search_sweep(state, Q, k=5, knob_grid=grid, **caps)
+    for i, combo in enumerate(grid_combos(grid)):
+        want_d, want = spec.search(state, Q, k=5, **combo)
+        w = np.asarray(want).shape[1]
+        np.testing.assert_array_equal(np.asarray(ids)[i, :, :w],
+                                      np.asarray(want), err_msg=str(combo))
+        np.testing.assert_allclose(np.asarray(d)[i, :, :w],
+                                   np.asarray(want_d), rtol=1e-5, atol=1e-4,
+                                   err_msg=str(combo))
+        assert np.all(np.asarray(ids)[i, :, w:] == -1)
+
+
+_axis = st.lists(st.integers(0, 1_000_000), min_size=1, max_size=3)
+
+
+@given(_axis, _axis)
+def test_multiknob_grid_parity_euclidean_ivf(a, b):
+    _assert_grid_equals_static("IVF", a, b)
+
+
+@given(_axis, _axis)
+def test_multiknob_grid_parity_angular_lsh(a, b):
+    _assert_grid_equals_static("HyperplaneLSH", a, b)
+
+
+@given(_axis, _axis)
+def test_multiknob_grid_parity_hamming_bitsampling(a, b):
+    _assert_grid_equals_static("BitsamplingAnnoy", a, b)
 
 
 @given(st.lists(floats, min_size=1, max_size=40), st.integers(1, 10))

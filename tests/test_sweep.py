@@ -22,11 +22,14 @@ import numpy as np
 import pytest
 
 from repro.ann import functional
-from repro.ann.functional import get_functional, search_sweep
+from repro.ann.functional import (get_functional, grid_combos, search_sweep,
+                                  search_sweep_points)
 
 
 # name -> (dataset fixture, build params, swept values, extra query params)
-# Values exercise several points under the cap, cap = max(values).
+# Values exercise several points under the cap, cap = max(values).  The
+# swept knob is the spec's FIRST traced pair; multi-knob grids over ALL
+# pairs are covered by MULTIKNOB_CASES below.
 SWEEP_CASES = {
     "IVF": ("small_dataset", {"n_clusters": 30}, (1, 4, 12, 30), {}),
     "HNSW": ("small_dataset", {"M": 8, "ef_construction": 40},
@@ -44,6 +47,17 @@ SWEEP_CASES = {
     "MultiIndexHashing": ("small_hamming", {"n_chunks": 16, "cap": 64},
                           (0, 1, 2), {}),
     "ShardedIVF": ("small_dataset", {"n_clusters": 30}, (1, 4, 12, 30), {}),
+}
+
+# name -> cartesian grid over BOTH traced knob pairs (>= 2 knobs x >= 3
+# values each — the ISSUE 4 acceptance shape).  One vmapped trace must
+# serve the whole grid with per-combination parity to the static path.
+MULTIKNOB_CASES = {
+    "IVF": {"n_probes": (1, 4, 12, 30), "scan": (4, 16, 64)},
+    "HyperplaneLSH": {"n_probes": (1, 3, 6), "tables": (2, 5, 8)},
+    "E2LSH": {"n_probes": (1, 3, 6), "tables": (2, 5, 8)},
+    "RPForest": {"probe": (1, 2, 4), "trees": (2, 5, 8)},
+    "BitsamplingAnnoy": {"probe": (1, 2, 4), "trees": (2, 4, 6)},
 }
 
 K = 10
@@ -85,7 +99,7 @@ def test_single_trace_and_parity_across_knob_sweep(name, request,
     _, _, values, extra = SWEEP_CASES[name]
     state, ds = _built_state(name, request)
     spec = get_functional(name)
-    (knob, cap_name), = spec.traced_knobs
+    knob, cap_name = spec.traced_knobs[0]
     Q = ds.test[:32]
 
     jq = spec.jit_search(traced=(knob,))
@@ -113,7 +127,7 @@ def test_search_sweep_matches_static_per_row(name, request, trace_counter):
     _, _, values, extra = SWEEP_CASES[name]
     state, ds = _built_state(name, request)
     spec = get_functional(name)
-    (knob, _), = spec.traced_knobs
+    knob, _ = spec.traced_knobs[0]
     Q = ds.test[:16]
 
     trace_counter.clear()
@@ -134,17 +148,75 @@ def test_search_sweep_matches_static_per_row(name, request, trace_counter):
     assert trace_counter[name] == 1
 
 
-def test_search_sweep_rejects_unknown_or_multi_knob(small_dataset, request):
+@pytest.mark.parametrize("name", sorted(MULTIKNOB_CASES))
+def test_multiknob_grid_single_trace_and_parity(name, request, trace_counter):
+    """ISSUE 4 acceptance: ONE trace for a full multi-knob cartesian grid
+    (>= 2 knobs x >= 3 values each), each row bit-identical to the static
+    path at that combination.  Where the static path returns fewer than k
+    columns, the sweep row's tail must be (+inf, -1) padding."""
+    grid = MULTIKNOB_CASES[name]
+    state, ds = _built_state(name, request)
+    spec = get_functional(name)
+    assert len(grid) >= 2 and all(len(v) >= 3 for v in grid.values())
+    Q = ds.test[:16]
+
+    trace_counter.clear()
+    d, ids = search_sweep(state, Q, k=K, knob_grid=grid)
+    combos = grid_combos(grid)
+    assert ids.shape[0] == len(combos) and ids.shape[1] == Q.shape[0]
+    for i, combo in enumerate(combos):
+        want_d, want = spec.search(state, Q, k=K, **combo)
+        w = np.asarray(want).shape[1]
+        np.testing.assert_array_equal(
+            np.asarray(ids)[i, :, :w], np.asarray(want),
+            err_msg=f"{name}: grid row {combo} != static path")
+        np.testing.assert_allclose(
+            np.asarray(d)[i, :, :w], np.asarray(want_d), rtol=1e-5,
+            atol=1e-4, err_msg=f"{name}: grid row {combo} distances differ")
+        assert np.all(np.asarray(ids)[i, :, w:] == -1), \
+            f"{name}: grid row {combo} tail is not -1 padding"
+    assert trace_counter[name] == 1, (
+        f"{name}: {trace_counter[name]} traces for a "
+        f"{len(combos)}-combination multi-knob grid (want exactly 1)")
+
+    # a different same-shape grid reuses the cached executable: no retrace
+    shifted = {kn: tuple(max(1, v - 1) for v in vals)
+               for kn, vals in grid.items()}
+    caps = {spec.cap_for(kn): max(vals) for kn, vals in grid.items()}
+    search_sweep(state, Q, k=K, knob_grid=shifted, **caps)
+    assert trace_counter[name] == 1
+
+
+def test_search_sweep_points_arbitrary_combos(request, trace_counter):
+    """Non-cartesian combination lists (the experiment loop's literal
+    query-args groups) run through the same single-trace path."""
+    state, ds = _built_state("IVF", request)
+    spec = get_functional("IVF")
+    Q = ds.test[:8]
+    points = [{"n_probes": 1, "scan": 8}, {"n_probes": 12, "scan": 64},
+              {"n_probes": 30, "scan": 16}]
+    trace_counter.clear()
+    _, ids = search_sweep_points(state, Q, k=K, points=points)
+    assert trace_counter["IVF"] == 1
+    for i, pt in enumerate(points):
+        _, want = spec.search(state, Q, k=K, **pt)
+        w = np.asarray(want).shape[1]
+        np.testing.assert_array_equal(np.asarray(ids)[i, :, :w],
+                                      np.asarray(want), err_msg=str(pt))
+
+
+def test_search_sweep_rejects_bad_grids(small_dataset, request):
     state, _ = _built_state("IVF", request)
     with pytest.raises(KeyError, match="traced-cap"):
         search_sweep(state, small_dataset.test[:4], k=5,
                      knob_grid={"bogus": (1, 2)})
-    with pytest.raises(ValueError, match="exactly one knob"):
+    # caps are not knobs: sweeping one is a grid mistake, not a new axis
+    with pytest.raises(KeyError, match="traced-cap"):
         search_sweep(state, small_dataset.test[:4], k=5,
                      knob_grid={"n_probes": (1, 2), "max_probes": (4, 4)})
     # the swept knob must come from the grid alone — a conflicting fixed
     # value would silently mislabel every row
-    with pytest.raises(ValueError, match="both knob_grid and query_params"):
+    with pytest.raises(ValueError, match="both the sweep grid and"):
         search_sweep(state, small_dataset.test[:4], k=5,
                      knob_grid={"n_probes": (1, 2)}, n_probes=2)
     # an explicit cap below the grid max would clamp rows in-kernel and
@@ -152,6 +224,14 @@ def test_search_sweep_rejects_unknown_or_multi_knob(small_dataset, request):
     with pytest.raises(ValueError, match="exceeds max_probes"):
         search_sweep(state, small_dataset.test[:4], k=5,
                      knob_grid={"n_probes": (1, 16)}, max_probes=8)
+    with pytest.raises(ValueError, match="at least one value"):
+        search_sweep(state, small_dataset.test[:4], k=5,
+                     knob_grid={"n_probes": (1, 2), "scan": ()})
+    # every point must sweep the same knobs
+    with pytest.raises(ValueError, match="same knobs"):
+        search_sweep_points(state, small_dataset.test[:4], k=5,
+                            points=[{"n_probes": 1},
+                                    {"n_probes": 2, "scan": 4}])
 
 
 def test_jit_search_rejects_capless_knob():

@@ -1,0 +1,205 @@
+"""Constrained auto-tuner (ISSUE 4): grid evaluation, operating-point
+selection, and serving at the tuned point without retracing."""
+
+import numpy as np
+import pytest
+
+from repro import tune
+from repro.ann import functional
+from repro.ann.functional import get_functional
+
+K = 10
+NQ = 64
+
+
+@pytest.fixture(scope="module")
+def ivf_case(request):
+    ds = request.getfixturevalue("small_dataset")
+    spec = get_functional("IVF")
+    state = spec.build(ds.train, metric=ds.metric, n_clusters=30)
+    return state, ds
+
+
+@pytest.fixture(scope="module")
+def tuned(ivf_case):
+    state, ds = ivf_case
+    return tune.grid_search(
+        state, ds.test[:NQ], ds.distances[:NQ], k=K,
+        knob_grid={"n_probes": (1, 2, 4, 8, 16, 30),
+                   "scan": (16, 64, state.stat("pad"))},
+        constraint=tune.Constraint.min_recall(0.9), repetitions=1)
+
+
+def test_grid_search_covers_the_whole_grid(tuned):
+    assert len(tuned.points) == 6 * 3
+    for p in tuned.points:
+        assert set(p.params) == {"n_probes", "scan"}
+        assert 0.0 <= p.recall <= 1.0
+        assert p.qps > 0 and p.latency > 0
+
+
+def test_best_satisfies_constraint_and_dominates_feasible(tuned):
+    """ISSUE 4 acceptance: the returned config meets recall >= 0.9 while
+    maximizing QPS over every feasible grid point."""
+    best = tuned.best
+    assert best is not None and tuned.ok
+    assert best.recall >= 0.9
+    for p in tuned.points:
+        if p.recall >= 0.9:
+            assert best.qps >= p.qps, (
+                f"feasible {p.params} has higher QPS than chosen "
+                f"{best.params}")
+    assert tuned.best_params() == best.params
+
+
+def test_pareto_subset_is_nondominated(tuned):
+    assert tuned.pareto and set(map(id, tuned.pareto)) <= \
+        set(map(id, tuned.points))
+    for p in tuned.pareto:
+        for q in tuned.points:
+            assert not (q.recall >= p.recall and q.qps >= p.qps
+                        and (q.recall > p.recall or q.qps > p.qps))
+
+
+def test_recall_is_monotone_in_the_probe_knob(tuned):
+    """At a fixed full-list scan, more probes can only help recall — the
+    tuner's recall column must reproduce the benchmark-side invariant."""
+    full = [p for p in tuned.points
+            if p.params["scan"] == max(q.params["scan"]
+                                       for q in tuned.points)]
+    full.sort(key=lambda p: p.params["n_probes"])
+    recalls = [p.recall for p in full]
+    assert recalls == sorted(recalls)
+
+
+def test_recall_is_at_k_even_when_output_is_narrower(ivf_case):
+    """A tight cap can make the sweep output narrower than k; the tuner
+    must report recall@k (missing columns = missing neighbors), never the
+    inflated recall@width — otherwise a config could 'satisfy' a recall
+    floor it does not actually meet."""
+    state, ds = ivf_case
+    res = tune.grid_search(state, ds.test[:16], ds.distances[:16], k=K,
+                           knob_grid={"n_probes": (1,), "scan": (4,)},
+                           repetitions=1)
+    # at most 1 probe x 4 scanned entries = 4 of k=10 possible hits
+    assert res.points[0].recall <= 4 / K + 1e-9
+
+
+def test_infeasible_constraint_returns_none(ivf_case):
+    state, ds = ivf_case
+    res = tune.grid_search(state, ds.test[:16], ds.distances[:16], k=K,
+                           knob_grid={"n_probes": (1,)},
+                           constraint=tune.Constraint.min_recall(2.0),
+                           repetitions=1)
+    assert res.best is None and not res.ok
+    with pytest.raises(ValueError, match="no grid point satisfies"):
+        res.best_params()
+
+
+def test_max_latency_constraint(ivf_case):
+    state, ds = ivf_case
+    res = tune.grid_search(state, ds.test[:16], ds.distances[:16], k=K,
+                           knob_grid={"n_probes": (1, 4, 30)},
+                           constraint=tune.Constraint.max_latency(10.0),
+                           repetitions=1)
+    # a 10 s/query budget is unmissable: the objective (recall) decides
+    assert res.best is not None
+    assert res.best.recall == max(p.recall for p in res.points)
+
+
+def test_grid_search_single_sweep_trace(ivf_case):
+    """The quality pass is ONE vmapped trace; timing adds exactly one
+    traced-cap trace (shared with what a serve Engine would use)."""
+    state, ds = ivf_case
+    functional.TRACE_COUNTS.clear()
+    tune.grid_search(state, ds.test[:16], ds.distances[:16], k=K,
+                     knob_grid={"n_probes": (1, 4, 12), "scan": (8, 32, 64)},
+                     repetitions=1)
+    assert functional.TRACE_COUNTS["IVF"] <= 2
+
+
+def test_engine_autotune_serves_without_retracing(small_dataset):
+    """ISSUE 4 acceptance: Engine.autotune picks the constrained-optimal
+    knobs and subsequent serving traffic triggers ZERO new traces (caps
+    were pinned at construction, so the tuned values are ordinary traced
+    runtime updates)."""
+    from repro.serve import Engine
+
+    ds = small_dataset
+    eng = Engine.build("IVF", ds.train, metric=ds.metric,
+                       build_params={"n_clusters": 30},
+                       query_params={"n_probes": 1, "max_probes": 30,
+                                     "max_scan": 200},
+                       k=K, batch_size=64)
+    eng.search(ds.test[:64])                      # warm the serving trace
+    result = eng.autotune(ds.test[:NQ], ds.distances[:NQ],
+                          knob_grid={"n_probes": (1, 2, 4, 8, 16, 30),
+                                     "scan": (16, 64, 200)},
+                          constraint=tune.Constraint.min_recall(0.9),
+                          repetitions=1)
+    assert result.best is not None
+    assert eng.query_params["n_probes"] == result.best.params["n_probes"]
+    assert eng.query_params["scan"] == result.best.params["scan"]
+
+    before = dict(functional.TRACE_COUNTS)
+    _, ids = eng.search(ds.test[:128])
+    t = eng.submit(ds.test[0])
+    eng.flush()
+    eng.result(t)
+    assert dict(functional.TRACE_COUNTS) == before, (
+        "serving at the tuned operating point retraced")
+
+    # and the engine actually serves at the promised quality
+    from repro.ann import distances as D
+    from repro.core.metrics import recall_from_arrays
+
+    dd = D.pairwise_rows(ds.test[:128], ds.train, np.asarray(ids)[:, :K],
+                         ds.metric)
+    rec = float(np.mean(recall_from_arrays(
+        dd, ds.distances[:128], K, neighbors=np.asarray(ids)[:, :K])))
+    assert rec >= 0.9
+
+
+def test_engine_autotune_rejects_untunable_knob(small_dataset):
+    from repro.serve import Engine
+
+    eng = Engine.build("IVF", small_dataset.train, metric="euclidean",
+                       build_params={"n_clusters": 10}, k=5, batch_size=32)
+    with pytest.raises(ValueError, match="no traced-cap"):
+        eng.autotune(small_dataset.test[:8], small_dataset.distances[:8],
+                     knob_grid={"max_probes": (1, 2)},
+                     constraint=tune.Constraint.min_recall(0.5))
+
+
+def test_autotune_infeasible_leaves_engine_untouched(small_dataset):
+    """An infeasible constraint must restore EVERYTHING it touched — a
+    raised cap (e.g. a freshly-pinned max_scan) silently changes serving
+    behaviour for knobs whose value means 'no limit'."""
+    from repro.serve import Engine
+
+    eng = Engine.build("IVF", small_dataset.train, metric="euclidean",
+                       build_params={"n_clusters": 30},
+                       query_params={"n_probes": 3, "max_probes": 30},
+                       k=K, batch_size=32)
+    before_params = dict(eng.query_params)
+    before_traced = eng.traced_params
+    want_d, want_ids = eng.search(small_dataset.test[:8])
+    res = eng.autotune(small_dataset.test[:16],
+                       small_dataset.distances[:16],
+                       knob_grid={"n_probes": (1, 2), "scan": (4, 8)},
+                       constraint=tune.Constraint.min_recall(2.0),
+                       repetitions=1)
+    assert res.best is None
+    assert eng.query_params == before_params       # no max_scan left behind
+    assert eng.traced_params == before_traced
+    d, ids = eng.search(small_dataset.test[:8])    # serving is bit-identical
+    np.testing.assert_array_equal(ids, want_ids)
+    np.testing.assert_array_equal(d, want_d)
+
+
+def test_tune_plot_png(tuned, tmp_path):
+    mpl = pytest.importorskip("matplotlib")  # noqa: F841
+    from repro.core.plotting import tune_plot_png
+
+    out = tune_plot_png(tuned, tmp_path / "tuned.png")
+    assert out.exists() and out.stat().st_size > 0
