@@ -25,12 +25,12 @@ import jax
 import numpy as np
 
 try:
-    from benchmarks.common import Row, dataset_size
+    from benchmarks.common import Row, dataset_size, write_bench_json
 except ModuleNotFoundError:          # direct script invocation
     import pathlib
     import sys
     sys.path.insert(0, str(pathlib.Path(__file__).resolve().parents[1]))
-    from benchmarks.common import Row, dataset_size
+    from benchmarks.common import Row, dataset_size, write_bench_json
 from repro import tune
 from repro.ann import functional
 from repro.ann.functional import get_functional, grid_combos, search_sweep
@@ -133,6 +133,8 @@ if __name__ == "__main__":
                    choices=["smoke", "default", "full"])
     args = p.parse_args()
     scale = args.scale or ("smoke" if args.smoke else "default")
+    rows = run(scale)
     print("name,us_per_call,derived")
-    for row in run(scale):
+    for row in rows:
         print(row.csv())
+    print(f"wrote {write_bench_json('tune', rows, scale=scale)}")

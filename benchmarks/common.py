@@ -12,6 +12,9 @@ recall/QPS trade-off shapes are what reproduce the paper's figures.
 from __future__ import annotations
 
 import dataclasses
+import json
+import os
+import pathlib
 import time
 from typing import Callable, List, Optional
 
@@ -24,6 +27,33 @@ class Row:
 
     def csv(self) -> str:
         return f"{self.name},{self.us_per_call:.1f},{self.derived}"
+
+
+def write_bench_json(name: str, rows: List["Row"], *, scale: str,
+                     extra: Optional[dict] = None,
+                     out_dir: Optional[str] = None) -> pathlib.Path:
+    """Machine-readable perf artifact: ``BENCH_<name>.json``.
+
+    Every benchmark entry point writes one of these next to where it ran
+    (override with ``out_dir`` or the ``REPRO_BENCH_DIR`` env var) so CI
+    can upload them and the repo accumulates a perf trajectory instead of
+    scrollback CSV.  Schema: ``{bench, scale, rows: [{name, us_per_call,
+    derived}], extra}`` — ``derived`` keeps the per-row key=value string
+    the CSV prints (shapes, QPS, speedups, recall), ``extra`` carries
+    bench-level results (gates, chosen configs, memory models).
+    """
+    out = pathlib.Path(out_dir or os.environ.get("REPRO_BENCH_DIR", "."))
+    out.mkdir(parents=True, exist_ok=True)
+    payload = {
+        "bench": name,
+        "scale": scale,
+        "unix_time": time.time(),
+        "rows": [dataclasses.asdict(r) for r in rows],
+        "extra": extra or {},
+    }
+    path = out / f"BENCH_{name}.json"
+    path.write_text(json.dumps(payload, indent=2, sort_keys=True) + "\n")
+    return path
 
 
 def timed(fn: Callable, *args, n: int = 3, warmup: int = 1) -> float:

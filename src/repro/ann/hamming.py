@@ -34,9 +34,10 @@ from repro.ann.functional import (FunctionalSpec, IndexState,
                                   prepare_queries, register_functional)
 from repro.ann.lsh import bucket_lookup, sorted_buckets
 from repro.ann.rpforest import forest_window, mask_dead_trees
-from repro.ann.topk import chunked_topk, topk_smallest, topk_unique
+from repro.ann.topk import chunked_topk, topk_smallest
 from repro.core.interface import FunctionalANN
 from repro.core.registry import register
+from repro.kernels.rerank_topk import rerank_topk
 
 
 def _popcount_matrix(Q, X):
@@ -45,34 +46,17 @@ def _popcount_matrix(Q, X):
     return jnp.sum(jax.lax.population_count(x), axis=-1).astype(jnp.int32)
 
 
-def _rerank_chunked(Xj, Q, cand, k: int, block: int):
-    """Streaming popcount rerank of a [b, C] candidate-id window: chunked
-    scan with dedupe at every fold (``chunked_topk(unique=True)``), so the
-    result is identical to the one-shot ``topk_unique`` while peak memory
-    drops from O(b * C * w) to O(b * block * w)."""
-    def chunk(s, size):
-        c = cand[:, s:s + size]
-        x = Xj[jnp.maximum(c, 0)]                          # [b, size, w]
-        xor = jax.lax.bitwise_xor(x, Q[:, None, :].astype(jnp.uint32))
-        d = jnp.sum(jax.lax.population_count(xor),
-                    axis=-1).astype(jnp.float32)
-        return jnp.where(c >= 0, d, jnp.inf), c
-
-    return chunked_topk(cand.shape[1], k, block, chunk, unique=True)
-
-
 def _hamming_rerank(state: IndexState, Q, cand, k: int):
-    """Popcount rerank, streaming when the state asks for it."""
-    k = min(k, cand.shape[1])
-    block = state.stat("rerank_block")
-    if state.stat("streaming") and cand.shape[1] > block:
-        return _rerank_chunked(state["X"], Q, cand, k, block)
-    safe = jnp.maximum(cand, 0)
-    x = state["X"][safe]                                   # [b, C, w]
-    xor = jax.lax.bitwise_xor(x, Q[:, None, :].astype(jnp.uint32))
-    d = jnp.sum(jax.lax.population_count(xor), axis=-1).astype(jnp.float32)
-    d = jnp.where(cand >= 0, d, jnp.inf)
-    return topk_unique(d, cand, k)
+    """Popcount rerank of a [b, C] candidate-id window through the shared
+    streaming fold (:func:`repro.kernels.rerank_topk.rerank_topk`, XOR +
+    popcount mode): identical to the one-shot ``topk_unique`` while peak
+    memory stays O(b * (block + k)).  The ``rerank_kernel`` build flag
+    swaps in the fused Pallas kernel (packed words DMA'd into VMEM
+    scratch); ``rerank_block`` overrides the autotuned block."""
+    return rerank_topk(
+        Q, state["X"], cand, k=k, metric="hamming",
+        block=state.static.get("rerank_block"),
+        use_kernel=bool(state.static.get("rerank_kernel", False)))
 
 
 # ------------------------------------------------------- brute force popcount
@@ -181,8 +165,8 @@ class BruteForceHamming(FunctionalANN):
 # ------------------------------------------------------- bitsampling forest
 def bitsampling_build(X: np.ndarray, *, metric: str = "hamming",
                       n_trees: int = 10, leaf_size: int = 32, seed: int = 0,
-                      streaming: bool = False,
-                      rerank_block: int = 4096) -> IndexState:
+                      streaming: bool = False, rerank_block=None,
+                      rerank_kernel: bool = False) -> IndexState:
     """Annoy-style forest with single-bit splits (host build)."""
     X = np.asarray(X, np.uint32)
     n, w = X.shape
@@ -248,7 +232,8 @@ def bitsampling_build(X: np.ndarray, *, metric: str = "hamming",
         "roots": jnp.asarray(np.asarray(roots, np.int32)),
     }, {"n": n, "w": w, "n_trees": T, "leaf_size": leaf_size,
         "depth": max_depth, "streaming": bool(streaming),
-        "rerank_block": int(rerank_block)})
+        "rerank_kernel": bool(rerank_kernel),
+        "rerank_block": None if rerank_block is None else int(rerank_block)})
 
 
 def _bitsampling_descend(state: IndexState, Q, cur):
@@ -323,15 +308,16 @@ class BitsamplingAnnoy(FunctionalANN):
 
     def __init__(self, metric: str, n_trees: int = 10, leaf_size: int = 32,
                  seed: int = 0, streaming: bool = False,
-                 rerank_block: int = 4096):
+                 rerank_block=None, rerank_kernel: bool = False):
         super().__init__(metric, build_params=dict(
             n_trees=int(n_trees), leaf_size=int(leaf_size), seed=int(seed),
-            streaming=bool(streaming), rerank_block=int(rerank_block)))
+            streaming=bool(streaming), rerank_block=rerank_block,
+            rerank_kernel=bool(rerank_kernel)))
         self.n_trees = int(n_trees)
         self.leaf_size = int(leaf_size)
         self.seed = int(seed)
         self.streaming = bool(streaming)
-        self.rerank_block = int(rerank_block)
+        self.rerank_block = rerank_block
         self.probe = 1
         self.name = f"BitsamplingAnnoy(T={n_trees},leaf={leaf_size})"
         self._dist_comps = 0
@@ -358,8 +344,8 @@ class BitsamplingAnnoy(FunctionalANN):
 # ------------------------------------------------------- multi-index hashing
 def mih_build(X: np.ndarray, *, metric: str = "hamming",
               n_chunks: int = 16, cap: int = 128, seed: int = 0,
-              streaming: bool = False,
-              rerank_block: int = 4096) -> IndexState:
+              streaming: bool = False, rerank_block=None,
+              rerank_kernel: bool = False) -> IndexState:
     X = np.asarray(X, np.uint32)
     n, w = X.shape
     bits = w * 32
@@ -381,7 +367,8 @@ def mih_build(X: np.ndarray, *, metric: str = "hamming",
         "bit_weights": jnp.asarray(bit_weights),
     }, {"n": n, "w": w, "n_chunks": m, "chunk_bits": chunk_bits,
         "cap": int(cap), "streaming": bool(streaming),
-        "rerank_block": int(rerank_block)})
+        "rerank_kernel": bool(rerank_kernel),
+        "rerank_block": None if rerank_block is None else int(rerank_block)})
 
 
 def _mih_query_chunks(state: IndexState, Q):
@@ -454,14 +441,15 @@ class MultiIndexHashing(FunctionalANN):
 
     def __init__(self, metric: str, n_chunks: int = 16, cap: int = 128,
                  seed: int = 0, streaming: bool = False,
-                 rerank_block: int = 4096):
+                 rerank_block=None, rerank_kernel: bool = False):
         super().__init__(metric, build_params=dict(
             n_chunks=int(n_chunks), cap=int(cap), seed=int(seed),
-            streaming=bool(streaming), rerank_block=int(rerank_block)))
+            streaming=bool(streaming), rerank_block=rerank_block,
+            rerank_kernel=bool(rerank_kernel)))
         self.n_chunks = int(n_chunks)
         self.cap = int(cap)
         self.streaming = bool(streaming)
-        self.rerank_block = int(rerank_block)
+        self.rerank_block = rerank_block
         self.radius = 0
         self.name = f"MIH(m={n_chunks},cap={cap})"
         self._dist_comps = 0

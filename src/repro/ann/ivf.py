@@ -19,12 +19,19 @@ query-time knob ``n_probes`` is *traced-or-static*:
     group up to the cap.  This is what lets the serving engine sweep the
     recall/QPS knob without recompilation.
 
-Streaming rerank (``streaming=True``): the probed candidate window is
-scanned in fixed ``rerank_block`` chunks folded into a running (dist, id)
-top-k accumulator (the same memory model as the streaming fused kernel) —
-peak rerank memory drops from O(b * n_probes * max_list * d) to
-O(b * rerank_block * d), which is what lets high-probe configurations run
-on large corpora at all.
+Rerank: the probed candidate window always goes through the shared
+streaming fold (:func:`repro.kernels.rerank_topk.rerank_topk`) — candidate
+blocks folded into a running unique-by-id (dist, id) top-k accumulator, so
+peak rerank memory is O(b * (block + k)) state plus one [b, block, d]
+gathered chunk instead of the materialized O(b * n_probes * max_list * d)
+tensor, which is what lets high-probe configurations run on large corpora
+at all.  ``rerank_block`` overrides the autotuned block; the
+``rerank_kernel`` build flag routes the fold through the fused Pallas
+kernel (candidate rows DMA'd straight into VMEM scratch, distances + the
+running top-k computed in-kernel), with the XLA fold as automatic
+fallback.  The per-list ``scan`` validity mask (traced knob) flows into
+the fold as a kernel input.  ``streaming`` survives as an accepted no-op
+(the fold subsumes it).
 """
 
 from __future__ import annotations
@@ -40,15 +47,16 @@ from repro.ann import distances as D
 from repro.ann.functional import (FunctionalSpec, IndexState, prepare_points,
                                   prepare_queries, register_functional)
 from repro.ann.kmeans import kmeans
-from repro.ann.topk import chunked_topk, topk_unique
 from repro.core.interface import FunctionalANN
 from repro.core.registry import register
+from repro.kernels.rerank_topk import rerank_topk
 
 
 # --------------------------------------------------------------- functional
 def build(X: np.ndarray, *, metric: str = "euclidean",
           n_clusters: int = 100, n_iters: int = 10, seed: int = 0,
-          streaming: bool = False, rerank_block: int = 4096) -> IndexState:
+          streaming: bool = False, rerank_block=None,
+          rerank_kernel: bool = False) -> IndexState:
     """Host k-means + cluster-major corpus layout -> device IndexState."""
     X = prepare_points(X, metric)
     n, d = X.shape
@@ -69,22 +77,9 @@ def build(X: np.ndarray, *, metric: str = "euclidean",
         arrays["xsq"] = jnp.sum(arrays["X"] ** 2, axis=1)
     return IndexState("IVF", metric, arrays, {
         "n": n, "d": d, "n_clusters": C, "pad": int(sizes.max()),
-        "streaming": bool(streaming), "rerank_block": int(rerank_block),
+        "streaming": bool(streaming), "rerank_kernel": bool(rerank_kernel),
+        "rerank_block": None if rerank_block is None else int(rerank_block),
     })
-
-
-def _rerank_chunk(state: IndexState, Q, cand, valid):
-    """Exact (dist, id) for one chunk of the candidate window."""
-    x = state["X"][cand]                                 # [b, c, d]
-    if state.metric == "euclidean":
-        qsq = jnp.sum(Q * Q, axis=1, keepdims=True)
-        cross = jnp.einsum("bnd,bd->bn", x, Q)
-        d = qsq - 2.0 * cross + state["xsq"][cand]
-    else:
-        d = 1.0 - jnp.einsum("bnd,bd->bn", x, Q)
-    d = jnp.where(valid, d, jnp.inf)
-    ids = jnp.where(valid, state["ids"][cand], -1)
-    return d, ids
 
 
 def search(state: IndexState, Q, *, k: int, n_probes=1, scan=None,
@@ -103,9 +98,12 @@ def search(state: IndexState, Q, *, k: int, n_probes=1, scan=None,
         Statically it narrows the gather window; under a static
         ``max_scan`` cap it is a traced runtime value masked in-kernel.
 
-    The final select is ``topk_unique`` — canonical on the (id, dist) set,
-    so traced-mode masking (which shifts candidate positions) is
-    bit-identical to the static path regardless of distance ties.
+    The rerank is the shared streaming fold
+    (:func:`repro.kernels.rerank_topk.rerank_topk`, Pallas-fused under the
+    ``rerank_kernel`` build flag), whose select is canonical on the
+    (id, dist) set exactly like ``topk_unique`` — so traced-mode masking
+    (which shifts candidate positions) is bit-identical to the static path
+    regardless of distance ties.
     """
     C = state.stat("n_clusters")
     n = state.stat("n")
@@ -137,17 +135,14 @@ def search(state: IndexState, Q, *, k: int, n_probes=1, scan=None,
         valid = valid & (offs[None, None, :] < jnp.maximum(scan, 1))
     cand = jnp.minimum(cand, n - 1).reshape(Q.shape[0], -1)
     valid = valid.reshape(Q.shape[0], -1)                # [b, P*M]
-    # 3. exact distances on the candidate set
-    n_cand = cand.shape[1]
-    rerank_block = state.stat("rerank_block")
-    if state.stat("streaming") and n_cand > rerank_block:
-        def chunk(s, size):
-            return _rerank_chunk(state, Q, cand[:, s:s + size],
-                                 valid[:, s:s + size])
-        return chunked_topk(n_cand, min(k, n_cand), rerank_block, chunk,
-                            unique=True)
-    d, ids = _rerank_chunk(state, Q, cand, valid)
-    return topk_unique(d, ids, min(k, d.shape[1]))
+    # 3. exact distances on the candidate set: the shared streaming fold
+    #    (optionally the fused Pallas kernel), probe/scan validity masks
+    #    flowing in as the fold's mask input
+    return rerank_topk(
+        Q, state["X"], cand, k=k, metric=state.metric,
+        xsq=state.arrays.get("xsq"), row_ids=state["ids"], valid=valid,
+        block=state.static.get("rerank_block"),
+        use_kernel=bool(state.static.get("rerank_kernel", False)))
 
 
 SPEC = register_functional(FunctionalSpec(
@@ -166,18 +161,18 @@ class IVF(FunctionalANN):
 
     def __init__(self, metric: str, n_clusters: int = 100, n_iters: int = 10,
                  seed: int = 0, streaming: bool = False,
-                 rerank_block: int = 4096):
+                 rerank_block=None, rerank_kernel: bool = False):
         super().__init__(metric, build_params=dict(
             n_clusters=int(n_clusters), n_iters=int(n_iters), seed=int(seed),
-            streaming=bool(streaming), rerank_block=int(rerank_block)))
+            streaming=bool(streaming), rerank_block=rerank_block,
+            rerank_kernel=bool(rerank_kernel)))
         self.n_clusters = int(n_clusters)
         self.n_iters = int(n_iters)
         self.seed = int(seed)
-        self.streaming = bool(streaming)
-        self.rerank_block = int(rerank_block)
+        self.streaming = bool(streaming)      # accepted no-op (the shared
+        self.rerank_block = rerank_block      # fold always streams)
         self.n_probes = 1
-        suffix = ",streaming" if streaming else ""
-        self.name = f"IVF(C={n_clusters}{suffix})"
+        self.name = f"IVF(C={n_clusters})"
         self._dist_comps = 0
 
     def _sync_state(self):
@@ -193,10 +188,21 @@ class IVF(FunctionalANN):
         self._qparams["n_probes"] = min(self.n_probes, self.n_clusters)
         self._qparams["scan"] = None if scan is None else int(scan)
 
+    def _effective_scan(self) -> int:
+        """Per-list window actually gathered: the scan budget when set
+        (clamped to the pad), else the full list pad."""
+        scan = self._qparams.get("scan")
+        if scan is None:
+            return self._pad
+        return max(1, min(int(scan), self._pad))
+
     def _batch_block_size(self, k: int) -> int:
-        # block queries so [b, P*M, d] stays bounded
+        # block queries so [b, P*M, d] stays bounded — M is the EFFECTIVE
+        # scan window, not the full list pad (a tight scan budget shrinks
+        # the gather, so bigger query blocks fit the same memory)
         nprobe = self._qparams["n_probes"]
-        return max(1, 64_000_000 // max(nprobe * self._pad * self._d, 1))
+        M = self._effective_scan()
+        return max(1, 64_000_000 // max(nprobe * M * self._d, 1))
 
     def query(self, q: np.ndarray, k: int) -> np.ndarray:
         out = super().query(q, k)
@@ -210,12 +216,18 @@ class IVF(FunctionalANN):
     def _count_probes(self, Q):
         # distance computations = centroid scan + probed list sizes
         # (clamp to the BUILT cluster count C = min(n_clusters, n), like
-        # the search path does)
+        # the search path does; a per-list scan budget caps every probed
+        # list at `scan` entries, so the count must clamp too — the
+        # unclamped sum overcounts work the masked gather never does)
         nprobe = min(self._qparams["n_probes"], int(self._centers.shape[0]))
         cd = D.sq_l2_matrix(prepare_queries(Q, self.metric), self._centers)
         _, probes = jax.lax.top_k(-cd, nprobe)
-        probed = self._sizes_np[np.asarray(probes)].sum()
-        self._dist_comps += int(probed) + Q.shape[0] * self._centers.shape[0]
+        sizes = self._sizes_np[np.asarray(probes)]
+        scan = self._qparams.get("scan")
+        if scan is not None:
+            sizes = np.minimum(sizes, max(1, int(scan)))
+        self._dist_comps += int(sizes.sum()) \
+            + Q.shape[0] * self._centers.shape[0]
 
     def get_additional(self):
         return {"dist_comps": self._dist_comps,

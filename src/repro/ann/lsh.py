@@ -19,6 +19,11 @@ Functional core: ``*_build(X, ...) -> IndexState`` carries the hash
 parameters and sorted tables as device arrays; ``*_search(state, Q, k,
 n_probes)`` is pure (the probe count shapes the key tensor, so it is a
 static knob).
+
+Candidate verification (the dominant query cost at useful probe counts)
+runs through the shared streaming rerank fold — see
+:func:`rerank_candidates` and the ``rerank_kernel`` / ``rerank_block``
+build flags it honours.
 """
 
 from __future__ import annotations
@@ -30,9 +35,9 @@ import jax.numpy as jnp
 
 from repro.ann.functional import (FunctionalSpec, IndexState, prepare_points,
                                   prepare_queries, register_functional)
-from repro.ann.topk import topk_unique
 from repro.core.interface import FunctionalANN
 from repro.core.registry import register
+from repro.kernels.rerank_topk import rerank_topk
 
 _E2_PRIME = (1 << 31) - 1
 
@@ -61,24 +66,27 @@ def bucket_lookup(keys, ids, qkeys: jnp.ndarray, cap: int) -> jnp.ndarray:
 
 
 def rerank_candidates(state: IndexState, Q, cand, k: int):
-    """Exact rerank of a [b, C] candidate-id window (float metrics): gather
-    ``state["X"][cand]``, exact distances, -1 ids masked to +inf, top-k with
-    duplicate ids removed.  Shared by the LSH schemes and RPForest."""
-    safe = jnp.maximum(cand, 0)
-    x = state["X"][safe]
-    if state.metric == "angular":
-        d = 1.0 - jnp.einsum("bcd,bd->bc", x, Q)
-    else:
-        diff = x - Q[:, None, :]
-        d = jnp.sum(diff * diff, axis=-1)
-    d = jnp.where(cand >= 0, d, jnp.inf)
-    return topk_unique(d, cand, min(k, cand.shape[1]))
+    """Exact rerank of a [b, C] candidate-id window (float metrics) through
+    the shared streaming fold (:func:`repro.kernels.rerank_topk.
+    rerank_topk`): candidate blocks are gathered and folded into a running
+    unique-by-id top-k, -1 ids masked to +inf — identical to the one-shot
+    ``topk_unique`` over the materialized gather, at O(b * (block + k))
+    peak memory.  The ``rerank_kernel`` build flag routes it through the
+    fused Pallas kernel (gather DMA'd into VMEM scratch); ``rerank_block``
+    overrides the autotuned candidate block.  Shared by the LSH schemes
+    and RPForest."""
+    return rerank_topk(
+        Q, state["X"], cand, k=k, metric=state.metric,
+        xsq=state.arrays.get("xsq"),
+        block=state.static.get("rerank_block"),
+        use_kernel=bool(state.static.get("rerank_kernel", False)))
 
 
 # ----------------------------------------------------------- hyperplane LSH
 def hyperplane_build(X: np.ndarray, *, metric: str = "angular",
                      n_tables: int = 8, n_bits: int = 16, cap: int = 64,
-                     seed: int = 0) -> IndexState:
+                     seed: int = 0, rerank_kernel: bool = False,
+                     rerank_block=None) -> IndexState:
     if int(n_bits) > 30:
         raise ValueError("n_bits must be <= 30 (int32 keys)")
     X = prepare_points(X, metric)
@@ -97,7 +105,8 @@ def hyperplane_build(X: np.ndarray, *, metric: str = "angular",
         "X": Xj, "planes": planes, "pow2": pow2,
         "keys": tkeys, "ids": tids,
     }, {"n": n, "d": d, "n_tables": int(n_tables), "n_bits": int(n_bits),
-        "cap": int(cap)})
+        "cap": int(cap), "rerank_kernel": bool(rerank_kernel),
+        "rerank_block": None if rerank_block is None else int(rerank_block)})
 
 
 def _hyperplane_probe_keys(state: IndexState, Q, probes: int):
@@ -179,7 +188,8 @@ register_functional(FunctionalSpec(
 # ------------------------------------------------------------------- E2LSH
 def e2lsh_build(X: np.ndarray, *, metric: str = "euclidean",
                 n_tables: int = 8, n_hashes: int = 8, width: float = 4.0,
-                cap: int = 64, seed: int = 0) -> IndexState:
+                cap: int = 64, seed: int = 0, rerank_kernel: bool = False,
+                rerank_block=None) -> IndexState:
     # ``width`` is RELATIVE to the dataset's sampled NN-distance scale; an
     # absolute bucket width would make recall arbitrarily
     # parameter-sensitive across datasets.
@@ -205,8 +215,11 @@ def e2lsh_build(X: np.ndarray, *, metric: str = "euclidean",
     Xj = jnp.asarray(X)
     state = IndexState("E2LSH", metric, {
         "X": Xj, "a": a, "b": b, "combine": combine,
+        "xsq": jnp.sum(Xj * Xj, axis=1),        # cached for the fused rerank
     }, {"n": n, "d": d, "n_tables": int(n_tables),
-        "n_hashes": int(n_hashes), "cap": int(cap), "w_eff": w})
+        "n_hashes": int(n_hashes), "cap": int(cap), "w_eff": w,
+        "rerank_kernel": bool(rerank_kernel),
+        "rerank_block": None if rerank_block is None else int(rerank_block)})
     h, _ = _e2_hash(state, Xj)
     keys = np.asarray(_e2_key(state, h))
     tkeys, tids = sorted_buckets(keys)
@@ -315,10 +328,12 @@ class HyperplaneLSH(_LSHBase):
     supported_metrics = ("angular",)
 
     def __init__(self, metric: str, n_tables: int = 8, n_bits: int = 16,
-                 cap: int = 64, seed: int = 0):
+                 cap: int = 64, seed: int = 0, rerank_kernel: bool = False,
+                 rerank_block=None):
         super().__init__(metric, n_tables, cap, seed, dict(
             n_tables=int(n_tables), n_bits=int(n_bits), cap=int(cap),
-            seed=int(seed)))
+            seed=int(seed), rerank_kernel=bool(rerank_kernel),
+            rerank_block=rerank_block))
         if int(n_bits) > 30:
             raise ValueError("n_bits must be <= 30 (int32 keys)")
         self.n_bits = int(n_bits)
@@ -330,10 +345,12 @@ class E2LSH(_LSHBase):
     supported_metrics = ("euclidean",)
 
     def __init__(self, metric: str, n_tables: int = 8, n_hashes: int = 8,
-                 width: float = 4.0, cap: int = 64, seed: int = 0):
+                 width: float = 4.0, cap: int = 64, seed: int = 0,
+                 rerank_kernel: bool = False, rerank_block=None):
         super().__init__(metric, n_tables, cap, seed, dict(
             n_tables=int(n_tables), n_hashes=int(n_hashes),
-            width=float(width), cap=int(cap), seed=int(seed)))
+            width=float(width), cap=int(cap), seed=int(seed),
+            rerank_kernel=bool(rerank_kernel), rerank_block=rerank_block))
         self.n_hashes = int(n_hashes)
         self.width = float(width)
         self.name = (f"E2LSH(L={n_tables},m={n_hashes},w={width},cap={cap})")

@@ -73,7 +73,8 @@ class _TreeBuilder:
 
 # --------------------------------------------------------------- functional
 def build(X: np.ndarray, *, metric: str = "euclidean", n_trees: int = 10,
-          leaf_size: int = 32, seed: int = 0) -> IndexState:
+          leaf_size: int = 32, seed: int = 0, rerank_kernel: bool = False,
+          rerank_block=None) -> IndexState:
     X = prepare_points(X, metric)
     n, d = X.shape
     n_trees, leaf_size = int(n_trees), int(leaf_size)
@@ -102,15 +103,20 @@ def build(X: np.ndarray, *, metric: str = "euclidean", n_trees: int = 10,
             normals[t, i], offsets[t, i], children[t, i] = w, b, ch
         for li, ids in enumerate(tb.leaves):
             leaf_pts[t, li, :len(ids)] = ids[:leaf_size]
-    return IndexState("RPForest", metric, {
+    arrays = {
         "X": jnp.asarray(X),
         "normals": jnp.asarray(normals),
         "offsets": jnp.asarray(offsets),
         "children": jnp.asarray(children),
         "leaf_pts": jnp.asarray(leaf_pts),
         "roots": jnp.asarray(roots),
-    }, {"n": n, "d": d, "n_trees": T, "leaf_size": leaf_size,
-        "max_depth": max_depth})
+    }
+    if metric == "euclidean":
+        arrays["xsq"] = jnp.sum(arrays["X"] ** 2, axis=1)  # fused rerank
+    return IndexState("RPForest", metric, arrays, {
+        "n": n, "d": d, "n_trees": T, "leaf_size": leaf_size,
+        "max_depth": max_depth, "rerank_kernel": bool(rerank_kernel),
+        "rerank_block": None if rerank_block is None else int(rerank_block)})
 
 
 def forest_window(T: int, trees, max_trees):
@@ -224,9 +230,11 @@ class RPForest(FunctionalANN):
     supported_metrics = ("euclidean", "angular")
 
     def __init__(self, metric: str, n_trees: int = 10, leaf_size: int = 32,
-                 seed: int = 0):
+                 seed: int = 0, rerank_kernel: bool = False,
+                 rerank_block=None):
         super().__init__(metric, build_params=dict(
-            n_trees=int(n_trees), leaf_size=int(leaf_size), seed=int(seed)))
+            n_trees=int(n_trees), leaf_size=int(leaf_size), seed=int(seed),
+            rerank_kernel=bool(rerank_kernel), rerank_block=rerank_block))
         self.n_trees = int(n_trees)
         self.leaf_size = int(leaf_size)
         self.seed = int(seed)

@@ -13,6 +13,10 @@ Kernels:
                    accumulators, d-tiling, and query-block streaming so
                    nq and n are both unbounded by HBM (O(nq*k) output)
                    (supersedes the retired topk_scan kernel)
+    rerank_topk/   fused candidate rerank: scalar-prefetched row gather into
+                   VMEM scratch + distance + running unique-by-id top-k, so
+                   the [b, C, d] gathered candidate tensor never exists in
+                   HBM (every algorithm's verification hot path)
     hamming/       XOR + popcount distances over packed uint32 codes
     embedbag/      embedding-bag gather-reduce (recsys hot path)
     decode_attn/   single-token decode attention with online softmax

@@ -1,0 +1,5 @@
+from repro.kernels.rerank_topk.ops import (pick_rerank_block,  # noqa: F401
+                                           rerank_topk)
+from repro.kernels.rerank_topk.ref import rerank_topk_ref  # noqa: F401
+from repro.kernels.rerank_topk.rerank_topk import (  # noqa: F401
+    merge_topk_unique_rounds, rerank_topk_pallas)

@@ -42,7 +42,10 @@ import jax.numpy as jnp
 from repro.ann.functional import IndexState, get_functional
 
 #: bump when the on-disk layout changes; load() rejects anything else.
-CHECKPOINT_VERSION = 1
+#: v2: euclidean E2LSH/RPForest states grew a cached ``xsq`` array (the
+#: fused-rerank norms table) — v1 checkpoints of those indexes would load
+#: but fail at query time, so they are rejected here instead.
+CHECKPOINT_VERSION = 2
 
 _META_KEY = "__repro_meta__"
 

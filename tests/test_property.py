@@ -264,3 +264,97 @@ def test_recall_bounds(nq, k):
     r1 = recall(run, 0.5)
     assert 0.0 <= r0 <= 1.0
     assert r1 >= r0                      # eps-recall is monotone in eps
+
+
+# ------------------------------------------------ fused rerank parity
+# ISSUE 5 invariant: the streaming rerank fold (and the Pallas kernel
+# path) must return exactly the ids of the canonical ``topk_unique`` over
+# the materialized gather for ANY candidate window — ``-1``-masked slots,
+# duplicate ids spanning block boundaries, ``n_cand < k`` — in all three
+# distance modes.  Distances: bit-identical for hamming (integer
+# popcounts), ulp-close for float modes (documented in
+# ``kernels/rerank_topk/ops.py``).
+
+@functools.lru_cache(maxsize=None)
+def _rerank_corpus(metric: str):
+    rng = np.random.default_rng(23)
+    if metric == "hamming":
+        X = rng.integers(0, 2**32, (160, 3),
+                         dtype=np.uint64).astype(np.uint32)
+        Q = rng.integers(0, 2**32, (6, 3),
+                         dtype=np.uint64).astype(np.uint32)
+        return jnp.asarray(Q), jnp.asarray(X), None
+    X = rng.standard_normal((160, 12)).astype(np.float32)
+    Q = rng.standard_normal((6, 12)).astype(np.float32)
+    if metric == "angular":
+        X /= np.linalg.norm(X, axis=1, keepdims=True)
+        Q /= np.linalg.norm(Q, axis=1, keepdims=True)
+    Qj, Xj = jnp.asarray(Q), jnp.asarray(X)
+    xsq = jnp.sum(Xj * Xj, axis=1) if metric == "euclidean" else None
+    return Qj, Xj, xsq
+
+
+def _drawn_window(seed: int, C: int, n: int = 160):
+    """[6, C] candidate window with duplicates + -1 masks from the seed."""
+    rng = np.random.default_rng(seed)
+    cand = rng.integers(0, n, (6, C)).astype(np.int32)
+    if C >= 2:
+        half = C // 2
+        dup = rng.integers(1, half + 1)       # dups straddling any block
+        cand[:, half:half + dup] = cand[:, :dup]
+    cand[rng.random((6, C)) < 0.2] = -1
+    return jnp.asarray(cand)
+
+
+def _assert_rerank_parity(metric: str, seed: int, k: int, C: int,
+                          block: int):
+    from repro.kernels.rerank_topk import rerank_topk, rerank_topk_ref
+
+    Q, X, xsq = _rerank_corpus(metric)
+    cand = _drawn_window(seed, C)
+    want_d, want = rerank_topk_ref(Q, X, cand, k=k, metric=metric, xsq=xsq)
+    got_d, got = rerank_topk(Q, X, cand, k=k, metric=metric, xsq=xsq,
+                             block=block)
+    np.testing.assert_array_equal(np.asarray(want), np.asarray(got))
+    if metric == "hamming":
+        np.testing.assert_array_equal(np.asarray(want_d),
+                                      np.asarray(got_d))
+    else:
+        np.testing.assert_allclose(np.asarray(want_d), np.asarray(got_d),
+                                   rtol=1e-6, atol=1e-5)
+
+
+_rerank_args = (st.integers(0, 2**31 - 1), st.integers(1, 24),
+                st.integers(1, 80), st.integers(8, 40))
+
+
+@given(*_rerank_args)
+def test_rerank_fold_parity_euclidean(seed, k, C, block):
+    _assert_rerank_parity("euclidean", seed, k, C, block)
+
+
+@given(*_rerank_args)
+def test_rerank_fold_parity_angular(seed, k, C, block):
+    _assert_rerank_parity("angular", seed, k, C, block)
+
+
+@given(*_rerank_args)
+def test_rerank_fold_parity_hamming(seed, k, C, block):
+    _assert_rerank_parity("hamming", seed, k, C, block)
+
+
+@given(st.integers(0, 2**31 - 1))
+def test_rerank_kernel_parity_ids(seed):
+    """Kernel path == fold, bit-identical ids, for any drawn window (fixed
+    k/block so every draw reuses ONE compiled kernel)."""
+    from repro.kernels.rerank_topk import rerank_topk
+
+    for metric in ("euclidean", "angular", "hamming"):
+        Q, X, xsq = _rerank_corpus(metric)
+        cand = _drawn_window(seed, 64)
+        _, want = rerank_topk(Q, X, cand, k=8, metric=metric, xsq=xsq,
+                              block=16)
+        _, got = rerank_topk(Q, X, cand, k=8, metric=metric, xsq=xsq,
+                             block=16, use_kernel=True)
+        np.testing.assert_array_equal(np.asarray(want), np.asarray(got),
+                                      err_msg=metric)
