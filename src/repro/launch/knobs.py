@@ -1,0 +1,78 @@
+"""Shared CLI parsing for build/query knob overrides and knob grids.
+
+Every launcher that accepts ``--build``/``--query`` knob strings
+(``repro.launch.serve``, ``repro.launch.tune``) parses them through THIS
+module, so ``--query ef=64,n_probes=8`` means the same thing — and fails
+with the same message — everywhere.  Accepted forms:
+
+  * ``key=value`` tokens, space-separated (argparse ``nargs``):
+    ``--query n_probes=8 max_probes=32``
+  * comma-packed assignments inside one token (the form ``launch.tune``
+    prints as its ready-to-paste serve config): ``--query ef=64,n_probes=8``
+  * grids (``parse_grid``): ``knob=v1,v2,...`` per token, commas are the
+    VALUE separator there — ``--grid n_probes=1,2,4 scan=32,128``
+
+Values coerce ``int`` → ``float`` → ``bool`` (``true``/``false``) →
+``str``, in that order.  Errors raise :class:`SystemExit` with a message
+naming the offending token (these are CLI entry points; tests assert the
+message is identical across launchers).
+"""
+
+from __future__ import annotations
+
+from typing import Dict, List, Sequence
+
+
+def coerce(token: str):
+    """One CLI value -> int | float | bool | str (first parse that fits)."""
+    try:
+        return int(token)
+    except ValueError:
+        try:
+            return float(token)
+        except ValueError:
+            if token in ("True", "true"):
+                return True
+            if token in ("False", "false"):
+                return False
+            return token
+
+
+def parse_kv(tokens: Sequence[str]) -> Dict[str, object]:
+    """``["a=1", "b=2,c=x"]`` -> ``{"a": 1, "b": 2, "c": "x"}``.
+
+    Each token may pack several comma-separated assignments; later
+    assignments win on duplicate keys (CLI override semantics).
+    """
+    out: Dict[str, object] = {}
+    for token in tokens:
+        for part in token.split(","):
+            key, sep, value = part.partition("=")
+            if not sep or not key:
+                raise SystemExit(
+                    f"expected key=value (comma-separable), got {part!r} "
+                    f"in {token!r}")
+            out[key] = coerce(value)
+    return out
+
+
+def parse_grid(tokens: Sequence[str]) -> Dict[str, List[object]]:
+    """``["n_probes=1,2,4", "scan=32,128"]`` -> ``{"n_probes": [1,2,4], ...}``
+
+    One knob per token; commas separate the swept VALUES (so grids and
+    packed kv strings cannot be mixed in one flag — grids have their own
+    ``--grid``).
+    """
+    grid: Dict[str, List[object]] = {}
+    for token in tokens:
+        key, sep, values = token.partition("=")
+        if not sep or not key or not values:
+            raise SystemExit(f"expected knob=v1,v2,..., got {token!r}")
+        grid[key] = [coerce(v) for v in values.split(",")]
+    return grid
+
+
+def format_kv(params: Dict[str, object]) -> str:
+    """Inverse of :func:`parse_kv` for one packed token: ``a=1,b=2`` —
+    what ``launch.tune`` prints as a ready-to-paste ``--query`` string."""
+    return ",".join(f"{k}={v}" for k, v in params.items())

@@ -1,18 +1,26 @@
 """ANN serving launcher: build a functional index over a dataset and serve
-micro-batched query streams through the Engine, reporting the paper's
-metrics (recall vs QPS) live.
+it through the serving tier, reporting the paper's metrics (recall vs QPS)
+plus the serving tier's own (p50/p95/p99 latency, timeouts, rejections).
+
+Two modes:
+
+  * ``--mode batch`` (default) — the closed-loop micro-batch path: fixed
+    request batches through ``Engine.search``, live recall/QPS per batch.
+  * ``--mode stream`` — the open-loop SLO path: Poisson arrivals submitted
+    to the :class:`~repro.serve.AsyncEngine` background pump (timeout
+    flush, per-request deadlines, bounded-queue admission control), with
+    latency percentiles from the serving histogram.
 
     PYTHONPATH=src python -m repro.launch.serve --dataset blobs-euclidean-20000 \
         --algorithm IVF --build n_clusters=64 --query n_probes=8 \
-        --batch-size 512
+        --mode stream --max-wait-ms 5 --deadline-ms 100 --n-requests 2000
 
-This is the "production" face of the benchmark framework: the same pure
-``search`` functions behind the experiment loop serve request batches from
-one jitted trace (fixed padded batch shape — no retrace per request size),
-with pytree index checkpointing (``--index-cache``) so restarts skip the
-build phase.  Recall is routed through ``core.metrics.recall_from_arrays``
-— the exact definition the benchmark results layer uses — so serve-time
-and benchmark-time recall cannot drift.
+Knob strings (``--build``/``--query``) parse through the shared
+:mod:`repro.launch.knobs` helper — ``--query ef=64,n_probes=8`` and
+``--query ef=64 n_probes=8`` are equivalent, and errors match
+``repro.launch.tune`` exactly.  Recall is routed through
+``core.metrics.recall_from_arrays`` — the exact definition the benchmark
+results layer uses — so serve-time and benchmark-time recall cannot drift.
 
 Legacy positional ``--args``/``--query-args`` are still accepted and mapped
 through the functional spec's parameter names.
@@ -29,32 +37,14 @@ from repro.ann import distances as D
 from repro.ann.functional import get_functional
 from repro.core.metrics import recall_from_arrays
 from repro.data import get_dataset
-from repro.serve import CheckpointError, Engine
+from repro.launch.knobs import coerce, parse_kv
+from repro.serve import (AdmissionError, AsyncEngine, CheckpointError,
+                         DeadlineExceeded, Engine)
 
-
-def _coerce(a: str):
-    try:
-        return int(a)
-    except ValueError:
-        try:
-            return float(a)
-        except ValueError:
-            if a in ("True", "true"):
-                return True
-            if a in ("False", "false"):
-                return False
-            return a
-
-
-def _kv(pairs):
-    """["n_clusters=64", ...] -> {"n_clusters": 64, ...}"""
-    out = {}
-    for p in pairs:
-        key, _, value = p.partition("=")
-        if not _:
-            raise SystemExit(f"expected key=value, got {p!r}")
-        out[key] = _coerce(value)
-    return out
+# pre-ISSUE-6 import surface (repro.launch.tune used to pull these from
+# here); the canonical home is repro.launch.knobs.
+_coerce = coerce
+_kv = parse_kv
 
 
 def build_or_restore(args, ds) -> Engine:
@@ -71,10 +61,10 @@ def build_or_restore(args, ds) -> Engine:
             return eng
         except CheckpointError as e:
             print(f"[serve] cache miss ({e}); building")
-    build_params = _kv(args.build)
+    build_params = parse_kv(args.build)
     # legacy positional --args map onto nothing structured; accept the old
     # IVF/LSH convention of a single leading int = first build knob
-    for value, name in zip([_coerce(a) for a in args.args],
+    for value, name in zip([coerce(a) for a in args.args],
                            _positional_build_names(spec)):
         build_params.setdefault(name, value)
     t0 = time.perf_counter()
@@ -98,38 +88,14 @@ def _positional_build_names(spec):
             if p.kind == p.KEYWORD_ONLY and name != "metric"]
 
 
-def main(argv=None):
-    p = argparse.ArgumentParser()
-    p.add_argument("--dataset", default="blobs-euclidean-20000")
-    p.add_argument("--algorithm", default="IVF")
-    p.add_argument("--args", nargs="*", default=[],
-                   help="legacy positional build args")
-    p.add_argument("--query-args", nargs="*", default=[],
-                   help="legacy positional query args")
-    p.add_argument("--build", nargs="*", default=[],
-                   help="build params as key=value")
-    p.add_argument("--query", nargs="*", default=[],
-                   help="query params as key=value")
-    p.add_argument("--count", type=int, default=10)
-    p.add_argument("--batch-size", type=int, default=256)
-    p.add_argument("--n-batches", type=int, default=8)
-    p.add_argument("--index-cache", default=None)
-    p.add_argument("--assert-recall", type=float, default=None,
-                   help="exit non-zero unless aggregate recall >= this")
-    args = p.parse_args(argv)
+def _recall_rows(ds, Q, ids, sel, k):
+    """Shared-definition recall for served answers (paper §3.6)."""
+    dists = D.pairwise_rows(Q, ds.train, ids[:, :k], ds.metric)
+    return recall_from_arrays(dists, ds.distances[sel], k,
+                              neighbors=ids[:, :k])
 
-    ds = get_dataset(args.dataset)
-    eng = build_or_restore(args, ds)
 
-    spec = eng.spec
-    # explicit --query key=value wins over legacy positional --query-args,
-    # matching the --build vs --args precedence on the build side
-    qparams = _kv(args.query)
-    for name, value in zip(spec.query_params,
-                           [_coerce(a) for a in args.query_args]):
-        qparams.setdefault(name, value)
-    eng.query_params.update(qparams)
-
+def batch_loop(eng: Engine, ds, args) -> float:
     rng = np.random.default_rng(0)
     k = args.count
     total_q, total_t, recalls = 0, 0.0, []
@@ -139,11 +105,7 @@ def main(argv=None):
         t0 = time.perf_counter()
         _, ids = eng.search(Q)
         dt = time.perf_counter() - t0
-        # recall via the shared metrics definition (framework re-computes
-        # candidate distances, paper §3.6)
-        dists = D.pairwise_rows(Q, ds.train, ids[:, :k], ds.metric)
-        rec = float(np.mean(recall_from_arrays(
-            dists, ds.distances[idx], k, neighbors=ids[:, :k])))
+        rec = float(np.mean(_recall_rows(ds, Q, ids, idx, k)))
         recalls.append(rec)
         total_q += len(Q)
         total_t += dt
@@ -152,7 +114,110 @@ def main(argv=None):
     agg = float(np.mean(recalls))
     print(f"[serve] aggregate {total_q / total_t:.0f} QPS over "
           f"{total_q} queries, mean recall@{k} = {agg:.3f}")
-    if args.assert_recall is not None and agg < args.assert_recall:
+    return agg
+
+
+def stream_loop(eng: Engine, ds, args) -> float:
+    """Open-loop Poisson arrivals through the AsyncEngine pump."""
+    k = args.count
+    rng = np.random.default_rng(0)
+    rate = args.rate
+    if rate is None:
+        # probe closed-loop capacity (warm: the first call pays the jit
+        # trace, which is not per-request cost), then offer sub-capacity
+        eng.search(ds.test[:eng.batch_size])
+        t0 = time.perf_counter()
+        eng.search(ds.test[:eng.batch_size])
+        svc = time.perf_counter() - t0
+        rate = 0.5 * eng.batch_size / max(svc, 1e-6)
+    print(f"[serve] stream: {args.n_requests} requests, Poisson "
+          f"{rate:.0f}/s, max_wait={args.max_wait_ms} ms, "
+          f"deadline={args.deadline_ms} ms, max_queue={args.max_queue}")
+    srv = AsyncEngine(eng, max_wait_ms=args.max_wait_ms,
+                      max_queue=args.max_queue,
+                      default_deadline_ms=args.deadline_ms)
+    gaps = rng.exponential(1.0 / rate, args.n_requests)
+    sels = rng.integers(0, len(ds.test), args.n_requests)
+    inflight, rejected = [], 0
+    for sel, gap in zip(sels, gaps):
+        try:
+            inflight.append((srv.submit(ds.test[sel]), int(sel)))
+        except AdmissionError:
+            rejected += 1
+        time.sleep(gap)
+    answered_ids, answered_sel, timed_out = [], [], 0
+    for ticket, sel in inflight:
+        try:
+            _, ids = ticket.result(timeout=60)
+        except DeadlineExceeded:
+            timed_out += 1
+            continue
+        answered_ids.append(ids)
+        answered_sel.append(sel)
+    srv.close()
+    agg = float("nan")
+    if answered_ids:
+        ids = np.stack(answered_ids)
+        sel = np.asarray(answered_sel)
+        agg = float(np.mean(_recall_rows(ds, ds.test[sel], ids, sel, k)))
+    lat = srv.metrics.snapshot()["latency_ms"]
+    print(f"[serve] answered {len(answered_ids)}/{args.n_requests} "
+          f"(timed out {timed_out}, rejected {rejected}) in "
+          f"{srv.metrics.counter('batches')} micro-batches; "
+          f"mean recall@{k} = {agg:.3f}")
+    print(f"[serve] latency ms: p50={lat['p50']:.2f} p95={lat['p95']:.2f} "
+          f"p99={lat['p99']:.2f} max={lat['max']:.2f}")
+    return agg
+
+
+def main(argv=None):
+    p = argparse.ArgumentParser()
+    p.add_argument("--dataset", default="blobs-euclidean-20000")
+    p.add_argument("--algorithm", default="IVF")
+    p.add_argument("--mode", default="batch", choices=["batch", "stream"],
+                   help="closed-loop micro-batches vs open-loop async pump")
+    p.add_argument("--args", nargs="*", default=[],
+                   help="legacy positional build args")
+    p.add_argument("--query-args", nargs="*", default=[],
+                   help="legacy positional query args")
+    p.add_argument("--build", nargs="*", default=[],
+                   help="build params as key=value (comma-separable)")
+    p.add_argument("--query", nargs="*", default=[],
+                   help="query params as key=value (comma-separable)")
+    p.add_argument("--count", type=int, default=10)
+    p.add_argument("--batch-size", type=int, default=256)
+    p.add_argument("--n-batches", type=int, default=8)
+    p.add_argument("--index-cache", default=None)
+    p.add_argument("--assert-recall", type=float, default=None,
+                   help="exit non-zero unless aggregate recall >= this")
+    # stream-mode pump knobs
+    p.add_argument("--n-requests", type=int, default=2000)
+    p.add_argument("--rate", type=float, default=None,
+                   help="Poisson arrivals/s (default: 0.5x probed capacity)")
+    p.add_argument("--max-wait-ms", type=float, default=5.0,
+                   help="pump flush timeout (latency/batching trade-off)")
+    p.add_argument("--deadline-ms", type=float, default=None,
+                   help="per-request deadline; late answers time out")
+    p.add_argument("--max-queue", type=int, default=1024,
+                   help="admission bound: reject beyond this queue depth")
+    args = p.parse_args(argv)
+
+    ds = get_dataset(args.dataset)
+    eng = build_or_restore(args, ds)
+
+    spec = eng.spec
+    # explicit --query key=value wins over legacy positional --query-args,
+    # matching the --build vs --args precedence on the build side
+    qparams = parse_kv(args.query)
+    for name, value in zip(spec.query_params,
+                           [coerce(a) for a in args.query_args]):
+        qparams.setdefault(name, value)
+    eng.query_params.update(qparams)
+
+    loop = stream_loop if args.mode == "stream" else batch_loop
+    agg = loop(eng, ds, args)
+    if args.assert_recall is not None and \
+            not agg >= args.assert_recall:
         raise SystemExit(
             f"[serve] recall {agg:.3f} < required {args.assert_recall}")
 

@@ -22,18 +22,7 @@ import time
 from repro import tune
 from repro.ann.functional import get_functional
 from repro.data import get_dataset
-from repro.launch.serve import _coerce, _kv
-
-
-def _parse_grid(pairs) -> dict:
-    """["n_probes=1,2,4", "scan=32,128"] -> {"n_probes": [1,2,4], ...}"""
-    grid = {}
-    for p in pairs:
-        key, sep, values = p.partition("=")
-        if not sep or not values:
-            raise SystemExit(f"expected knob=v1,v2,..., got {p!r}")
-        grid[key] = [_coerce(v) for v in values.split(",")]
-    return grid
+from repro.launch.knobs import format_kv, parse_grid, parse_kv
 
 
 def _point_row(p: tune.OperatingPoint) -> dict:
@@ -46,9 +35,9 @@ def main(argv=None):
     p.add_argument("--dataset", default="blobs-euclidean-20000")
     p.add_argument("--algorithm", default="IVF")
     p.add_argument("--build", nargs="*", default=[],
-                   help="build params as key=value")
+                   help="build params as key=value (comma-separable)")
     p.add_argument("--query", nargs="*", default=[],
-                   help="fixed query params as key=value")
+                   help="fixed query params as key=value (comma-separable)")
     p.add_argument("--grid", nargs="+", required=True,
                    help="swept knobs as knob=v1,v2,... (cartesian product)")
     p.add_argument("--count", type=int, default=10)
@@ -73,9 +62,9 @@ def main(argv=None):
 
     ds = get_dataset(args.dataset)
     spec = get_functional(args.algorithm)
-    grid = _parse_grid(args.grid)
+    grid = parse_grid(args.grid)
     t0 = time.perf_counter()
-    state = spec.build(ds.train, metric=ds.metric, **_kv(args.build))
+    state = spec.build(ds.train, metric=ds.metric, **parse_kv(args.build))
     print(f"[tune] built {spec.name} in {time.perf_counter() - t0:.2f}s; "
           f"grid {'x'.join(str(len(v)) for v in grid.values())} over "
           f"{sorted(grid)} ({constraint})")
@@ -84,7 +73,7 @@ def main(argv=None):
     result = tune.grid_search(
         state, ds.test[:nq], ds.distances[:nq], k=args.count,
         knob_grid=grid, constraint=constraint,
-        repetitions=args.repetitions, query_params=_kv(args.query))
+        repetitions=args.repetitions, query_params=parse_kv(args.query))
 
     pareto = {id(pt) for pt in result.pareto}
     header = f"{'config':<36}{'recall':>8}{'qps':>10}{'ms/q':>8}"
@@ -101,11 +90,10 @@ def main(argv=None):
         print(f"[tune] NO grid point satisfies {constraint}; "
               f"widen the grid or relax the bound")
     else:
-        chosen = ",".join(f"{k}={v}"
-                          for k, v in result.best.params.items())
+        chosen = format_kv(result.best.params)
         print(f"[tune] chosen: {chosen}  (recall={result.best.recall:.3f}, "
               f"{result.best.qps:.0f} QPS) — serve with "
-              f"--query {' '.join(f'{k}={v}' for k, v in result.best.params.items())}")
+              f"--query {chosen}")
 
     if args.out_json:
         payload = {

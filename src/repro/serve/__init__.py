@@ -1,7 +1,30 @@
-"""Serving layer: micro-batching Engine over the functional index core."""
+"""Serving tier over the functional index core.
 
-from repro.serve.engine import (CHECKPOINT_VERSION, CheckpointError, Engine,
-                                load_state, save_state)
+Three layers, composing upward:
 
-__all__ = ["Engine", "CheckpointError", "CHECKPOINT_VERSION",
-           "save_state", "load_state"]
+  * :mod:`repro.serve.engine` — the synchronous micro-batching
+    :class:`Engine` (one fixed padded trace per resident IndexState) and
+    the :class:`Ticket` request future.
+  * :mod:`repro.serve.async_engine` — the SLO-aware background pump
+    (:class:`AsyncEngine`): timeout-based flush, per-request deadlines,
+    admission control, multi-tenant routing, latency percentiles.
+  * :mod:`repro.serve.checkpoint` — the one checkpoint surface
+    (single-state ``.npz`` + multi-tenant archives, explicit version
+    negotiation).
+"""
+
+from repro.serve.async_engine import DEFAULT_TENANT, AsyncEngine
+from repro.serve.checkpoint import (ARCHIVE_VERSION, CHECKPOINT_VERSION,
+                                    CheckpointError, load_state, save_state)
+from repro.serve.engine import Engine, Ticket
+from repro.serve.errors import (AdmissionError, DeadlineExceeded,
+                                EngineClosed, ServeError)
+from repro.serve.metrics import LatencyHistogram, ServeMetrics
+
+__all__ = [
+    "Engine", "Ticket", "AsyncEngine", "DEFAULT_TENANT",
+    "ServeMetrics", "LatencyHistogram",
+    "ServeError", "AdmissionError", "DeadlineExceeded", "EngineClosed",
+    "CheckpointError", "CHECKPOINT_VERSION", "ARCHIVE_VERSION",
+    "save_state", "load_state",
+]

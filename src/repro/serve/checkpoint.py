@@ -1,0 +1,285 @@
+"""The one checkpoint surface for the serving tier.
+
+Everything that persists an :class:`~repro.ann.functional.IndexState`
+goes through this module — ``Engine.save``/``Engine.load``,
+``AsyncEngine.save``/``AsyncEngine.load`` and the standalone helpers are
+all thin wrappers over ONE documented entry pair:
+
+    checkpoint.save(path, target, extra=...)   # target: IndexState | mapping
+    checkpoint.load(path) -> CheckpointContents  # tenant -> (state, extra)
+
+Two on-disk formats, auto-detected on load:
+
+  * **single state** — one ``.npz``: the IndexState's array leaves plus a
+    JSON metadata record (format version, algo, metric, static dict,
+    engine extras).  Written when ``target`` is an ``IndexState``.
+  * **multi-tenant archive** — one zip with a ``manifest.json`` and one
+    single-state member per resident tenant, so a multi-tenant serving
+    process checkpoints/restores ALL of its indexes atomically in one
+    file.  Written when ``target`` is a mapping ``tenant -> IndexState``
+    (or ``tenant -> (IndexState, extra)``).
+
+**Version negotiation** is explicit: every rejection says which version
+the file has, which this build reads, and — for known historical versions
+— WHY the file is unusable (v1 pre-dates the cached ``xsq`` norms table,
+so euclidean E2LSH/RPForest states would load and then fail at query
+time) versus the generic stale/newer messages.  All failure modes raise
+:class:`CheckpointError`.
+"""
+
+from __future__ import annotations
+
+import io
+import json
+import zipfile
+from pathlib import Path
+from typing import Any, Dict, Mapping, Optional, Tuple
+
+import numpy as np
+
+import jax.numpy as jnp
+
+from repro.ann.functional import IndexState
+
+#: single-state format version; bump when the on-disk layout changes.
+#: v2: euclidean E2LSH/RPForest states grew a cached ``xsq`` array (the
+#: fused-rerank norms table) — v1 checkpoints of those indexes would load
+#: but fail at query time, so v1 is rejected with that explanation.
+CHECKPOINT_VERSION = 2
+
+#: multi-tenant archive format version (manifest + member layout).
+ARCHIVE_VERSION = 1
+
+_META_KEY = "__repro_meta__"
+_MANIFEST = "manifest.json"
+
+#: why a known old single-state version is rejected — each gets its own
+#: message so operators can tell "rebuild required" from "wrong build".
+_VERSION_NOTES = {
+    1: ("v1 pre-dates the cached xsq norms table: euclidean E2LSH/RPForest "
+        "states would load but fail at query time; rebuild the index "
+        "(Engine.build) and re-save"),
+}
+
+
+class CheckpointError(RuntimeError):
+    """Raised for unreadable, stale, or mismatched checkpoints."""
+
+
+class CheckpointContents(Dict[str, Tuple[IndexState, dict]]):
+    """What :func:`load` returns: ``tenant -> (state, extra)``.
+
+    A single-state checkpoint loads as one ``"default"`` entry; ``.only``
+    unwraps it (and raises on a multi-tenant archive, so code written for
+    one index cannot silently pick an arbitrary tenant).
+    """
+
+    @property
+    def only(self) -> Tuple[IndexState, dict]:
+        if len(self) != 1:
+            raise CheckpointError(
+                f"checkpoint holds {len(self)} tenant states "
+                f"({sorted(self)}); load it with checkpoint.load / "
+                f"AsyncEngine.load, not the single-state API")
+        return next(iter(self.values()))
+
+
+# --------------------------------------------------------------------------
+# single-state format: IndexState <-> npz bytes
+# --------------------------------------------------------------------------
+
+def _flatten_arrays(arrays: Dict[str, Any]):
+    """name -> array | tuple-of-arrays  ==>  flat {key: np.ndarray}."""
+    flat: Dict[str, np.ndarray] = {}
+    layout: Dict[str, Any] = {}
+    for name in sorted(arrays):
+        value = arrays[name]
+        if isinstance(value, (tuple, list)):
+            layout[name] = len(value)
+            for i, leaf in enumerate(value):
+                flat[f"{name}:{i}"] = np.asarray(leaf)
+        else:
+            layout[name] = None
+            flat[name] = np.asarray(value)
+    return flat, layout
+
+
+def _unflatten_arrays(npz, layout: Dict[str, Any]):
+    arrays: Dict[str, Any] = {}
+    for name, length in layout.items():
+        if length is None:
+            arrays[name] = jnp.asarray(npz[name])
+        else:
+            arrays[name] = tuple(
+                jnp.asarray(npz[f"{name}:{i}"]) for i in range(length))
+    return arrays
+
+
+def _jsonable(v):
+    if isinstance(v, tuple):
+        return {"__tuple__": [_jsonable(x) for x in v]}
+    return v
+
+
+def _unjsonable(v):
+    if isinstance(v, dict) and "__tuple__" in v:
+        return tuple(_unjsonable(x) for x in v["__tuple__"])
+    if isinstance(v, list):
+        return tuple(_unjsonable(x) for x in v)
+    return v
+
+
+def _state_npz_bytes(state: IndexState, extra: Optional[dict]) -> bytes:
+    flat, layout = _flatten_arrays(state.arrays)
+    meta = {
+        "version": CHECKPOINT_VERSION,
+        "algo": state.algo,
+        "metric": state.metric,
+        "static": {k: _jsonable(v) for k, v in state.static.items()},
+        "layout": layout,
+        "extra": extra or {},
+    }
+    blob = np.frombuffer(json.dumps(meta).encode(), dtype=np.uint8)
+    buf = io.BytesIO()
+    np.savez(buf, **{_META_KEY: blob}, **flat)
+    return buf.getvalue()
+
+
+def _check_version(what: str, version) -> None:
+    if version == CHECKPOINT_VERSION:
+        return
+    if isinstance(version, int) and version > CHECKPOINT_VERSION:
+        hint = ("written by a NEWER build — upgrade this install to read "
+                "it (or re-save from the old one)")
+    else:
+        hint = _VERSION_NOTES.get(
+            version, "rebuild the index (Engine.build) and re-save")
+    raise CheckpointError(
+        f"{what} has format version {version!r}, this build reads "
+        f"version {CHECKPOINT_VERSION}; {hint}")
+
+
+def _state_from_npz(file_like, what: str) -> Tuple[IndexState, dict]:
+    try:
+        with np.load(file_like) as z:
+            if _META_KEY not in z:
+                raise CheckpointError(
+                    f"{what} is not an Engine checkpoint (missing metadata "
+                    f"record; was it written by the old pickle path?)")
+            meta = json.loads(bytes(z[_META_KEY].tobytes()).decode())
+            _check_version(what, meta.get("version"))
+            arrays = _unflatten_arrays(z, meta["layout"])
+    except (zipfile.BadZipFile, ValueError) as e:
+        raise CheckpointError(f"unreadable checkpoint {what}: {e}") from e
+    static = {k: _unjsonable(v) for k, v in meta["static"].items()}
+    state = IndexState(meta["algo"], meta["metric"], arrays, static)
+    return state, meta.get("extra", {})
+
+
+# --------------------------------------------------------------------------
+# the entry pair
+# --------------------------------------------------------------------------
+
+def save(path, target, *, extra: Optional[dict] = None) -> Path:
+    """Serialise ``target`` to ``path`` (atomically, via a tmp rename).
+
+    ``target`` is either one :class:`IndexState` (single-state ``.npz``;
+    ``extra`` rides in its metadata record) or a mapping ``tenant ->
+    IndexState`` / ``tenant -> (IndexState, extra_dict)`` (multi-tenant
+    archive; ``extra=`` is then disallowed — extras are per tenant).
+    """
+    path = Path(path)
+    path.parent.mkdir(parents=True, exist_ok=True)
+    tmp = path.with_suffix(path.suffix + ".tmp")
+    if isinstance(target, IndexState):
+        tmp.write_bytes(_state_npz_bytes(target, extra))
+    elif isinstance(target, Mapping):
+        if extra is not None:
+            raise ValueError("extra= is per-tenant for archives; pass "
+                             "tenant -> (state, extra) pairs instead")
+        members = {}
+        for i, (tenant, value) in enumerate(sorted(target.items())):
+            state, tenant_extra = (value if isinstance(value, tuple)
+                                   else (value, None))
+            members[str(tenant)] = (f"states/{i}.npz",
+                                    _state_npz_bytes(state, tenant_extra))
+        manifest = {
+            "archive_version": ARCHIVE_VERSION,
+            "checkpoint_version": CHECKPOINT_VERSION,
+            "tenants": {t: m for t, (m, _) in members.items()},
+        }
+        with zipfile.ZipFile(tmp, "w", zipfile.ZIP_STORED) as zf:
+            zf.writestr(_MANIFEST, json.dumps(manifest, indent=2))
+            for member, blob in members.values():
+                zf.writestr(member, blob)
+    else:
+        raise TypeError(f"cannot checkpoint {type(target).__name__}; "
+                        f"pass an IndexState or a tenant mapping")
+    tmp.replace(path)
+    return path
+
+
+def load(path) -> CheckpointContents:
+    """Deserialise ``path`` -> :class:`CheckpointContents` (either format).
+
+    Raises :class:`CheckpointError` on missing files, non-checkpoint
+    files, or any format-version mismatch (see the module docstring for
+    the negotiation rules).
+    """
+    path = Path(path)
+    if not path.exists():
+        raise CheckpointError(f"no checkpoint at {path}")
+    try:
+        with zipfile.ZipFile(path) as zf:
+            names = set(zf.namelist())
+            if _MANIFEST in names:
+                return _load_archive(path, zf)
+            if f"{_META_KEY}.npy" not in names:
+                raise CheckpointError(
+                    f"{path} is not an Engine checkpoint (missing metadata "
+                    f"record; was it written by the old pickle path?)")
+    except zipfile.BadZipFile as e:
+        raise CheckpointError(f"unreadable checkpoint {path}: {e}") from e
+    state, extra = _state_from_npz(path, str(path))
+    return CheckpointContents(default=(state, extra))
+
+
+def _load_archive(path: Path, zf: zipfile.ZipFile) -> CheckpointContents:
+    try:
+        manifest = json.loads(zf.read(_MANIFEST).decode())
+    except ValueError as e:
+        raise CheckpointError(
+            f"unreadable archive manifest in {path}: {e}") from e
+    version = manifest.get("archive_version")
+    if version != ARCHIVE_VERSION:
+        raise CheckpointError(
+            f"archive {path} has archive version {version!r}, this build "
+            f"reads archive version {ARCHIVE_VERSION}; re-save the archive "
+            f"(AsyncEngine.save) with a matching build")
+    out = CheckpointContents()
+    for tenant, member in manifest.get("tenants", {}).items():
+        what = f"{path}[{tenant}]"
+        try:
+            blob = zf.read(member)
+        except KeyError as e:
+            raise CheckpointError(
+                f"archive {path} names member {member!r} for tenant "
+                f"{tenant!r} but it is missing") from e
+        out[tenant] = _state_from_npz(io.BytesIO(blob), what)
+    if not out:
+        raise CheckpointError(f"archive {path} holds no tenant states")
+    return out
+
+
+# --------------------------------------------------------------------------
+# single-state compatibility aliases (pre-ISSUE-6 surface)
+# --------------------------------------------------------------------------
+
+def save_state(state: IndexState, path, extra: Optional[dict] = None) -> Path:
+    """Serialise one IndexState (+ engine metadata) — ``save(path, state)``."""
+    return save(path, state, extra=extra)
+
+
+def load_state(path) -> Tuple[IndexState, dict]:
+    """Deserialise one ``(IndexState, extra)`` — ``load(path).only``."""
+    return load(path).only

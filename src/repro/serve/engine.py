@@ -7,15 +7,19 @@ open-ended stream of variable-size requests.  ``Engine`` turns an immutable
   * **one trace** — the spec's pure ``search`` is jitted once for a fixed
     padded micro-batch shape ``[batch_size, d]``; every request batch is
     padded up to it, so no request size ever retraces;
-  * **micro-batching** — ``submit()`` queues single queries, ``flush()``
-    answers them in one device call; ``search()`` streams arbitrarily large
-    query sets through fixed-size micro-batches (device-resident
-    end-to-end on the streaming distance+top-k path);
-  * **pytree checkpointing** — ``save()``/``load()`` serialise the
-    IndexState's array leaves + static dict to one ``.npz`` with an
-    explicit format-version field, replacing the old pickle round-trip of
-    live objects (which silently dropped jitted closures and accepted any
-    stale file).  A version mismatch raises :class:`CheckpointError`.
+  * **micro-batching** — ``submit()`` queues single queries and returns a
+    :class:`Ticket` (a future: ``ticket.result()`` blocks, ``.done()``
+    polls); ``search()`` streams arbitrarily large query sets through
+    fixed-size micro-batches (device-resident end-to-end on the streaming
+    distance+top-k path);
+  * **deadlines** — ``submit(q, deadline_ms=...)`` bounds how stale an
+    answer may be: a request whose deadline expires before its
+    micro-batch runs is answered with
+    :class:`~repro.serve.errors.DeadlineExceeded` instead of blocking or
+    poisoning the batch it would have ridden in;
+  * **pytree checkpointing** — ``save()``/``load()`` round-trip through
+    :mod:`repro.serve.checkpoint` (versioned ``.npz``; stale/garbage
+    files raise :class:`~repro.serve.checkpoint.CheckpointError`).
 
 Query-time knobs ride along per engine (``query_params=``) and can be
 overridden per ``search()`` call or per ``submit()``-ed request; a knob
@@ -24,131 +28,108 @@ automatically demoted to a traced runtime value (the spec's
 ``traced_knobs``), so per-request quality settings — e.g. IVF's
 ``n_probes`` under ``max_probes``, HNSW's ``ef`` under ``max_ef`` —
 change behaviour *without* recompilation.
+
+``Engine`` itself is synchronous and single-threaded (a flush happens on
+the caller's thread when a batch fills, a ``ticket.result()`` forces one);
+the SLO-aware background pump — timeout-based flush, admission control,
+multi-tenant routing, latency percentiles — is
+:class:`repro.serve.async_engine.AsyncEngine`, which drives Engines as its
+per-tenant executors.
 """
 
 from __future__ import annotations
 
-import json
+import threading
 import time
-import zipfile
+import warnings
 from pathlib import Path
 from typing import Any, Dict, Optional, Tuple
 
 import numpy as np
 
 import jax
-import jax.numpy as jnp
 
 from repro.ann.functional import IndexState, get_functional
-
-#: bump when the on-disk layout changes; load() rejects anything else.
-#: v2: euclidean E2LSH/RPForest states grew a cached ``xsq`` array (the
-#: fused-rerank norms table) — v1 checkpoints of those indexes would load
-#: but fail at query time, so they are rejected here instead.
-CHECKPOINT_VERSION = 2
-
-_META_KEY = "__repro_meta__"
-
-
-class CheckpointError(RuntimeError):
-    """Raised for unreadable, stale, or mismatched checkpoints."""
+from repro.serve import checkpoint as _ckpt
+# single-state helpers re-exported here for one release of back-compat —
+# the canonical home (and the multi-tenant archive API) is
+# repro.serve.checkpoint.
+from repro.serve.checkpoint import (ARCHIVE_VERSION,          # noqa: F401
+                                    CHECKPOINT_VERSION, CheckpointError,
+                                    load_state, save_state)
+from repro.serve.errors import DeadlineExceeded
 
 
-# --------------------------------------------------------------------------
-# IndexState <-> npz
-# --------------------------------------------------------------------------
+class Ticket(int):
+    """Future-style handle for one ``submit()``-ed request.
 
-def _flatten_arrays(arrays: Dict[str, Any]):
-    """name -> array | tuple-of-arrays  ==>  flat {key: np.ndarray}."""
-    flat: Dict[str, np.ndarray] = {}
-    layout: Dict[str, Any] = {}
-    for name in sorted(arrays):
-        value = arrays[name]
-        if isinstance(value, (tuple, list)):
-            layout[name] = len(value)
-            for i, leaf in enumerate(value):
-                flat[f"{name}:{i}"] = np.asarray(leaf)
-        else:
-            layout[name] = None
-            flat[name] = np.asarray(value)
-    return flat, layout
+    ``ticket.result(timeout=)`` blocks until the request is answered and
+    returns ``(dists [k], ids [k])`` (raising the request's typed error —
+    e.g. :class:`DeadlineExceeded` — if it failed); ``ticket.done()``
+    polls without blocking.  On the synchronous :class:`Engine`,
+    ``result()`` flushes the queue itself; under
+    :class:`~repro.serve.async_engine.AsyncEngine` it waits for the pump.
 
-
-def _unflatten_arrays(npz, layout: Dict[str, Any]):
-    arrays: Dict[str, Any] = {}
-    for name, length in layout.items():
-        if length is None:
-            arrays[name] = jnp.asarray(npz[name])
-        else:
-            arrays[name] = tuple(
-                jnp.asarray(npz[f"{name}:{i}"]) for i in range(length))
-    return arrays
-
-
-def save_state(state: IndexState, path, extra: Optional[dict] = None) -> Path:
-    """Serialise an IndexState (+ optional engine metadata) to ``path``."""
-    path = Path(path)
-    path.parent.mkdir(parents=True, exist_ok=True)
-    flat, layout = _flatten_arrays(state.arrays)
-    meta = {
-        "version": CHECKPOINT_VERSION,
-        "algo": state.algo,
-        "metric": state.metric,
-        "static": {k: _jsonable(v) for k, v in state.static.items()},
-        "layout": layout,
-        "extra": extra or {},
-    }
-    blob = np.frombuffer(json.dumps(meta).encode(), dtype=np.uint8)
-    tmp = path.with_suffix(path.suffix + ".tmp")
-    with open(tmp, "wb") as fh:         # file handle: no .npz auto-suffix
-        np.savez(fh, **{_META_KEY: blob}, **flat)
-    tmp.replace(path)
-    return path
-
-
-def load_state(path) -> Tuple[IndexState, dict]:
-    """Deserialise (IndexState, extra-metadata) from ``path``.
-
-    Raises :class:`CheckpointError` on missing files, non-checkpoint files,
-    or a format-version mismatch — the failure modes the old pickle path
-    surfaced as arbitrary unpickling errors (or not at all).
+    Subclasses ``int`` (the submission sequence number) so one release of
+    legacy call sites keeps working unchanged: ``eng.result(ticket)``,
+    dict keys, and format strings all still see the bare-int ticket.
+    That int protocol is the deprecation shim, not the API.
     """
-    path = Path(path)
-    if not path.exists():
-        raise CheckpointError(f"no checkpoint at {path}")
-    try:
-        with np.load(path) as z:
-            if _META_KEY not in z:
-                raise CheckpointError(
-                    f"{path} is not an Engine checkpoint (missing metadata "
-                    f"record; was it written by the old pickle path?)")
-            meta = json.loads(bytes(z[_META_KEY].tobytes()).decode())
-            version = meta.get("version")
-            if version != CHECKPOINT_VERSION:
-                raise CheckpointError(
-                    f"checkpoint {path} has format version {version!r}, "
-                    f"this build reads version {CHECKPOINT_VERSION}; "
-                    f"rebuild the index (Engine.build) and re-save")
-            arrays = _unflatten_arrays(z, meta["layout"])
-    except (zipfile.BadZipFile, ValueError) as e:
-        raise CheckpointError(f"unreadable checkpoint {path}: {e}") from e
-    static = {k: _unjsonable(v) for k, v in meta["static"].items()}
-    state = IndexState(meta["algo"], meta["metric"], arrays, static)
-    return state, meta.get("extra", {})
 
+    def __new__(cls, seq: int, resolver, *, deadline_s: Optional[float] = None,
+                tenant: Optional[str] = None):
+        t = super().__new__(cls, seq)
+        t._resolver = resolver
+        t._event = threading.Event()
+        t._value: Optional[Tuple[np.ndarray, np.ndarray]] = None
+        t._error: Optional[BaseException] = None
+        t._submitted = time.perf_counter()
+        t._deadline = (None if deadline_s is None
+                       else t._submitted + deadline_s)
+        t.tenant = tenant
+        return t
 
-def _jsonable(v):
-    if isinstance(v, tuple):
-        return {"__tuple__": [_jsonable(x) for x in v]}
-    return v
+    # ----------------------------------------------------------- client side
+    def done(self) -> bool:
+        """True once the request is answered (successfully or not)."""
+        return self._event.is_set()
 
+    def result(self, timeout: Optional[float] = None):
+        """Block until answered; return ``(dists, ids)`` or raise the
+        request's error.  ``timeout`` (seconds) bounds the wait itself
+        and raises a plain :class:`TimeoutError` — distinct from
+        :class:`DeadlineExceeded`, which means the *request* expired."""
+        if not self._event.is_set():
+            self._resolver._realise(self, timeout)
+        if not self._event.is_set():
+            raise TimeoutError(
+                f"request {int(self)} still unanswered after {timeout}s "
+                f"(the request itself is still in flight)")
+        if self._error is not None:
+            raise self._error
+        return self._value
 
-def _unjsonable(v):
-    if isinstance(v, dict) and "__tuple__" in v:
-        return tuple(_unjsonable(x) for x in v["__tuple__"])
-    if isinstance(v, list):
-        return tuple(_unjsonable(x) for x in v)
-    return v
+    # ------------------------------------------------------------ pump side
+    def expired(self, now: Optional[float] = None) -> bool:
+        if self._deadline is None:
+            return False
+        return (now if now is not None else time.perf_counter()) \
+            > self._deadline
+
+    def _resolve(self, dists: np.ndarray, ids: np.ndarray) -> None:
+        self._value = (dists, ids)
+        self._event.set()
+
+    def _fail(self, error: BaseException) -> None:
+        self._error = error
+        self._event.set()
+
+    def _time_out(self) -> None:
+        waited = (time.perf_counter() - self._submitted) * 1e3
+        budget = (self._deadline - self._submitted) * 1e3
+        self._fail(DeadlineExceeded(
+            f"request {int(self)} missed its {budget:.1f} ms deadline "
+            f"({waited:.1f} ms elapsed before its micro-batch ran)"))
 
 
 # --------------------------------------------------------------------------
@@ -162,7 +143,7 @@ class Engine:
     ...                    build_params={"n_clusters": 64},
     ...                    query_params={"n_probes": 8}, k=10)
     >>> dists, ids = eng.search(Q)          # any nq; fixed-shape batches
-    >>> t = eng.submit(q); eng.flush()      # single-query request path
+    >>> t = eng.submit(q); dists, ids = t.result()    # request path
     >>> eng.save("/tmp/ivf.ckpt"); eng2 = Engine.load("/tmp/ivf.ckpt")
     """
 
@@ -195,8 +176,8 @@ class Engine:
                 self.query_params[knob] = int(self.query_params[cap])
         self.traced_params = tuple(traced)
         self._search = self.spec.jit_search(traced=self.traced_params)
-        self._pending: list = []    # (ticket, np.ndarray [d], key, overrides)
-        self._results: Dict[int, Tuple[np.ndarray, np.ndarray]] = {}
+        self._pending: list = []    # (Ticket, np.ndarray [d], key, overrides)
+        self._results: Dict[int, Ticket] = {}   # legacy result() buffer
         self._next_ticket = 0
         self.stats = {"queries": 0, "batches": 0, "padded": 0,
                       "device_time_s": 0.0}
@@ -211,8 +192,9 @@ class Engine:
         return cls(state, **engine_kwargs)
 
     @classmethod
-    def load(cls, path, **overrides) -> "Engine":
-        state, extra = load_state(path)
+    def from_checkpoint_entry(cls, state: IndexState, extra: dict,
+                              **overrides) -> "Engine":
+        """Engine from one ``checkpoint.load`` entry (state + extras)."""
         kwargs = {"k": extra.get("k", 10),
                   "batch_size": extra.get("batch_size", 256),
                   "query_params": extra.get("query_params") or {},
@@ -220,13 +202,21 @@ class Engine:
         kwargs.update(overrides)
         return cls(state, **kwargs)
 
-    def save(self, path) -> Path:
-        return save_state(self.state, path, extra={
+    @classmethod
+    def load(cls, path, **overrides) -> "Engine":
+        state, extra = _ckpt.load(path).only
+        return cls.from_checkpoint_entry(state, extra, **overrides)
+
+    def _ckpt_extra(self) -> dict:
+        return {
             "k": self.k, "batch_size": self.batch_size,
             "query_params": {k: v for k, v in self.query_params.items()
                              if _is_plain(v)},
             "traced_params": list(self.traced_params),
-        })
+        }
+
+    def save(self, path) -> Path:
+        return _ckpt.save(path, self.state, extra=self._ckpt_extra())
 
     # -------------------------------------------------------------- serving
     def _check_caps(self, params) -> None:
@@ -292,12 +282,19 @@ class Engine:
         return np.concatenate(dists_out), np.concatenate(ids_out)
 
     # ------------------------------------------------------- request stream
-    def submit(self, q, **overrides) -> int:
-        """Queue one query; returns a ticket redeemable after flush().
+    def submit(self, q, *, deadline_ms: Optional[float] = None,
+               **overrides) -> Ticket:
+        """Queue one query; returns a :class:`Ticket` future.
 
-        Keyword overrides are per-request query params (e.g. a traced
+        ``ticket.result()`` blocks until the answer is ready (flushing the
+        queue if needed); a full batch flushes immediately.  Keyword
+        overrides are per-request query params (e.g. a traced
         ``n_probes``): requests sharing the same overrides are answered in
         the same micro-batch, and a traced knob never retraces.
+        ``deadline_ms`` bounds staleness: if the deadline passes before
+        the request's micro-batch runs, the ticket resolves to
+        :class:`DeadlineExceeded` instead of a late answer — and the rest
+        of its batch is answered normally.
         """
         # Validate caps HERE, before anything is queued: a bad override
         # must fail its own submit(), never a later flush() that would
@@ -305,7 +302,9 @@ class Engine:
         merged = dict(self.query_params)
         merged.update(overrides)
         self._check_caps(merged)
-        ticket = self._next_ticket
+        ticket = Ticket(self._next_ticket, self,
+                        deadline_s=None if deadline_ms is None
+                        else deadline_ms / 1e3)
         self._next_ticket += 1
         self._pending.append((ticket, np.asarray(q),
                               _override_key(overrides), overrides))
@@ -316,8 +315,10 @@ class Engine:
     def flush(self) -> None:
         """Answer every pending query in fixed-shape micro-batches,
         grouped by per-request overrides (submission order within each
-        group is preserved).  Requests leave the queue only once their
-        micro-batch succeeds, so a failure leaves the rest pending."""
+        group is preserved).  Deadline-expired requests are answered as
+        :class:`DeadlineExceeded` without riding in (or delaying) the
+        batch.  Requests leave the queue only once their micro-batch
+        succeeds, so a failure leaves the rest pending."""
         while self._pending:
             key0 = self._pending[0][2]
             chunk, rest = [], []
@@ -326,21 +327,49 @@ class Engine:
                     chunk.append(item)
                 else:
                     rest.append(item)
-            Qb = np.stack([q for _, q, _, _ in chunk])
+            now = time.perf_counter()
+            live_items = []
+            for item in chunk:
+                if item[0].expired(now):
+                    item[0]._time_out()
+                    self._results[int(item[0])] = item[0]
+                else:
+                    live_items.append(item)
+            if not live_items:
+                self._pending = rest
+                continue
+            Qb = np.stack([q for _, q, _, _ in live_items])
             live = Qb.shape[0]
             dists, ids = self._run_padded(self._pad_batch(Qb), live,
-                                          chunk[0][3])
+                                          live_items[0][3])
             self._pending = rest
             ids = np.asarray(ids)
             dists = np.asarray(dists)
-            for i, (ticket, _, _, _) in enumerate(chunk):
-                self._results[ticket] = (dists[i], ids[i])
+            for i, (ticket, _, _, _) in enumerate(live_items):
+                ticket._resolve(dists[i], ids[i])
+                self._results[int(ticket)] = ticket
 
-    def result(self, ticket: int) -> Tuple[np.ndarray, np.ndarray]:
-        """(dists, ids) for a flushed ticket (pops it) — spec.search order."""
-        if ticket not in self._results:
-            raise KeyError(f"ticket {ticket} not flushed (or already read)")
-        return self._results.pop(ticket)
+    def _realise(self, ticket: Ticket, timeout) -> None:
+        """Ticket.result() hook: the sync engine answers its own queue."""
+        self.flush()
+
+    def result(self, ticket) -> Tuple[np.ndarray, np.ndarray]:
+        """(deprecated) ``(dists, ids)`` for a flushed ticket (pops it).
+
+        The pre-ISSUE-6 redemption path: kept for one release so bare-int
+        call sites keep working.  New code holds the :class:`Ticket` from
+        ``submit()`` and calls ``ticket.result()``.
+        """
+        warnings.warn("Engine.result(ticket) is deprecated; call "
+                      "ticket.result() on the Ticket submit() returned",
+                      DeprecationWarning, stacklevel=2)
+        if int(ticket) not in self._results:
+            raise KeyError(f"ticket {int(ticket)} not flushed "
+                           f"(or already read)")
+        t = self._results.pop(int(ticket))
+        if t._error is not None:
+            raise t._error
+        return t._value
 
     # ------------------------------------------------------------ autotuning
     def autotune(self, Q, gt_distances, *, knob_grid,

@@ -1,0 +1,38 @@
+"""Typed errors for the serving tier.
+
+Every failure mode a client can hit has its own type, so callers (and the
+load-generator gates in ``benchmarks/bench_serving.py``) discriminate by
+``except`` clause instead of string-matching messages:
+
+  * :class:`AdmissionError` — the bounded request queue is full; the
+    request was REJECTED at ``submit()`` and never queued.  Load shedding
+    is explicit: under overload the serving tier answers "no" immediately
+    rather than queueing unboundedly and missing every deadline.
+  * :class:`DeadlineExceeded` — the request WAS admitted but its
+    per-request deadline expired before (or while) its micro-batch ran;
+    ``ticket.result()`` raises this instead of returning stale answers.
+    Subclasses :class:`TimeoutError` so generic timeout handling works.
+  * :class:`EngineClosed` — ``submit()`` after the pump was shut down.
+
+:class:`~repro.serve.checkpoint.CheckpointError` lives with the
+checkpoint code; it is re-exported from :mod:`repro.serve` alongside
+these.
+"""
+
+from __future__ import annotations
+
+
+class ServeError(RuntimeError):
+    """Base class for serving-tier request failures."""
+
+
+class AdmissionError(ServeError):
+    """Request rejected at submit(): the bounded queue is at capacity."""
+
+
+class DeadlineExceeded(ServeError, TimeoutError):
+    """Request admitted but its deadline expired before it was answered."""
+
+
+class EngineClosed(ServeError):
+    """Request submitted to a pump that has been shut down."""

@@ -58,10 +58,10 @@ def test_checkpoint_roundtrip_identical(engine, small_dataset, tmp_path):
 
 
 def test_checkpoint_rejects_stale_version(engine, tmp_path, monkeypatch):
-    import repro.serve.engine as engine_mod
+    import repro.serve.checkpoint as ckpt_mod
 
     path = tmp_path / "stale.ckpt"
-    monkeypatch.setattr(engine_mod, "CHECKPOINT_VERSION",
+    monkeypatch.setattr(ckpt_mod, "CHECKPOINT_VERSION",
                         CHECKPOINT_VERSION + 1)
     engine.save(path)
     monkeypatch.undo()

@@ -1,0 +1,359 @@
+"""SLO serving tier: ticket futures, deadlines, admission control,
+multi-tenant pump, archive checkpoints, shared knob CLI parsing."""
+
+import time
+import warnings
+
+import numpy as np
+import pytest
+
+from repro.serve import (AdmissionError, AsyncEngine, CheckpointError,
+                         DeadlineExceeded, Engine, EngineClosed, ServeError,
+                         Ticket)
+from repro.serve import checkpoint as ckpt
+
+
+@pytest.fixture(scope="module")
+def engine(small_dataset):
+    return Engine.build("IVF", small_dataset.train, metric="euclidean",
+                        build_params={"n_clusters": 30},
+                        query_params={"n_probes": 8, "max_probes": 30},
+                        k=10, batch_size=16)
+
+
+def _fresh_engine(ds, **kw):
+    kw.setdefault("build_params", {"n_clusters": 30})
+    kw.setdefault("query_params", {"n_probes": 8, "max_probes": 30})
+    kw.setdefault("k", 10)
+    kw.setdefault("batch_size", 16)
+    return Engine.build("IVF", ds.train, metric="euclidean", **kw)
+
+
+# --------------------------------------------------------------------------
+# Ticket future API on the synchronous Engine
+# --------------------------------------------------------------------------
+
+def test_ticket_is_a_future(engine, small_dataset):
+    t = engine.submit(small_dataset.test[0])
+    assert isinstance(t, Ticket)
+    assert not t.done()
+    dists, ids = t.result()            # self-flushing: no explicit flush()
+    assert t.done()
+    assert ids.shape == (10,) and dists.shape == (10,)
+    _, want = engine.search(small_dataset.test[:1])
+    np.testing.assert_array_equal(ids, want[0])
+    # result() is repeatable on the Ticket itself (unlike the legacy pop)
+    _, again = t.result()
+    np.testing.assert_array_equal(again, ids)
+
+
+def test_ticket_int_shim_and_deprecated_result(engine, small_dataset):
+    """The int protocol is the one-release deprecation shim: tickets are
+    their sequence number, and Engine.result(ticket) still redeems them
+    (with a DeprecationWarning)."""
+    t = engine.submit(small_dataset.test[1])
+    assert isinstance(t, int)
+    assert {t: "legacy-dict-key"}[int(t)] == "legacy-dict-key"
+    engine.flush()
+    with pytest.deprecated_call():
+        _, ids = engine.result(t)
+    assert ids.shape == (10,)
+    with pytest.deprecated_call(), pytest.raises(KeyError):
+        engine.result(t)                       # legacy pop is single-use
+
+
+def test_sync_deadline_expires_without_poisoning_batch(engine, small_dataset):
+    doomed = engine.submit(small_dataset.test[2], deadline_ms=0.1)
+    healthy = engine.submit(small_dataset.test[3])
+    time.sleep(0.01)
+    engine.flush()
+    with pytest.raises(DeadlineExceeded, match="deadline"):
+        doomed.result()
+    assert isinstance(doomed._error, ServeError)       # typed, catchable
+    assert isinstance(doomed._error, TimeoutError)     # and stdlib-shaped
+    _, ids = healthy.result()
+    _, want = engine.search(small_dataset.test[3:4])
+    np.testing.assert_array_equal(ids, want[0])
+
+
+# --------------------------------------------------------------------------
+# AsyncEngine: pump, deadlines, admission, shutdown
+# --------------------------------------------------------------------------
+
+def test_async_parity_with_sync_search(engine, small_dataset):
+    with AsyncEngine(engine, max_wait_ms=5.0) as srv:
+        dists, ids = srv.search(small_dataset.test[:20])
+    want_d, want = engine.search(small_dataset.test[:20])
+    np.testing.assert_array_equal(ids, want)
+    np.testing.assert_allclose(dists, want_d, rtol=1e-5)
+    snap = srv.metrics.snapshot()
+    assert snap["counters"]["served"] == 20
+    assert snap["counters"]["batches"] >= 2        # 20 queries, batch 16
+    assert snap["latency_ms"]["p95"] > 0
+
+
+def test_async_deadline_expiry_does_not_poison_batch(engine, small_dataset):
+    with AsyncEngine(engine, max_wait_ms=300.0) as srv:
+        doomed = srv.submit(small_dataset.test[0], deadline_ms=5.0)
+        healthy = srv.submit(small_dataset.test[1])
+        with pytest.raises(DeadlineExceeded):
+            doomed.result(timeout=10)
+        _, ids = healthy.result(timeout=10)
+    _, want = engine.search(small_dataset.test[1:2])
+    np.testing.assert_array_equal(ids, want[0])
+    assert srv.metrics.counter("timed_out") == 1
+    assert srv.metrics.counter("served") == 1
+
+
+def test_async_admission_control_rejects_typed(engine, small_dataset):
+    # max_queue below the flush threshold + a long flush timeout: the
+    # queue genuinely fills instead of the pump draining it mid-test
+    srv = AsyncEngine(engine, max_wait_ms=10_000.0, max_queue=4)
+    try:
+        tickets = [srv.submit(q) for q in small_dataset.test[:4]]
+        with pytest.raises(AdmissionError, match="rejected, not"):
+            srv.submit(small_dataset.test[4])
+        assert srv.metrics.counter("rejected") == 1
+        assert srv.qsize() == 4                    # rejected != queued
+    finally:
+        srv.close()
+    # close() drained: every ADMITTED ticket was answered
+    assert all(t.done() for t in tickets)
+    _, want = engine.search(small_dataset.test[:4])
+    for i, t in enumerate(tickets):
+        np.testing.assert_array_equal(t.result()[1], want[i])
+
+
+def test_async_close_drains_and_then_refuses(engine, small_dataset):
+    srv = AsyncEngine(engine, max_wait_ms=5_000.0)
+    pending = [srv.submit(q) for q in small_dataset.test[:3]]
+    srv.close()
+    assert all(t.done() for t in pending)          # drained, not dropped
+    with pytest.raises(EngineClosed):
+        srv.submit(small_dataset.test[0])
+    srv.close()                                    # idempotent
+
+
+def test_async_multi_tenant_routing_and_parity(small_dataset):
+    from repro.ann import ivf
+
+    state = ivf.build(small_dataset.train, metric="euclidean", n_clusters=30)
+    engines = {
+        "std": Engine(state, k=10, batch_size=16,
+                      query_params={"n_probes": 4, "max_probes": 30}),
+        "gold": Engine(state, k=10, batch_size=16,
+                       query_params={"n_probes": 30, "max_probes": 30}),
+    }
+    with AsyncEngine(engines, max_wait_ms=5.0) as srv:
+        assert srv.tenants == ("gold", "std")
+        with pytest.raises(ValueError, match="pass tenant="):
+            srv.submit(small_dataset.test[0])      # ambiguous: 2 tenants
+        with pytest.raises(ValueError, match="unknown tenant"):
+            srv.submit(small_dataset.test[0], tenant="bronze")
+        _, std_ids = srv.search(small_dataset.test[:8], tenant="std")
+        _, gold_ids = srv.search(small_dataset.test[:8], tenant="gold")
+    _, want_std = ivf.search(state, small_dataset.test[:8], k=10, n_probes=4)
+    _, want_gold = ivf.search(state, small_dataset.test[:8], k=10,
+                              n_probes=30)
+    np.testing.assert_array_equal(std_ids, np.asarray(want_std))
+    np.testing.assert_array_equal(gold_ids, np.asarray(want_gold))
+    snap = srv.metrics.snapshot()
+    assert snap["tenants"]["std"]["counters"]["served"] == 8
+    assert snap["tenants"]["gold"]["counters"]["served"] == 8
+
+
+def test_async_mixed_overrides_zero_retraces(small_dataset):
+    from repro.ann import functional, ivf
+
+    eng = _fresh_engine(small_dataset)
+    eng.search(small_dataset.test[:1])             # trace once, warm
+    before = dict(functional.TRACE_COUNTS)
+    with AsyncEngine(eng, max_wait_ms=2.0) as srv:
+        tickets = [(srv.submit(small_dataset.test[i], n_probes=p), i, p)
+                   for i, p in enumerate([1, 8, 30, 8, 1, 30, 8, 8])]
+        for t, i, p in tickets:
+            _, ids = t.result(timeout=30)
+            _, want = ivf.search(eng.state, small_dataset.test[i:i + 1],
+                                 k=10, n_probes=p)
+            np.testing.assert_array_equal(ids, np.asarray(want)[0])
+    assert dict(functional.TRACE_COUNTS) == before, "pump retraced"
+
+
+def test_async_submit_rejects_override_above_cap(engine, small_dataset):
+    with AsyncEngine(engine, max_wait_ms=5.0) as srv:
+        with pytest.raises(ValueError, match="exceeds the engine's static"):
+            srv.submit(small_dataset.test[0], n_probes=31)
+        assert srv.metrics.counter("submitted") == 0   # rejected pre-queue
+
+
+def test_async_device_failure_fails_tickets_not_pump(engine, small_dataset):
+    """A poisoned batch (wrong query dimensionality) fails ITS tickets;
+    the pump survives and keeps serving later requests."""
+    with AsyncEngine(engine, max_wait_ms=2.0) as srv:
+        bad = srv.submit(np.zeros(3, np.float32))      # d=3, index wants d>3
+        with pytest.raises(Exception) as ei:
+            bad.result(timeout=10)
+        assert not isinstance(ei.value, TimeoutError)  # failed, not hung
+        ok = srv.submit(small_dataset.test[0])
+        _, ids = ok.result(timeout=10)
+    _, want = engine.search(small_dataset.test[:1])
+    np.testing.assert_array_equal(ids, want[0])
+
+
+# --------------------------------------------------------------------------
+# checkpoint surface: archives + version negotiation
+# --------------------------------------------------------------------------
+
+def test_archive_roundtrip_multi_tenant(small_dataset, tmp_path):
+    from repro.ann import ivf
+
+    state = ivf.build(small_dataset.train, metric="euclidean", n_clusters=30)
+    engines = {"std": Engine(state, k=10, batch_size=16,
+                             query_params={"n_probes": 4}),
+               "gold": Engine(state, k=10, batch_size=16,
+                              query_params={"n_probes": 16})}
+    path = tmp_path / "tenants.ckpt"
+    src = AsyncEngine(engines, max_wait_ms=5.0)
+    src.save(path)
+    src.close()
+    restored = AsyncEngine.load(path, max_wait_ms=5.0)
+    try:
+        assert restored.tenants == ("gold", "std")
+        assert restored.engines["std"].query_params["n_probes"] == 4
+        assert restored.engines["gold"].query_params["n_probes"] == 16
+        _, got = restored.search(small_dataset.test[:8], tenant="gold")
+    finally:
+        restored.close()
+    _, want = engines["gold"].search(small_dataset.test[:8])
+    np.testing.assert_array_equal(got, want)
+    # the single-state API refuses to guess a tenant out of an archive
+    with pytest.raises(CheckpointError, match="2 tenant states"):
+        ckpt.load_state(path)
+
+
+def test_async_load_accepts_single_state_checkpoint(engine, small_dataset,
+                                                    tmp_path):
+    path = tmp_path / "single.ckpt"
+    engine.save(path)
+    srv = AsyncEngine.load(path, max_wait_ms=5.0)
+    try:
+        assert srv.tenants == ("default",)
+        _, ids = srv.search(small_dataset.test[:4])    # tenant= implied
+    finally:
+        srv.close()
+    _, want = engine.search(small_dataset.test[:4])
+    np.testing.assert_array_equal(ids, want)
+
+
+def test_version_negotiation_messages(engine, tmp_path, monkeypatch):
+    """Each rejection names both versions; known-old v1 gets its own
+    explanation, newer-than-build gets the upgrade hint."""
+    v1 = tmp_path / "v1.ckpt"
+    monkeypatch.setattr(ckpt, "CHECKPOINT_VERSION", 1)
+    engine.save(v1)
+    monkeypatch.undo()
+    with pytest.raises(CheckpointError,
+                       match=r"version 1.*version 2.*xsq"):
+        Engine.load(v1)
+    newer = tmp_path / "newer.ckpt"
+    monkeypatch.setattr(ckpt, "CHECKPOINT_VERSION",
+                        ckpt.CHECKPOINT_VERSION + 1)
+    engine.save(newer)
+    monkeypatch.undo()
+    with pytest.raises(CheckpointError, match="NEWER build"):
+        Engine.load(newer)
+
+
+def test_archive_version_mismatch_rejected(engine, tmp_path, monkeypatch):
+    path = tmp_path / "arch.ckpt"
+    monkeypatch.setattr(ckpt, "ARCHIVE_VERSION", ckpt.ARCHIVE_VERSION + 1)
+    ckpt.save(path, {"only": engine.state})
+    monkeypatch.undo()
+    with pytest.raises(CheckpointError, match="archive version"):
+        ckpt.load(path)
+
+
+# --------------------------------------------------------------------------
+# shared knob CLI parsing (launch.serve and launch.tune use ONE parser)
+# --------------------------------------------------------------------------
+
+def test_knobs_parse_kv_forms_and_coercion():
+    from repro.launch.knobs import coerce, format_kv, parse_kv
+
+    spaced = parse_kv(["ef=64", "n_probes=8", "frac=0.5", "name=ivf",
+                       "flag=true"])
+    packed = parse_kv(["ef=64,n_probes=8,frac=0.5,name=ivf,flag=true"])
+    assert spaced == packed == {"ef": 64, "n_probes": 8, "frac": 0.5,
+                                "name": "ivf", "flag": True}
+    assert parse_kv(["a=1", "a=2"]) == {"a": 2}     # later wins
+    assert parse_kv(format_kv(packed).split()) == packed   # round-trip
+    assert coerce("16") == 16 and coerce("no") == "no"
+    with pytest.raises(SystemExit, match="expected key=value"):
+        parse_kv(["oops"])
+
+
+def test_knobs_parse_grid():
+    from repro.launch.knobs import parse_grid
+
+    grid = parse_grid(["n_probes=1,2,4", "scan=32,128"])
+    assert grid == {"n_probes": [1, 2, 4], "scan": [32, 128]}
+    with pytest.raises(SystemExit, match="expected knob=v1,v2"):
+        parse_grid(["n_probes="])
+
+
+def test_knobs_shared_across_launchers():
+    """serve and tune must parse knob strings through the SAME functions —
+    identical semantics and identical error messages by construction."""
+    from repro.launch import knobs, serve, tune
+
+    assert serve.parse_kv is knobs.parse_kv
+    assert tune.parse_kv is knobs.parse_kv
+    assert tune.parse_grid is knobs.parse_grid
+    assert serve._kv is knobs.parse_kv             # pre-ISSUE-6 alias
+
+
+# --------------------------------------------------------------------------
+# metrics
+# --------------------------------------------------------------------------
+
+def test_latency_histogram_percentiles():
+    from repro.serve.metrics import LatencyHistogram
+
+    h = LatencyHistogram()
+    rng = np.random.default_rng(0)
+    samples = rng.uniform(0.001, 0.1, 5000)
+    for s in samples:
+        h.record(s)
+    for p in (50, 95, 99):
+        want = float(np.percentile(samples, p))
+        got = h.percentile(p)
+        assert abs(got - want) / want < 0.06       # log-bucket resolution
+    assert h.percentile(100) <= h.hi_s
+
+
+def test_serve_metrics_per_tenant_isolation():
+    from repro.serve.metrics import ServeMetrics
+
+    m = ServeMetrics()
+    m.count("served", tenant="a")
+    m.count("served", 2, tenant="b")
+    m.observe(0.010, tenant="a")
+    m.observe(0.100, tenant="b")
+    snap = m.snapshot()
+    assert snap["counters"]["served"] == 3         # overall aggregates
+    assert snap["tenants"]["a"]["counters"]["served"] == 1
+    assert snap["tenants"]["b"]["counters"]["served"] == 2
+    assert snap["tenants"]["a"]["latency_ms"]["p50"] < \
+        snap["tenants"]["b"]["latency_ms"]["p50"]
+
+
+def test_no_deprecation_warnings_on_new_api(engine, small_dataset):
+    """The redesigned surface itself is warning-clean; only the legacy
+    Engine.result(ticket) shim warns."""
+    with warnings.catch_warnings():
+        warnings.simplefilter("error", DeprecationWarning)
+        t = engine.submit(small_dataset.test[0])
+        engine.flush()
+        t.result()
+        with AsyncEngine(engine, max_wait_ms=2.0) as srv:
+            srv.search(small_dataset.test[:4])
