@@ -32,32 +32,92 @@ from repro.core.registry import register
 # --------------------------------------------------------------- functional
 def build(X: np.ndarray, *, metric: str = "euclidean",
           backend: str = "jnp", corpus_block: int = 65536,
-          streaming: bool = False, query_block: int = 4096) -> IndexState:
-    """Canonicalise the corpus into a device-resident IndexState."""
+          streaming: bool = False, query_block: int = 4096,
+          quantize=None, keep_fp32: bool = True,
+          adc_kernel: bool = False, adc_block=None,
+          rerank_block=None, rerank_kernel: bool = False) -> IndexState:
+    """Canonicalise the corpus into a device-resident IndexState.
+
+    ``quantize`` switches the index to compressed-domain search (README
+    "Compressed-domain search"): the corpus is encoded through a
+    :mod:`repro.quant` codec (``{"pq": {...}}`` / ``{"int8": {}}`` /
+    ``"pq"``) and ``search`` becomes a two-stage ADC scan + exact rerank
+    with the traced ``n_cand``/``max_cand`` knob pair.  ``keep_fp32``
+    retains the fp32 corpus for the exact rerank stage; with
+    ``keep_fp32=False`` the fp32 arrays are dropped (maximum memory win)
+    and the ADC ordering — exact over the *dequantized* corpus by LUT
+    construction — is the answer.  ``adc_kernel`` routes the scan through
+    the Pallas ADC kernel; ``rerank_kernel`` routes the rerank stage
+    through the fused rerank kernel.
+    """
     if backend not in ("jnp", "pallas"):
         raise ValueError(f"unknown backend {backend!r}")
     if streaming and (backend != "pallas" or metric == "hamming"):
         raise ValueError(
             "streaming requires backend='pallas' and a float metric "
             "(use BruteForceHamming(streaming=True) for hamming)")
+    if quantize is not None and streaming:
+        raise ValueError("streaming applies to the fp32 scan only; "
+                         "quantize= already streams packed codes")
     X = prepare_points(X, metric)
+    static = {
+        "n": int(X.shape[0]), "d": int(X.shape[1]), "backend": backend,
+        "corpus_block": int(corpus_block), "streaming": bool(streaming),
+        "query_block": int(query_block), "quant": None,
+    }
+    if quantize is not None:
+        from repro import quant
+
+        qarrays, qstatic = quant.train_codec(X, quantize, metric=metric)
+        arrays = dict(qarrays)
+        if keep_fp32:
+            arrays["X"] = jnp.asarray(X)
+            if metric == "euclidean":
+                arrays["xsq"] = jnp.sum(arrays["X"] ** 2, axis=1)
+        static.update({
+            "quant": qstatic, "keep_fp32": bool(keep_fp32),
+            "adc_kernel": bool(adc_kernel),
+            "adc_block": None if adc_block is None else int(adc_block),
+            "rerank_block": None if rerank_block is None
+            else int(rerank_block),
+            "rerank_kernel": bool(rerank_kernel),
+        })
+        return IndexState("BruteForce", metric, arrays, static)
     arrays = {"X": jnp.asarray(X)}
     if metric == "euclidean":
         arrays["xsq"] = jnp.sum(arrays["X"].astype(jnp.float32) ** 2, axis=1)
-    return IndexState("BruteForce", metric, arrays, {
-        "n": int(X.shape[0]), "backend": backend,
-        "corpus_block": int(corpus_block), "streaming": bool(streaming),
-        "query_block": int(query_block),
-    })
+    return IndexState("BruteForce", metric, arrays, static)
 
 
-def search(state: IndexState, Q, *, k: int):
+def search(state: IndexState, Q, *, k: int, n_cand=None, max_cand=None):
     """Exact (dists [b, kk], ids [b, kk]) with kk = min(k, n).  Pure and
     jit/vmap/shard-friendly; the pallas backend runs the streaming fused
-    kernel, the jnp backend materialises one [b, n] tile."""
+    kernel, the jnp backend materialises one [b, n] tile.
+
+    Quantized builds (``quantize=`` at build time) run the two-stage
+    compressed path instead — ADC scan over packed codes, then exact
+    rerank of the ``n_cand`` best — with the ``n_cand``/``max_cand``
+    traced-knob pair:
+
+    ``n_cand`` / ``max_cand``   rerank depth.  Statically ``n_cand``
+        sizes the ADC candidate window (``None`` = the whole corpus:
+        exact-over-dequantized ordering feeding an exhaustive rerank);
+        under a static ``max_cand`` cap it is a traced runtime value
+        masked in-kernel, so ONE trace serves the whole recall/QPS
+        operating curve.  The ADC prefix is sorted canonically by
+        (dist, id) — the ``topk_unique`` contract — so the traced mask
+        is bit-identical to the static window.
+    """
     metric = state.metric
     n = state.stat("n")
     k = min(k, n)
+    if state.static.get("quant") is not None:
+        return _search_quantized(state, Q, k=k, n_cand=n_cand,
+                                 max_cand=max_cand)
+    if n_cand is not None or max_cand is not None:
+        raise ValueError(
+            "n_cand/max_cand are the compressed-domain rerank knobs; "
+            "build with quantize= to use them")
     Q = prepare_queries(Q, metric)
     if state.stat("backend") == "pallas" and metric != "hamming":
         from repro.kernels.distance_topk import stream_topk
@@ -72,9 +132,54 @@ def search(state: IndexState, Q, *, k: int):
     return topk_smallest(d, k)
 
 
+def _search_quantized(state: IndexState, Q, *, k: int, n_cand, max_cand):
+    """ADC scan over packed codes -> top-C candidates -> exact rerank."""
+    from repro.kernels.adc_scan import adc_scan
+    from repro.kernels.rerank_topk import rerank_topk
+    from repro.quant import build_luts
+
+    metric = state.metric
+    n = state.stat("n")
+    # candidate window: static n_cand narrows it; a static max_cand cap
+    # sizes it instead and n_cand becomes the traced in-window mask
+    if max_cand is None:
+        C = n if n_cand is None else max(1, min(int(n_cand), n))
+        n_cand = None                   # window == budget: no mask needed
+    else:
+        C = max(1, min(int(max_cand), n))
+    Q = prepare_queries(Q, metric)
+    luts = build_luts(state["codebooks"], Q, metric)
+    adc_d, rows = adc_scan(
+        state["codes"], luts, k=C,
+        block=state.static.get("adc_block"),
+        use_kernel=bool(state.static.get("adc_kernel", False)))
+    live = None
+    if n_cand is not None:
+        # ADC output is canonically sorted, so masking positions >= n_cand
+        # of the top-max_cand prefix IS the static top-n_cand window
+        live = (jnp.arange(C, dtype=jnp.int32) < n_cand)[None, :]
+    if state.stat("keep_fp32"):
+        return rerank_topk(
+            Q, state["X"], rows, k=k, metric=metric,
+            xsq=state.arrays.get("xsq"), valid=live,
+            block=state.static.get("rerank_block"),
+            use_kernel=bool(state.static.get("rerank_kernel", False)))
+    # no fp32 corpus retained: the ADC ordering (exact over the
+    # dequantized corpus) is the answer
+    if live is not None:
+        adc_d = jnp.where(live, adc_d, jnp.inf)
+        rows = jnp.where(live, rows, -1)
+    kk = min(int(k), C)
+    return adc_d[:, :kk], rows[:, :kk]
+
+
 SPEC = register_functional(FunctionalSpec(
     name="BruteForce", build=build, search=search,
+    query_params=("n_cand", "max_cand"),
+    query_defaults=(None, None),
+    static_query_params=("n_cand", "max_cand"),
     supported_metrics=("euclidean", "angular", "hamming"),
+    traced_knobs=(("n_cand", "max_cand"),),
 ))
 
 
@@ -85,10 +190,13 @@ class BruteForce(FunctionalANN):
 
     def __init__(self, metric: str, backend: str = "jnp",
                  corpus_block: int = 65536, streaming: bool = False,
-                 query_block: int = 4096):
+                 query_block: int = 4096, quantize=None,
+                 keep_fp32: bool = True, adc_kernel: bool = False):
         super().__init__(metric, build_params=dict(
             backend=backend, corpus_block=int(corpus_block),
-            streaming=bool(streaming), query_block=int(query_block)))
+            streaming=bool(streaming), query_block=int(query_block),
+            quantize=quantize, keep_fp32=bool(keep_fp32),
+            adc_kernel=bool(adc_kernel)))
         if backend not in ("jnp", "pallas"):
             raise ValueError(f"unknown backend {backend!r}")
         if streaming and (backend != "pallas" or metric == "hamming"):
@@ -99,7 +207,13 @@ class BruteForce(FunctionalANN):
         self.corpus_block = int(corpus_block)
         self.streaming = bool(streaming)
         self.query_block = int(query_block)
+        self.quantize = quantize
         suffix = ",streaming" if streaming else ""
+        if quantize is not None:
+            from repro.quant import normalize_quantize
+
+            kind, _ = normalize_quantize(quantize)
+            suffix += f",quantize={kind}"
         self.name = f"BruteForce(backend={backend}{suffix})"
         self._dist_comps = 0
 

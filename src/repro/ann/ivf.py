@@ -56,8 +56,19 @@ from repro.kernels.rerank_topk import rerank_topk
 def build(X: np.ndarray, *, metric: str = "euclidean",
           n_clusters: int = 100, n_iters: int = 10, seed: int = 0,
           streaming: bool = False, rerank_block=None,
-          rerank_kernel: bool = False) -> IndexState:
-    """Host k-means + cluster-major corpus layout -> device IndexState."""
+          rerank_kernel: bool = False, quantize=None,
+          keep_fp32: bool = True, adc_block=None) -> IndexState:
+    """Host k-means + cluster-major corpus layout -> device IndexState.
+
+    ``quantize`` adds the compressed-domain scan stage (README
+    "Compressed-domain search"): each inverted list stores its members'
+    packed :mod:`repro.quant` codes (cluster-major, like the corpus), the
+    probed window is scored by ADC lookups — ``m`` code bytes per
+    candidate instead of a ``4d``-byte fp32 row — and only the ``n_cand``
+    ADC survivors go through the exact fp32 rerank.  ``keep_fp32=False``
+    drops the fp32 corpus (and its norms table): the ADC ordering, exact
+    over the dequantized corpus, is then the answer.
+    """
     X = prepare_points(X, metric)
     n, d = X.shape
     C = min(int(n_clusters), n)
@@ -75,19 +86,37 @@ def build(X: np.ndarray, *, metric: str = "euclidean",
     }
     if metric == "euclidean":
         arrays["xsq"] = jnp.sum(arrays["X"] ** 2, axis=1)
-    return IndexState("IVF", metric, arrays, {
+    static = {
         "n": n, "d": d, "n_clusters": C, "pad": int(sizes.max()),
         "streaming": bool(streaming), "rerank_kernel": bool(rerank_kernel),
         "rerank_block": None if rerank_block is None else int(rerank_block),
-    })
+        "quant": None,
+    }
+    if quantize is not None:
+        from repro import quant
+
+        qarrays, qstatic = quant.train_codec(X, quantize, metric=metric)
+        # codes follow the cluster-major corpus order, so the probed
+        # window's row indices address codes and fp32 rows identically
+        arrays["codes"] = jnp.asarray(np.asarray(qarrays["codes"])[order])
+        arrays["codebooks"] = qarrays["codebooks"]
+        if not keep_fp32:
+            arrays.pop("X")
+            arrays.pop("xsq", None)
+        static.update({
+            "quant": qstatic, "keep_fp32": bool(keep_fp32),
+            "adc_block": None if adc_block is None else int(adc_block),
+        })
+    return IndexState("IVF", metric, arrays, static)
 
 
 def search(state: IndexState, Q, *, k: int, n_probes=1, scan=None,
-           max_probes: Optional[int] = None,
-           max_scan: Optional[int] = None):
+           n_cand=None, max_probes: Optional[int] = None,
+           max_scan: Optional[int] = None,
+           max_cand: Optional[int] = None):
     """Q [b, d] -> (dists [b, kk], ids [b, kk]).  Fully jittable.
 
-    Two traced-capable query knobs:
+    Three traced-capable query knobs:
 
     ``n_probes`` / ``max_probes``   how many inverted lists to probe.  The
         static cap sizes the probed-list window; ``n_probes`` may then be
@@ -97,6 +126,12 @@ def search(state: IndexState, Q, *, k: int, n_probes=1, scan=None,
         entries of each probed list are reranked (``None`` = whole list).
         Statically it narrows the gather window; under a static
         ``max_scan`` cap it is a traced runtime value masked in-kernel.
+    ``n_cand`` / ``max_cand``   rerank depth, quantized builds only: how
+        many ADC-scan survivors go through the exact fp32 rerank
+        (``None`` = every probed candidate).  Statically it sizes the ADC
+        top-C window; under a static ``max_cand`` cap it is a traced mask
+        over the canonically-sorted ADC prefix — bit-identical to the
+        static window (the ``topk_unique`` contract).
 
     The rerank is the shared streaming fold
     (:func:`repro.kernels.rerank_topk.rerank_topk`, Pallas-fused under the
@@ -108,6 +143,11 @@ def search(state: IndexState, Q, *, k: int, n_probes=1, scan=None,
     C = state.stat("n_clusters")
     n = state.stat("n")
     pad = state.stat("pad")
+    quant = state.static.get("quant")
+    if quant is None and (n_cand is not None or max_cand is not None):
+        raise ValueError(
+            "n_cand/max_cand are the compressed-domain rerank knobs; "
+            "build with quantize= to use them")
     if max_probes is None:
         P = min(int(n_probes), C)
     else:
@@ -135,6 +175,9 @@ def search(state: IndexState, Q, *, k: int, n_probes=1, scan=None,
         valid = valid & (offs[None, None, :] < jnp.maximum(scan, 1))
     cand = jnp.minimum(cand, n - 1).reshape(Q.shape[0], -1)
     valid = valid.reshape(Q.shape[0], -1)                # [b, P*M]
+    if quant is not None:
+        return _rerank_quantized(state, Q, cand, valid, k=k,
+                                 n_cand=n_cand, max_cand=max_cand)
     # 3. exact distances on the candidate set: the shared streaming fold
     #    (optionally the fused Pallas kernel), probe/scan validity masks
     #    flowing in as the fold's mask input
@@ -145,12 +188,52 @@ def search(state: IndexState, Q, *, k: int, n_probes=1, scan=None,
         use_kernel=bool(state.static.get("rerank_kernel", False)))
 
 
+def _rerank_quantized(state: IndexState, Q, cand, valid, *, k: int,
+                      n_cand, max_cand):
+    """Compressed-domain stage 3: ADC-score the probed window (m code
+    bytes per candidate), keep the n_cand best, exact-rerank those."""
+    from repro.kernels.adc_scan import adc_window_topk
+    from repro.quant import build_luts
+
+    Cw = cand.shape[1]
+    if max_cand is None:
+        W = Cw if n_cand is None else max(1, min(int(n_cand), Cw))
+        n_cand = None                   # window == budget: no mask needed
+    else:
+        W = max(1, min(int(max_cand), Cw))
+    luts = build_luts(state["codebooks"], Q, state.metric)
+    adc_d, rows = adc_window_topk(
+        state["codes"], luts, cand, k=W, valid=valid,
+        block=state.static.get("adc_block"))
+    live = None
+    if n_cand is not None:
+        live = (jnp.arange(W, dtype=jnp.int32) < n_cand)[None, :]
+    if state.stat("keep_fp32"):
+        return rerank_topk(
+            Q, state["X"], rows, k=k, metric=state.metric,
+            xsq=state.arrays.get("xsq"), row_ids=state["ids"], valid=live,
+            block=state.static.get("rerank_block"),
+            use_kernel=bool(state.static.get("rerank_kernel", False)))
+    # no fp32 corpus retained: ADC ordering is the answer; map the
+    # cluster-major rows back to corpus ids
+    bad = rows < 0
+    if live is not None:
+        bad = bad | ~live
+    adc_d = jnp.where(bad, jnp.inf, adc_d)
+    ids = jnp.where(bad, -1, state["ids"][jnp.maximum(rows, 0)])
+    kk = min(int(k), W)
+    return adc_d[:, :kk], ids[:, :kk]
+
+
 SPEC = register_functional(FunctionalSpec(
     name="IVF", build=build, search=search,
-    query_params=("n_probes", "scan", "max_probes", "max_scan"),
-    query_defaults=(1, None, None, None),
-    static_query_params=("n_probes", "scan", "max_probes", "max_scan"),
-    traced_knobs=(("n_probes", "max_probes"), ("scan", "max_scan")),
+    query_params=("n_probes", "scan", "n_cand",
+                  "max_probes", "max_scan", "max_cand"),
+    query_defaults=(1, None, None, None, None, None),
+    static_query_params=("n_probes", "scan", "n_cand",
+                         "max_probes", "max_scan", "max_cand"),
+    traced_knobs=(("n_probes", "max_probes"), ("scan", "max_scan"),
+                  ("n_cand", "max_cand")),
 ))
 
 
@@ -161,11 +244,13 @@ class IVF(FunctionalANN):
 
     def __init__(self, metric: str, n_clusters: int = 100, n_iters: int = 10,
                  seed: int = 0, streaming: bool = False,
-                 rerank_block=None, rerank_kernel: bool = False):
+                 rerank_block=None, rerank_kernel: bool = False,
+                 quantize=None, keep_fp32: bool = True):
         super().__init__(metric, build_params=dict(
             n_clusters=int(n_clusters), n_iters=int(n_iters), seed=int(seed),
             streaming=bool(streaming), rerank_block=rerank_block,
-            rerank_kernel=bool(rerank_kernel)))
+            rerank_kernel=bool(rerank_kernel), quantize=quantize,
+            keep_fp32=bool(keep_fp32)))
         self.n_clusters = int(n_clusters)
         self.n_iters = int(n_iters)
         self.seed = int(seed)
@@ -183,10 +268,13 @@ class IVF(FunctionalANN):
         self._sizes_np = np.asarray(st["sizes"])
         self._centers = st["centers"]
 
-    def set_query_arguments(self, n_probes: int, scan=None) -> None:
+    def set_query_arguments(self, n_probes: int, scan=None,
+                            n_cand=None) -> None:
         self.n_probes = int(n_probes)
         self._qparams["n_probes"] = min(self.n_probes, self.n_clusters)
         self._qparams["scan"] = None if scan is None else int(scan)
+        if n_cand is not None:
+            self._qparams["n_cand"] = int(n_cand)
 
     def _effective_scan(self) -> int:
         """Per-list window actually gathered: the scan budget when set

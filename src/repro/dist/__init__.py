@@ -5,5 +5,7 @@ Modules:
     sharding.py     logical -> physical mesh-axis mapping (``constrain``,
                     ``named_sharding``, spec trees)
     collectives.py  explicit collective ops (row-sharded embedding lookup)
-    compression.py  error-feedback gradient quantisation + all-reduce
+    grad_compression.py  error-feedback gradient quantisation + all-reduce
+                    (the wire codec — corpus vector codecs live in
+                    ``repro.quant``); ``compression.py`` is the import shim
 """

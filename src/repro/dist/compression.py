@@ -1,57 +1,12 @@
-"""Error-feedback gradient compression (1-bit-Adam-style int8 variant).
-
-Each step quantises ``g + error`` to a per-tensor int8 grid, all-reduces the
-compressed tensors across the mesh, and carries the quantisation residual
-into the next step.  The error-feedback invariant (tested by hypothesis):
-over repeated steps no gradient signal is lost —
-``sum(dequantised outputs) + residual == sum(raw gradients)``.
+"""Compatibility shim: the gradient wire codec moved to
+:mod:`repro.dist.grad_compression` when :mod:`repro.quant` (corpus vector
+codecs) arrived — two "compression" modules with one ambiguous name was a
+recurring mis-import.  Import from ``repro.dist.grad_compression``
+directly in new code.
 """
 
-from __future__ import annotations
+from repro.dist.grad_compression import (_quantize_int8,  # noqa: F401
+                                         compress_gradients,
+                                         init_error_state)
 
-from typing import Optional, Sequence
-
-import jax
-import jax.numpy as jnp
-from jax.experimental.shard_map import shard_map
-from jax.sharding import Mesh, PartitionSpec as P
-
-
-def init_error_state(grads):
-    """Zero residual tree matching ``grads``."""
-    return jax.tree.map(lambda g: jnp.zeros(jnp.shape(g), jnp.float32),
-                        grads)
-
-
-def _quantize_int8(x):
-    x = x.astype(jnp.float32)
-    scale = jnp.maximum(jnp.max(jnp.abs(x)) / 127.0, 1e-12)
-    return jnp.round(x / scale) * scale
-
-
-def compress_gradients(grads, err_state, *, mesh: Optional[Mesh] = None,
-                       axes: Optional[Sequence[str]] = None):
-    """(compressed-and-reduced grads, new error state).
-
-    Without a mesh this is pure local quantisation with error feedback;
-    with a mesh the quantised tensors are mean-all-reduced over ``axes``
-    (default: every mesh axis).
-    """
-    upd = jax.tree.map(lambda g, e: g.astype(jnp.float32) + e,
-                       grads, err_state)
-    comp = jax.tree.map(_quantize_int8, upd)
-    new_err = jax.tree.map(lambda u, c: u - c, upd, comp)
-    if mesh is not None and len(mesh.devices.flatten()) > 1:
-        red_axes = tuple(axes) if axes is not None else tuple(mesh.axis_names)
-        size = 1
-        for a in red_axes:
-            size *= mesh.shape[a]
-
-        def allmean(x):
-            fn = shard_map(lambda y: jax.lax.psum(y, red_axes) / size,
-                           mesh=mesh, in_specs=P(), out_specs=P(),
-                           check_rep=False)
-            return fn(x)
-
-        comp = jax.tree.map(allmean, comp)
-    return comp, new_err
+__all__ = ["compress_gradients", "init_error_state"]

@@ -1,0 +1,79 @@
+"""Error-feedback gradient compression (1-bit-Adam-style int8 variant).
+
+This is the distributed-training WIRE codec — it compresses gradient
+*traffic* for the all-reduce and keeps a residual so no signal is lost.
+It is unrelated to :mod:`repro.quant`, the compressed-domain CORPUS
+codecs (PQ / int8 affine) that shrink the index itself; see README
+"Compressed-domain search" for the distinction.
+
+Each step quantises ``g + error`` to a per-tensor int8 grid, all-reduces
+the compressed tensors across the mesh, and carries the quantisation
+residual into the next step.  The error-feedback invariant (tested by
+hypothesis, including adversarial NaN/inf gradients): over repeated
+steps no *finite* gradient signal is lost —
+``sum(dequantised outputs) + residual == sum(sanitised raw gradients)``.
+Non-finite entries carry no usable signal, so they are explicitly zeroed
+before quantisation; without that guard a single NaN would poison the
+residual (and thus every later step) forever.
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+from jax.experimental.shard_map import shard_map
+from jax.sharding import Mesh, PartitionSpec as P
+
+
+def init_error_state(grads):
+    """Zero residual tree matching ``grads``."""
+    return jax.tree.map(lambda g: jnp.zeros(jnp.shape(g), jnp.float32),
+                        grads)
+
+
+def _sanitize(x):
+    """Zero out NaN/inf entries — they carry no signal and would otherwise
+    poison the error-feedback residual permanently."""
+    return jnp.where(jnp.isfinite(x), x, 0.0)
+
+
+def _quantize_int8(x):
+    x = _sanitize(x.astype(jnp.float32))
+    maxabs = jnp.max(jnp.abs(x))
+    # all-zero (or fully non-finite) tensor: any positive scale maps it to
+    # exact zeros — pick 1.0 explicitly rather than an epsilon-floored
+    # division whose intent is invisible
+    scale = jnp.where(maxabs > 0.0, maxabs / 127.0, 1.0)
+    return jnp.round(x / scale) * scale
+
+
+def compress_gradients(grads, err_state, *, mesh: Optional[Mesh] = None,
+                       axes: Optional[Sequence[str]] = None):
+    """(compressed-and-reduced grads, new error state).
+
+    Without a mesh this is pure local quantisation with error feedback;
+    with a mesh the quantised tensors are mean-all-reduced over ``axes``
+    (default: every mesh axis).  Non-finite gradient entries are dropped
+    (treated as zero) before entering the update, so the invariant holds
+    over the sanitised gradient stream.
+    """
+    upd = jax.tree.map(lambda g, e: _sanitize(g.astype(jnp.float32)) + e,
+                       grads, err_state)
+    comp = jax.tree.map(_quantize_int8, upd)
+    new_err = jax.tree.map(lambda u, c: u - c, upd, comp)
+    if mesh is not None and len(mesh.devices.flatten()) > 1:
+        red_axes = tuple(axes) if axes is not None else tuple(mesh.axis_names)
+        size = 1
+        for a in red_axes:
+            size *= mesh.shape[a]
+
+        def allmean(x):
+            fn = shard_map(lambda y: jax.lax.psum(y, red_axes) / size,
+                           mesh=mesh, in_specs=P(), out_specs=P(),
+                           check_rep=False)
+            return fn(x)
+
+        comp = jax.tree.map(allmean, comp)
+    return comp, new_err

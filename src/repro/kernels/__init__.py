@@ -17,6 +17,10 @@ Kernels:
                    VMEM scratch + distance + running unique-by-id top-k, so
                    the [b, C, d] gathered candidate tensor never exists in
                    HBM (every algorithm's verification hot path)
+    adc_scan/      compressed-domain ADC scan: per-query LUTs resident in
+                   VMEM, packed uint8 codes streamed in blocks, distances
+                   as one-hot x LUT matmuls on the MXU, running top-C fold
+                   (the scan stage of the repro.quant two-stage design)
     hamming/       XOR + popcount distances over packed uint32 codes
     embedbag/      embedding-bag gather-reduce (recsys hot path)
     decode_attn/   single-token decode attention with online softmax

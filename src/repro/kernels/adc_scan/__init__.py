@@ -1,0 +1,4 @@
+from repro.kernels.adc_scan.ops import (adc_scan, adc_window_topk,
+                                        pick_adc_block)
+
+__all__ = ["adc_scan", "adc_window_topk", "pick_adc_block"]

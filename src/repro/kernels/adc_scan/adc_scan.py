@@ -1,0 +1,161 @@
+"""ADC scan kernel: packed codes streamed through VMEM, LUT distances on
+the MXU, running top-C candidate fold in VMEM scratch.
+
+Per grid step a [bn, m] uint8 code block and the query tile's resident
+[bq, m, K] lookup tables (built ONCE per batch) meet in VMEM.  TPUs have
+no fast dynamic vector gather, so the per-candidate table lookup
+``sum_j LUT[q, j, code[i, j]]`` is reformulated as a matmul the MXU can
+chew: one-hot(code block) contracted against the LUT tile over the
+(subspace, code) axes,
+
+    d[q, i] = sum_{j, c} LUT[q, j, c] * onehot(codes[i, j])[c]
+
+chunked over the K axis so the [bn, m, kc] one-hot tensor stays inside a
+VMEM budget.  The one-hot entries are exactly 0/1, so each distance is a
+sum of the SAME m table entries the gather formulation reads — this is a
+lookup evaluated as arithmetic, not an approximation.
+
+Each block's (dist, row) pairs fold into a running per-query top-C
+accumulator via the shared ``merge_topk_unique_rounds`` (bit-identical to
+the canonical ``topk_unique`` select — the contract the traced ``n_cand``
+mask parity rests on); the output is written once per query tile on the
+last code step.  Peak memory is O(bq * (bn + C)) accumulator state plus
+the one-hot chunk — the [b, n] distance matrix never exists.
+
+Grid: (b/bq, n/bn), code axis sequential ("arbitrary"), query axis
+parallel.  Rows past the true corpus length (shape padding) are masked to
+(+inf, -1) in-kernel via a row iota against the static ``n``.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels import tpu_compiler_params
+from repro.kernels.distance_topk.distance_topk import NEG_ONE
+from repro.kernels.rerank_topk.rerank_topk import merge_topk_unique_rounds
+
+_ONEHOT_BUDGET = 2 << 20    # [bn, m, kc] one-hot chunk VMEM bytes
+
+
+def _pick_kc(bn: int, m: int, K: int,
+             budget: int = _ONEHOT_BUDGET) -> int:
+    kc = K
+    while kc > 8 and 4 * bn * m * kc > budget:
+        kc //= 2
+    return kc
+
+
+def _adc_kernel(codes_ref, luts_ref, vals_out, idx_out, vals_ref, idx_ref,
+                *, k: int, bq: int, bn: int, K: int, kc: int, n: int,
+                n_steps: int):
+    j = pl.program_id(1)                       # code-block step
+
+    @pl.when(j == 0)
+    def _init_state():
+        vals_ref[...] = jnp.full_like(vals_ref, jnp.inf)
+        idx_ref[...] = jnp.full_like(idx_ref, NEG_ONE)
+
+    codes = codes_ref[...].astype(jnp.int32)   # [bn, m]
+    lut = luts_ref[...]                        # [bq, m, K]
+    m = codes.shape[1]
+    d = jnp.zeros((bq, bn), jnp.float32)
+    # K-chunked one-hot matmul: static python unroll (K/kc steps, so the
+    # LUT slice offsets stay compile-time constants)
+    for c0 in range(0, K, kc):
+        sel = (codes[:, :, None] == c0 + jax.lax.broadcasted_iota(
+            jnp.int32, (bn, m, kc), 2)).astype(jnp.float32)
+        d = d + jax.lax.dot_general(
+            lut[:, :, c0:c0 + kc], sel,
+            (((1, 2), (1, 2)), ((), ())),
+            preferred_element_type=jnp.float32)
+
+    rows = j * bn + jax.lax.broadcasted_iota(jnp.int32, (bq, bn), 1)
+    live = rows < n                            # shape-padding mask
+    cand_d = jnp.concatenate(
+        [vals_ref[...], jnp.where(live, d, jnp.inf)], axis=1)
+    cand_i = jnp.concatenate(
+        [idx_ref[...], jnp.where(live, rows, NEG_ONE)], axis=1)
+    out_d, out_i = merge_topk_unique_rounds(cand_d, cand_i, k)
+    vals_ref[...] = out_d
+    idx_ref[...] = out_i
+
+    @pl.when(j == n_steps - 1)
+    def _flush():
+        vals_out[...] = vals_ref[...]
+        idx_out[...] = idx_ref[...]
+
+
+@functools.partial(
+    jax.jit, static_argnames=("k", "bq", "bn", "kc", "n", "interpret"))
+def adc_scan_pallas(
+    codes: jnp.ndarray,            # [n_pad, m] uint8 packed code table
+    luts: jnp.ndarray,             # [b_pad, m, K] f32 per-query LUTs
+    *,
+    k: int,
+    n: int,                        # true corpus length (pre-padding)
+    bq: int = 8,
+    bn: int = 256,
+    kc: int = 128,
+    interpret: bool = True,
+):
+    n_pad, m = codes.shape
+    b_pad, _, K = luts.shape
+    assert b_pad % bq == 0 and n_pad % bn == 0, (b_pad, n_pad, bq, bn)
+    assert K % kc == 0, (K, kc)
+    n_steps = n_pad // bn
+    kernel = functools.partial(_adc_kernel, k=k, bq=bq, bn=bn, K=K, kc=kc,
+                               n=n, n_steps=n_steps)
+    vals, idx = pl.pallas_call(
+        kernel,
+        grid=(b_pad // bq, n_steps),
+        in_specs=[
+            pl.BlockSpec((bn, m), lambda i, j: (j, 0)),
+            pl.BlockSpec((bq, m, K), lambda i, j: (i, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((bq, k), lambda i, j: (i, 0)),
+            pl.BlockSpec((bq, k), lambda i, j: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b_pad, k), jnp.float32),
+            jax.ShapeDtypeStruct((b_pad, k), jnp.int32),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((bq, k), jnp.float32),    # running top-C dists
+            pltpu.VMEM((bq, k), jnp.int32),      # running top-C rows
+        ],
+        compiler_params=tpu_compiler_params(
+            dimension_semantics=("parallel", "arbitrary"),
+        ),
+        interpret=interpret,
+    )(codes, luts)
+    return vals, idx
+
+
+def _ceil_to(x: int, mult: int) -> int:
+    return -(-x // mult) * mult
+
+
+def adc_scan_kernel_path(codes, luts, *, k: int, block, interpret: bool):
+    """Pad shapes to kernel tiles and run the Pallas scan (the
+    ``use_kernel=True`` route of :func:`ops.adc_scan`)."""
+    n, m = codes.shape
+    b = luts.shape[0]
+    bq = 8
+    bn = max(8, min(int(block), 1024)) if block else 256
+    bn = min(bn, _ceil_to(n, 8))
+    kc = _pick_kc(bn, m, luts.shape[2])
+    n_pad = _ceil_to(n, bn)
+    b_pad = _ceil_to(b, bq)
+    codes_p = jnp.pad(jnp.asarray(codes), ((0, n_pad - n), (0, 0)))
+    luts_p = jnp.pad(jnp.asarray(luts, jnp.float32),
+                     ((0, b_pad - b), (0, 0), (0, 0)))
+    vals, idx = adc_scan_pallas(codes_p, luts_p, k=k, n=n, bq=bq, bn=bn,
+                                kc=kc, interpret=interpret)
+    return vals[:b], idx[:b]

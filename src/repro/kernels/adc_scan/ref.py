@@ -1,0 +1,29 @@
+"""Pure-jnp oracle for the ADC scan: materialize the full [b, n, m]
+per-subspace lookup tensor, sum it, one-shot canonical ``topk_unique``.
+This is the correctness reference the tests assert against and the
+memory-hungry baseline ``benchmarks/bench_pq.py`` times the streaming
+paths against.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def adc_scan_ref(codes, luts, *, k: int):
+    """(adc_dists [b, kk], rows [b, kk]) over the whole code table.
+
+    ``codes [n, m]`` uint8, ``luts [b, m, K]`` float32 (one table per
+    query, :func:`repro.quant.build_luts`).  kk = min(k, n); rows are
+    corpus row indices sorted by (dist, id) ascending, exactly like
+    ``topk_unique``.
+    """
+    from repro.ann.topk import topk_unique   # deferred: import cycle
+
+    n, m = codes.shape
+    idx = jnp.asarray(codes, jnp.int32)                    # [n, m]
+    per_sub = jnp.take_along_axis(
+        luts, idx.T[None], axis=2)                         # [b, m, n]
+    d = jnp.sum(per_sub, axis=1)                           # [b, n]
+    rows = jnp.broadcast_to(jnp.arange(n, dtype=jnp.int32), d.shape)
+    return topk_unique(d, rows, min(k, n))

@@ -16,11 +16,23 @@ Values coerce ``int`` → ``float`` → ``bool`` (``true``/``false``) →
 ``str``, in that order.  Errors raise :class:`SystemExit` with a message
 naming the offending token (these are CLI entry points; tests assert the
 message is identical across launchers).
+
+``--build`` strings go through :func:`parse_build`, which additionally
+folds the flat compressed-domain form ``quantize=pq,m=16,bits=8`` into
+the nested ``{"quantize": {"pq": {"m": 16, "bits": 8}}}`` build param the
+algorithms take (validated through ``repro.quant.normalize_quantize`` so
+a bad codec fails at the CLI, with the codec module's own message, not
+deep inside the build).
 """
 
 from __future__ import annotations
 
 from typing import Dict, List, Sequence
+
+#: flat CLI spellings of the per-codec training knobs folded under
+#: ``quantize=<codec>`` by :func:`parse_build` (lowercase ``m`` — HNSW's
+#: build knob is the distinct capital ``M``).
+QUANTIZE_KEYS = ("m", "bits")
 
 
 def coerce(token: str):
@@ -54,6 +66,44 @@ def parse_kv(tokens: Sequence[str]) -> Dict[str, object]:
                     f"in {token!r}")
             out[key] = coerce(value)
     return out
+
+
+def nest_quantize(params: Dict[str, object]) -> Dict[str, object]:
+    """Fold flat ``quantize=<codec>`` + codec knobs into the nested form.
+
+    ``{"quantize": "pq", "m": 16, "bits": 8, ...}`` becomes
+    ``{"quantize": {"pq": {"m": 16, "bits": 8}}, ...}``; the spec is
+    validated through ``repro.quant.normalize_quantize`` so unknown
+    codecs, bad ``bits`` and int8-with-knobs fail here — as
+    :class:`SystemExit` with the codec module's exact message — instead
+    of deep inside the build.  Codec knobs without a ``quantize=`` are an
+    orphan-knob error.  Builds that never mention quantize pass through
+    untouched.
+    """
+    params = dict(params)
+    kind = params.pop("quantize", None)
+    codec_knobs = {k: params.pop(k) for k in QUANTIZE_KEYS if k in params}
+    if kind is None:
+        if codec_knobs:
+            raise SystemExit(
+                f"codec knob(s) {sorted(codec_knobs)} need a "
+                f"quantize=<codec>; pass e.g. quantize=pq,m=16,bits=8")
+        return params
+    from repro.quant import normalize_quantize
+
+    try:
+        normalize_quantize({kind: codec_knobs})
+    except ValueError as e:
+        raise SystemExit(str(e)) from e
+    params["quantize"] = {kind: codec_knobs}
+    return params
+
+
+def parse_build(tokens: Sequence[str]) -> Dict[str, object]:
+    """:func:`parse_kv` for ``--build`` strings: flat kv plus the folded
+    ``quantize=pq,m=16,bits=8`` compressed-domain form
+    (:func:`nest_quantize`)."""
+    return nest_quantize(parse_kv(tokens))
 
 
 def parse_grid(tokens: Sequence[str]) -> Dict[str, List[object]]:

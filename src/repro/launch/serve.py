@@ -37,7 +37,7 @@ from repro.ann import distances as D
 from repro.ann.functional import get_functional
 from repro.core.metrics import recall_from_arrays
 from repro.data import get_dataset
-from repro.launch.knobs import coerce, parse_kv
+from repro.launch.knobs import coerce, parse_build, parse_kv
 from repro.serve import (AdmissionError, AsyncEngine, CheckpointError,
                          DeadlineExceeded, Engine)
 
@@ -61,7 +61,7 @@ def build_or_restore(args, ds) -> Engine:
             return eng
         except CheckpointError as e:
             print(f"[serve] cache miss ({e}); building")
-    build_params = parse_kv(args.build)
+    build_params = parse_build(args.build)
     # legacy positional --args map onto nothing structured; accept the old
     # IVF/LSH convention of a single leading int = first build knob
     for value, name in zip([coerce(a) for a in args.args],

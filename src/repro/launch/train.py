@@ -23,7 +23,7 @@ import jax.numpy as jnp
 from repro.configs.registry import get_arch
 from repro.train.loop import TrainLoopConfig, make_accum_train_step, run
 from repro.train.optim import adamw, warmup_cosine
-from repro.dist.compression import init_error_state
+from repro.dist.grad_compression import init_error_state
 
 
 def lm_batches(cfg, batch, seq, accum, seed=0):

@@ -22,7 +22,7 @@ import time
 from repro import tune
 from repro.ann.functional import get_functional
 from repro.data import get_dataset
-from repro.launch.knobs import format_kv, parse_grid, parse_kv
+from repro.launch.knobs import format_kv, parse_build, parse_grid, parse_kv
 
 
 def _point_row(p: tune.OperatingPoint) -> dict:
@@ -64,7 +64,7 @@ def main(argv=None):
     spec = get_functional(args.algorithm)
     grid = parse_grid(args.grid)
     t0 = time.perf_counter()
-    state = spec.build(ds.train, metric=ds.metric, **parse_kv(args.build))
+    state = spec.build(ds.train, metric=ds.metric, **parse_build(args.build))
     print(f"[tune] built {spec.name} in {time.perf_counter() - t0:.2f}s; "
           f"grid {'x'.join(str(len(v)) for v in grid.values())} over "
           f"{sorted(grid)} ({constraint})")

@@ -1,0 +1,18 @@
+"""Vector codecs for compressed-domain search (the quantize-then-rerank
+two-stage design of Sun et al. 2023; see README "Compressed-domain
+search").
+
+This package is the *vector*-codec home — corpus compression for the
+search path.  The superficially-similar int8 codec in
+:mod:`repro.dist.grad_compression` is a *wire-format* codec for
+distributed-training gradients and shares no machinery with this one.
+"""
+
+from repro.quant.codec import (CODECS, build_luts, bytes_per_vector, decode,
+                               normalize_quantize, subspace_split,
+                               train_codec)
+
+__all__ = [
+    "CODECS", "build_luts", "bytes_per_vector", "decode",
+    "normalize_quantize", "subspace_split", "train_codec",
+]

@@ -45,7 +45,10 @@ from repro.ann.functional import IndexState
 #: v2: euclidean E2LSH/RPForest states grew a cached ``xsq`` array (the
 #: fused-rerank norms table) — v1 checkpoints of those indexes would load
 #: but fail at query time, so v1 is rejected with that explanation.
-CHECKPOINT_VERSION = 2
+#: v3: compressed-domain (``quantize=``) states carry ``codes``/
+#: ``codebooks`` leaves and the ``quant`` static descriptor; pre-quant v2
+#: metadata has no codec contract, so v2 is rejected with that explanation.
+CHECKPOINT_VERSION = 3
 
 #: multi-tenant archive format version (manifest + member layout).
 ARCHIVE_VERSION = 1
@@ -59,6 +62,11 @@ _VERSION_NOTES = {
     1: ("v1 pre-dates the cached xsq norms table: euclidean E2LSH/RPForest "
         "states would load but fail at query time; rebuild the index "
         "(Engine.build) and re-save"),
+    2: ("v2 pre-dates compressed-domain search: quantized (quantize=) "
+        "states carry codes/codebooks and a quant descriptor the v2 "
+        "metadata cannot express, so a PQ/int8 index restored from it "
+        "would search without its codec; rebuild the index (Engine.build) "
+        "and re-save"),
 }
 
 

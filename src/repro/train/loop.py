@@ -68,7 +68,7 @@ def make_accum_train_step(loss_fn: Callable, optimizer: Optimizer,
             mb = jax.tree.map(lambda x: x[0], batch)
             loss, grads = jax.value_and_grad(loss_fn)(params, mb)
         if compress:
-            from repro.dist.compression import compress_gradients
+            from repro.dist.grad_compression import compress_gradients
             grads, err_state = compress_gradients(grads, err_state,
                                                   mesh=mesh)
         params, opt_state = optimizer.update(grads, opt_state, params)

@@ -246,6 +246,40 @@ def test_grad_compression_error_feedback(values):
                                rtol=1e-3, atol=1e-2)
 
 
+adversarial_floats = st.one_of(
+    st.floats(min_value=-1e30, max_value=1e30, allow_nan=False, width=32),
+    st.just(float("nan")), st.just(float("inf")), st.just(float("-inf")),
+    st.just(0.0), st.just(-0.0), st.just(1e-45), st.just(-1e-45))
+
+
+@given(st.lists(st.lists(adversarial_floats, min_size=1, max_size=32),
+                min_size=2, max_size=4))
+def test_grad_compression_error_feedback_adversarial(steps):
+    """The invariant must survive hostile gradients: NaN/inf entries
+    (overflowed loss scales, dead replicas), all-zero tensors, and
+    denormals.  Non-finite entries carry no signal and are dropped — over
+    the SANITISED stream nothing is lost, and the residual stays finite
+    (a single NaN must not poison every later step)."""
+    from repro.dist.grad_compression import compress_gradients
+
+    width = max(len(s) for s in steps)
+    outs, want = [], np.zeros(width, np.float64)
+    err = {"w": jnp.zeros(width, jnp.float32)}
+    for s in steps:
+        raw = np.zeros(width, np.float32)
+        raw[:len(s)] = np.array(s, np.float32)
+        out, err = compress_gradients({"w": jnp.asarray(raw)}, err)
+        outs.append(np.asarray(out["w"]))
+        sane = np.where(np.isfinite(raw), raw, 0.0)
+        want += sane
+        assert np.isfinite(outs[-1]).all()
+        assert np.isfinite(np.asarray(err["w"])).all()
+    total = np.sum(outs, axis=0) + np.asarray(err["w"])
+    scale = np.maximum(np.abs(want), 1.0)
+    np.testing.assert_allclose(total / scale, want / scale,
+                               rtol=1e-3, atol=1e-2)
+
+
 @given(st.integers(2, 64), st.integers(1, 8))
 def test_recall_bounds(nq, k):
     from repro.core.metrics import RunRecord, recall

@@ -1,0 +1,328 @@
+"""Compressed-domain search: codec, ADC scan, and two-stage wiring tests.
+
+Covers the ISSUE 7 acceptance invariants:
+
+  * codec layer — ``normalize_quantize`` forms/errors, subspace split
+    padding, int8 reconstruction bound, LUT-sum == decoded distance;
+  * ADC scan — ids bit-identical across the jnp reference, the XLA
+    gather-fold, and the Pallas kernel (interpret mode), plus the
+    candidate-window variant's masking;
+  * two-stage search — BruteForce/IVF quantized builds, the traced
+    ``n_cand``/``max_cand`` pair (ONE trace, bit-parity with the static
+    path), ``keep_fp32=False`` memory mode, and checkpoint roundtrip.
+"""
+
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro.ann import functional
+from repro.ann.functional import get_functional, search_sweep
+from repro.kernels.adc_scan import adc_scan, adc_window_topk
+from repro.kernels.adc_scan.ref import adc_scan_ref
+from repro.quant import (build_luts, bytes_per_vector, decode,
+                         normalize_quantize, subspace_split, train_codec)
+
+K = 10
+
+
+@pytest.fixture(scope="module")
+def corpus():
+    rng = np.random.default_rng(3)
+    X = rng.standard_normal((400, 24)).astype(np.float32)
+    Q = rng.standard_normal((8, 24)).astype(np.float32)
+    return X, Q
+
+
+# --------------------------------------------------------------- codec layer
+
+def test_normalize_quantize_forms():
+    want = ("pq", {"m": 16, "bits": 8, "iters": 10, "seed": 0})
+    assert normalize_quantize("pq") == want
+    assert normalize_quantize({"pq": {}}) == want
+    assert normalize_quantize({"pq": {"m": 4}})[1]["m"] == 4
+    assert normalize_quantize(("pq", {"bits": 6}))[1]["bits"] == 6
+    assert normalize_quantize("int8") == ("int8", {})
+    assert normalize_quantize({"int8": {}}) == ("int8", {})
+
+
+def test_normalize_quantize_errors():
+    with pytest.raises(ValueError, match="unknown quantize codec 'zstd'"):
+        normalize_quantize("zstd")
+    with pytest.raises(ValueError, match="exactly one codec"):
+        normalize_quantize({"pq": {}, "int8": {}})
+    with pytest.raises(ValueError, match="unknown pq knob"):
+        normalize_quantize({"pq": {"centroids": 64}})
+    with pytest.raises(ValueError, match="int8 codec takes no knobs"):
+        normalize_quantize({"int8": {"m": 4}})
+    with pytest.raises(ValueError, match="out of range"):
+        normalize_quantize({"pq": {"bits": 0}})
+    with pytest.raises(ValueError, match="cannot parse quantize"):
+        normalize_quantize(42)
+
+
+def test_subspace_split_pads_to_multiple():
+    X = np.arange(12, dtype=np.float32).reshape(2, 6)
+    sub = subspace_split(X, 4)                       # dsub = ceil(6/4) = 2
+    assert sub.shape == (2, 4, 2)
+    np.testing.assert_array_equal(sub.reshape(2, 8)[:, :6], X)
+    np.testing.assert_array_equal(sub.reshape(2, 8)[:, 6:], 0.0)
+
+
+def test_int8_reconstruction_bound(corpus):
+    X, _ = corpus
+    arrays, static = train_codec(X, "int8", metric="euclidean")
+    assert static == ("int8", X.shape[1], 8)
+    assert arrays["codes"].dtype == jnp.uint8
+    rec = np.asarray(decode(arrays["codebooks"], arrays["codes"],
+                            d=X.shape[1]))
+    step = (X.max(0) - X.min(0)) / 255.0
+    assert np.all(np.abs(rec - X) <= step[None, :] * 0.51 + 1e-6)
+
+
+@pytest.mark.parametrize("metric", ["euclidean", "angular"])
+@pytest.mark.parametrize("quantize", [{"pq": {"m": 8, "bits": 6}}, "int8"])
+def test_lut_sum_is_exact_decoded_distance(corpus, metric, quantize):
+    """sum_j LUT[q, j, codes[i, j]] == the true distance between the query
+    and the DECODED vector — the property that makes the no-fp32 mode
+    'rerank against dequantized codes' by construction."""
+    X, Q = corpus
+    if metric == "angular":
+        X = X / np.linalg.norm(X, axis=1, keepdims=True)
+        Q = Q / np.linalg.norm(Q, axis=1, keepdims=True)
+    arrays, _ = train_codec(X, quantize, metric=metric)
+    luts = build_luts(arrays["codebooks"], jnp.asarray(Q), metric)
+    idx = jnp.asarray(arrays["codes"], jnp.int32)
+    got = np.asarray(jnp.take_along_axis(
+        luts, idx.T[None], axis=2).sum(axis=1))       # [b, n]
+    rec = np.asarray(decode(arrays["codebooks"], arrays["codes"],
+                            d=X.shape[1]))
+    if metric == "euclidean":
+        want = ((Q[:, None, :] - rec[None, :, :]) ** 2).sum(-1)
+    else:
+        want = 1.0 - Q @ rec.T
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+def test_bytes_per_vector():
+    assert bytes_per_vector(("pq", 8, 6)) == 8
+    assert bytes_per_vector(("int8", 24, 8)) == 24
+
+
+def test_train_codec_rejects_hamming(corpus):
+    with pytest.raises(ValueError, match="float metric"):
+        train_codec(corpus[0], "pq", metric="hamming")
+
+
+# ----------------------------------------------------------------- ADC scan
+
+@pytest.mark.parametrize("metric", ["euclidean", "angular"])
+@pytest.mark.parametrize("quantize", [{"pq": {"m": 8, "bits": 6}}, "int8"])
+def test_adc_ids_identical_ref_fold_kernel(corpus, metric, quantize):
+    """The contract every downstream parity claim rests on: ids are
+    bit-identical across the jnp reference, the blocked XLA gather-fold,
+    and the Pallas kernel (interpret mode)."""
+    X, Q = corpus
+    arrays, _ = train_codec(X, quantize, metric=metric)
+    luts = build_luts(arrays["codebooks"], jnp.asarray(Q), metric)
+    ref_d, ref_i = adc_scan_ref(arrays["codes"], luts, k=37)
+    fold_d, fold_i = adc_scan(arrays["codes"], luts, k=37, block=64)
+    kern_d, kern_i = adc_scan(arrays["codes"], luts, k=37, block=64,
+                              use_kernel=True, interpret=True)
+    np.testing.assert_array_equal(np.asarray(ref_i), np.asarray(fold_i))
+    np.testing.assert_array_equal(np.asarray(ref_i), np.asarray(kern_i))
+    np.testing.assert_allclose(np.asarray(ref_d), np.asarray(fold_d),
+                               rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(ref_d), np.asarray(kern_d),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_adc_window_masks_like_rerank(corpus):
+    """-1 candidates and a valid= mask produce (+inf, -1) padded rows,
+    never a real row — the rerank_topk masking contract."""
+    X, Q = corpus
+    arrays, _ = train_codec(X, {"pq": {"m": 8, "bits": 6}},
+                            metric="euclidean")
+    luts = build_luts(arrays["codebooks"], jnp.asarray(Q), "euclidean")
+    cand = np.tile(np.arange(20, dtype=np.int32), (Q.shape[0], 1))
+    cand[:, 15:] = -1
+    valid = np.ones_like(cand, bool)
+    valid[:, 10:] = False                  # only rows 0..9 survive
+    d, rows = adc_window_topk(arrays["codes"], luts,
+                              jnp.asarray(cand), k=12,
+                              valid=jnp.asarray(valid), block=8)
+    rows = np.asarray(rows)
+    assert rows.shape == (Q.shape[0], 12)
+    assert np.all(rows[:, 10:] == -1)      # 10 live candidates < k
+    assert np.all((rows[:, :10] >= 0) & (rows[:, :10] < 10))
+    assert np.all(np.isinf(np.asarray(d)[:, 10:]))
+
+
+# ----------------------------------------------------- two-stage search path
+
+@pytest.fixture(scope="module")
+def bf_pq(corpus):
+    X, _ = corpus
+    spec = get_functional("BruteForce")
+    return spec.build(X, metric="euclidean",
+                      quantize={"pq": {"m": 8, "bits": 6}})
+
+
+def test_bruteforce_traced_n_cand_parity_one_trace(corpus, bf_pq):
+    """ONE trace serves every n_cand under the cap, each traced result
+    bit-identical (ids) to the static n_cand path."""
+    _, Q = corpus
+    spec = get_functional("BruteForce")
+    jq = spec.jit_search(traced=("n_cand",))
+    functional.TRACE_COUNTS.clear()
+    for v in (10, 50, 200):
+        d, ids = jq(bf_pq, Q, k=K, n_cand=v, max_cand=200)
+        _, want = spec.search(bf_pq, Q, k=K, n_cand=v)
+        np.testing.assert_array_equal(np.asarray(ids)[:, :K],
+                                      np.asarray(want)[:, :K])
+    assert functional.TRACE_COUNTS["BruteForce"] == 1
+    functional.TRACE_COUNTS.clear()
+
+
+def test_bruteforce_sweep_rows_match_static(corpus, bf_pq):
+    _, Q = corpus
+    spec = get_functional("BruteForce")
+    functional.TRACE_COUNTS.clear()
+    _, ids = search_sweep(bf_pq, Q, k=K, knob_grid={"n_cand": (10, 50, 200)})
+    assert functional.TRACE_COUNTS["BruteForce"] == 1
+    for i, v in enumerate((10, 50, 200)):
+        _, want = spec.search(bf_pq, Q, k=K, n_cand=v)
+        np.testing.assert_array_equal(np.asarray(ids)[i, :, :K],
+                                      np.asarray(want)[:, :K])
+    functional.TRACE_COUNTS.clear()
+
+
+def test_bruteforce_full_depth_rerank_is_exact(corpus, bf_pq):
+    """n_cand=None reranks the WHOLE corpus in fp32: the answer must equal
+    the unquantized exact scan (compression cannot lose it)."""
+    X, Q = corpus
+    spec = get_functional("BruteForce")
+    exact = spec.build(X, metric="euclidean")
+    _, want = spec.search(exact, Q, k=K)
+    _, got = spec.search(bf_pq, Q, k=K)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_bruteforce_adc_kernel_end_to_end(corpus):
+    X, Q = corpus
+    spec = get_functional("BruteForce")
+    st_fold = spec.build(X, metric="euclidean", quantize="int8")
+    st_kern = spec.build(X, metric="euclidean", quantize="int8",
+                         adc_kernel=True)
+    _, a = spec.search(st_fold, Q, k=K, n_cand=50)
+    _, b = spec.search(st_kern, Q, k=K, n_cand=50)
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_keep_fp32_false_drops_corpus_and_searches(corpus):
+    X, Q = corpus
+    spec = get_functional("BruteForce")
+    st = spec.build(X, metric="euclidean",
+                    quantize={"pq": {"m": 8, "bits": 6}}, keep_fp32=False)
+    assert set(st.arrays) == {"codes", "codebooks"}
+    d, ids = spec.search(st, Q, k=K, n_cand=100)
+    assert np.asarray(ids).shape == (Q.shape[0], K)
+    assert np.all(np.asarray(ids) >= 0)
+    # compression actually happened: 8 code bytes vs 4 * 24 fp32 bytes
+    assert bytes_per_vector(st.stat("quant")) * 12 == 4 * X.shape[1]
+
+
+def test_ivf_quantized_full_depth_matches_unquantized(corpus):
+    """With the full candidate window reranked in fp32, the quantized IVF
+    visits the same lists and must return the same ids."""
+    X, Q = corpus
+    spec = get_functional("IVF")
+    plain = spec.build(X, metric="euclidean", n_clusters=16)
+    quant = spec.build(X, metric="euclidean", n_clusters=16,
+                       quantize={"pq": {"m": 8, "bits": 6}})
+    _, want = spec.search(plain, Q, k=K, n_probes=4)
+    _, got = spec.search(quant, Q, k=K, n_probes=4)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_ivf_traced_n_cand_parity(corpus):
+    X, Q = corpus
+    spec = get_functional("IVF")
+    st = spec.build(X, metric="euclidean", n_clusters=16, quantize="int8")
+    jq = spec.jit_search(traced=("n_cand",))
+    functional.TRACE_COUNTS.clear()
+    for v in (10, 40, 150):
+        _, ids = jq(st, Q, k=K, n_probes=4, n_cand=v, max_cand=150)
+        _, want = spec.search(st, Q, k=K, n_probes=4, n_cand=v)
+        np.testing.assert_array_equal(np.asarray(ids)[:, :K],
+                                      np.asarray(want)[:, :K])
+    assert functional.TRACE_COUNTS["IVF"] == 1
+    functional.TRACE_COUNTS.clear()
+
+
+def test_ivf_multiknob_sweep_with_n_cand(corpus):
+    """n_probes x n_cand cartesian grid in ONE trace, every combination
+    bit-identical to the static path."""
+    X, Q = corpus
+    spec = get_functional("IVF")
+    st = spec.build(X, metric="euclidean", n_clusters=16,
+                    quantize={"pq": {"m": 8, "bits": 6}})
+    grid = {"n_probes": (1, 4, 8), "n_cand": (10, 40, 120)}
+    functional.TRACE_COUNTS.clear()
+    _, ids = search_sweep(st, Q, k=K, knob_grid=grid)
+    assert functional.TRACE_COUNTS["IVF"] == 1
+    from repro.ann.functional import grid_combos
+    for i, combo in enumerate(grid_combos(grid)):
+        _, want = spec.search(st, Q, k=K, **combo)
+        w = np.asarray(want).shape[1]
+        np.testing.assert_array_equal(np.asarray(ids)[i, :, :w],
+                                      np.asarray(want), err_msg=str(combo))
+    functional.TRACE_COUNTS.clear()
+
+
+# ------------------------------------------------------------ error surface
+
+def test_quantize_validation_errors(corpus):
+    X, _ = corpus
+    spec = get_functional("BruteForce")
+    with pytest.raises(ValueError, match="streams packed codes"):
+        spec.build(X, metric="euclidean", quantize="int8",
+                   backend="pallas", streaming=True)
+    with pytest.raises(ValueError, match="build with quantize="):
+        spec.search(spec.build(X, metric="euclidean"), X[:2], k=3, n_cand=5)
+    with pytest.raises(ValueError, match="build with quantize="):
+        ivf = get_functional("IVF")
+        ivf.search(ivf.build(X, metric="euclidean", n_clusters=8),
+                   X[:2], k=3, n_cand=5)
+
+
+# --------------------------------------------------------------- checkpoint
+
+def test_engine_checkpoint_roundtrip_quantized(corpus, bf_pq, tmp_path):
+    """Quantized state (codes + codebooks + quant descriptor) survives the
+    serving checkpoint surface and searches identically after restore."""
+    from repro.serve import checkpoint as ckpt
+    from repro.serve.engine import Engine
+
+    _, Q = corpus
+    eng = Engine(bf_pq, k=K, query_params={"n_cand": 50})
+    path = tmp_path / "pq.ckpt"
+    eng.save(path)
+    restored = Engine.load(path)
+    assert restored.state.stat("quant") == bf_pq.stat("quant")
+    assert restored.query_params["n_cand"] == 50
+    _, want = eng.search(Q)
+    _, got = restored.search(Q)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+    # the no-fp32 layout persists too
+    X, _ = corpus
+    spec = get_functional("BruteForce")
+    lean = spec.build(X, metric="euclidean", quantize="int8",
+                      keep_fp32=False)
+    ckpt.save(tmp_path / "lean.ckpt", lean)
+    back, _ = ckpt.load(tmp_path / "lean.ckpt").only
+    assert set(back.arrays) == {"codes", "codebooks"}
+    _, a = spec.search(lean, Q, k=K, n_cand=40)
+    _, b = spec.search(back, Q, k=K, n_cand=40)
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))

@@ -253,7 +253,7 @@ def test_version_negotiation_messages(engine, tmp_path, monkeypatch):
     engine.save(v1)
     monkeypatch.undo()
     with pytest.raises(CheckpointError,
-                       match=r"version 1.*version 2.*xsq"):
+                       match=r"version 1.*version 3.*xsq"):
         Engine.load(v1)
     newer = tmp_path / "newer.ckpt"
     monkeypatch.setattr(ckpt, "CHECKPOINT_VERSION",
@@ -262,6 +262,33 @@ def test_version_negotiation_messages(engine, tmp_path, monkeypatch):
     monkeypatch.undo()
     with pytest.raises(CheckpointError, match="NEWER build"):
         Engine.load(newer)
+
+
+def test_pre_quant_checkpoint_of_pq_index_rejected(small_dataset, tmp_path,
+                                                   monkeypatch):
+    """A v2 (pre-quant) checkpoint of a PQ-enabled index is rejected with
+    the v2-specific explanation — distinct from both the v1 note and the
+    generic stale hint, and actionable (rebuild + re-save)."""
+    from repro.ann import bruteforce
+
+    state = bruteforce.build(small_dataset.train, metric="euclidean",
+                             quantize={"pq": {"m": 8, "bits": 6}})
+    v2 = tmp_path / "v2-pq.ckpt"
+    monkeypatch.setattr(ckpt, "CHECKPOINT_VERSION", 2)
+    ckpt.save(v2, state)
+    monkeypatch.undo()
+    with pytest.raises(CheckpointError,
+                       match=r"version 2.*version 3.*pre-dates "
+                             r"compressed-domain.*quantize=.*rebuild") as ei:
+        ckpt.load(v2)
+    assert "xsq" not in str(ei.value)       # not the v1 note
+    # and the same file at the current version round-trips the codec
+    v3 = tmp_path / "v3-pq.ckpt"
+    ckpt.save(v3, state)
+    restored, _ = ckpt.load(v3).only
+    assert restored.stat("quant") == state.stat("quant")
+    np.testing.assert_array_equal(np.asarray(restored["codes"]),
+                                  np.asarray(state["codes"]))
 
 
 def test_archive_version_mismatch_rejected(engine, tmp_path, monkeypatch):
@@ -301,6 +328,27 @@ def test_knobs_parse_grid():
         parse_grid(["n_probes="])
 
 
+def test_knobs_parse_build_quantize_forms():
+    from repro.launch.knobs import parse_build
+
+    nested = parse_build(["quantize=pq,m=8,bits=6", "n_clusters=50"])
+    assert nested == {"quantize": {"pq": {"m": 8, "bits": 6}},
+                      "n_clusters": 50}
+    assert parse_build(["quantize=int8"]) == {"quantize": {"int8": {}}}
+    # plain builds pass through untouched (HNSW's capital M is NOT a
+    # codec knob)
+    assert parse_build(["M=8", "ef_construction=40"]) == {
+        "M": 8, "ef_construction": 40}
+    with pytest.raises(SystemExit, match="need a quantize=<codec>"):
+        parse_build(["m=16,bits=8"])
+    with pytest.raises(SystemExit, match="unknown quantize codec 'zstd'"):
+        parse_build(["quantize=zstd"])
+    with pytest.raises(SystemExit, match="int8 codec takes no knobs"):
+        parse_build(["quantize=int8,m=4"])
+    with pytest.raises(SystemExit, match="out of range"):
+        parse_build(["quantize=pq,bits=12"])
+
+
 def test_knobs_shared_across_launchers():
     """serve and tune must parse knob strings through the SAME functions —
     identical semantics and identical error messages by construction."""
@@ -310,6 +358,22 @@ def test_knobs_shared_across_launchers():
     assert tune.parse_kv is knobs.parse_kv
     assert tune.parse_grid is knobs.parse_grid
     assert serve._kv is knobs.parse_kv             # pre-ISSUE-6 alias
+    assert serve.parse_build is knobs.parse_build  # quantize= CLI form
+    assert tune.parse_build is knobs.parse_build
+
+
+def test_quantize_cli_error_identical_across_launchers():
+    """The bad-codec message reaching a serve operator and a tune operator
+    is byte-identical (both raise through knobs.parse_build)."""
+    from repro.launch import serve, tune
+
+    msgs = []
+    for mod in (serve, tune):
+        with pytest.raises(SystemExit) as ei:
+            mod.parse_build(["quantize=zstd,m=16"])
+        msgs.append(str(ei.value))
+    assert msgs[0] == msgs[1]
+    assert "unknown quantize codec 'zstd'" in msgs[0]
 
 
 # --------------------------------------------------------------------------

@@ -31,6 +31,9 @@ from repro.ann.functional import (get_functional, grid_combos, search_sweep,
 # swept knob is the spec's FIRST traced pair; multi-knob grids over ALL
 # pairs are covered by MULTIKNOB_CASES below.
 SWEEP_CASES = {
+    "BruteForce": ("small_dataset",
+                   {"quantize": {"pq": {"m": 8, "bits": 6}}},
+                   (10, 40, 160), {}),
     "IVF": ("small_dataset", {"n_clusters": 30}, (1, 4, 12, 30), {}),
     "HNSW": ("small_dataset", {"M": 8, "ef_construction": 40},
              (16, 32, 64), {}),
