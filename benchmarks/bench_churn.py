@@ -1,0 +1,210 @@
+"""Streaming-churn benchmark (ISSUE 8 acceptance): a mutable index under
+steady-state insert/delete/search interleave must stay useful — not just
+correct — versus a frozen index of the same family.
+
+Three phases, one euclidean blobs corpus:
+
+  * **frozen baseline** — plain IVF over the full corpus; recall@10
+    against the exact oracle and closed-loop QPS over warm jitted
+    batches.  This is the bar the mutable index is judged against.
+  * **steady-state churn** — MutableIVF starts ``delta_capacity`` rows
+    short of the corpus, then runs a fixed-shape interleaved loop: each
+    iteration inserts a batch of fresh rows, tombstones the batch
+    inserted two iterations earlier (net live size ~constant), and
+    answers a query batch.  No compaction inside the loop — the delta
+    buffer absorbs the whole run.  Gates: interleaved QPS >= 0.5x the
+    frozen QPS at equal recall@10 (recall within 0.02 of frozen, each
+    against ITS OWN exact oracle), and ZERO retraces once warm —
+    ``functional.TRACE_COUNTS`` must not move during the measured loop
+    (inserts, deletes and searches all ride the warm fixed-shape
+    traces).
+  * **delta-fraction curve** — fresh build, then fill the delta buffer
+    in steps (0%, 25%, 50%, 75%, 100%) and record recall@10 + QPS at
+    each fill level: the delta scan is brute force, so this curve is the
+    empirical cost model behind the ``compact_threshold`` knob.
+
+    PYTHONPATH=src python benchmarks/bench_churn.py [--scale smoke|--smoke]
+
+Writes ``BENCH_churn.json`` (benchmarks/common.write_bench_json) and
+exits non-zero if any gate fails.
+"""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+try:
+    from benchmarks.common import Row, dataset_size, write_bench_json
+except ModuleNotFoundError:          # direct script invocation
+    import pathlib
+    import sys
+    sys.path.insert(0, str(pathlib.Path(__file__).resolve().parents[1]))
+    from benchmarks.common import Row, dataset_size, write_bench_json
+import jax
+
+from repro import mutate
+from repro.ann import bruteforce, ivf
+from repro.ann.functional import TRACE_COUNTS
+from repro.data import get_dataset
+from repro.mutate.delta import live_items
+
+K = 10
+QBATCH = 32
+INSERT_BATCH = 32
+N_PROBES = 8
+
+
+def _oracle_ids(X_live, gids, Q, metric):
+    """Exact top-K global ids over the CURRENT live corpus."""
+    st = bruteforce.build(np.asarray(X_live), metric=metric)
+    _, rows = bruteforce.search(st, Q, k=K)
+    return np.asarray(gids)[np.asarray(rows)]
+
+
+def _recall(pred_ids, true_ids):
+    hits = sum(len(set(p[:K].tolist()) & set(t.tolist()))
+               for p, t in zip(np.asarray(pred_ids), true_ids))
+    return hits / (len(true_ids) * K)
+
+
+def _qps(search_once, n_batches):
+    t0 = time.perf_counter()
+    for _ in range(n_batches):
+        out = search_once()
+    jax.block_until_ready(out)
+    return n_batches * QBATCH / (time.perf_counter() - t0)
+
+
+def _frozen_baseline(ds, n_clusters, n_batches):
+    state = ivf.build(ds.train, metric=ds.metric, n_clusters=n_clusters)
+    jq = ivf.SPEC.jit_search()
+    Q = ds.test[:QBATCH]
+    _, ids = jq(state, Q, k=K, n_probes=N_PROBES)         # warm trace
+    true = _oracle_ids(ds.train, np.arange(len(ds.train)), Q, ds.metric)
+    recall = _recall(ids, true)
+    qps = _qps(lambda: jq(state, Q, k=K, n_probes=N_PROBES)[1], n_batches)
+    return recall, qps
+
+
+def _churn_phase(ds, n_clusters, iters):
+    """Fixed-shape interleaved insert/delete/search; no mid-loop compact."""
+    cap = INSERT_BATCH * (iters + 2)       # warmup + measured loop headroom
+    n0 = len(ds.train) - cap
+    base, pool = ds.train[:n0], ds.train[n0:]
+    state = mutate.IVF_SPEC.build(base, metric=ds.metric,
+                                  n_clusters=n_clusters, delta_capacity=cap)
+    jq = mutate.IVF_SPEC.jit_search()
+    Q = ds.test[:QBATCH]
+
+    def step(i, prev_batches):
+        nonlocal state
+        rows = pool[(i * INSERT_BATCH) % cap:][:INSERT_BATCH]
+        state, new_ids = mutate.insert(state, rows)
+        prev_batches.append(np.asarray(new_ids))
+        if len(prev_batches) > 2:          # net live size ~constant
+            state = mutate.delete(state, prev_batches.pop(0))
+        return jq(state, Q, k=K, n_probes=N_PROBES)[1]
+
+    batches = []
+    jax.block_until_ready(step(0, batches))              # warm every trace
+    traces_before = dict(TRACE_COUNTS)
+    t0 = time.perf_counter()
+    for i in range(1, iters + 1):
+        ids = step(i, batches)
+    jax.block_until_ready(ids)
+    elapsed = time.perf_counter() - t0
+    zero_retraces = dict(TRACE_COUNTS) == traces_before
+
+    qps = iters * QBATCH / elapsed
+    gids, X_live = live_items(state)
+    recall = _recall(np.asarray(ids), _oracle_ids(X_live, gids, Q, ds.metric))
+    frac = mutate.delta_fraction(state)
+    return recall, qps, frac, zero_retraces
+
+
+def _delta_curve(ds, n_clusters, n_batches):
+    """recall@10 + QPS as the delta buffer fills: 0 -> 100% of capacity."""
+    cap = 4 * INSERT_BATCH
+    n0 = len(ds.train) - cap
+    state = mutate.IVF_SPEC.build(ds.train[:n0], metric=ds.metric,
+                                  n_clusters=n_clusters, delta_capacity=cap)
+    jq = mutate.IVF_SPEC.jit_search()
+    Q = ds.test[:QBATCH]
+    jax.block_until_ready(jq(state, Q, k=K, n_probes=N_PROBES))
+    rows = []
+    for step_i in range(5):                               # 0%,25%,...,100%
+        if step_i:
+            chunk = ds.train[n0 + (step_i - 1) * INSERT_BATCH:][:INSERT_BATCH]
+            state, _ = mutate.insert(state, chunk)
+        _, ids = jq(state, Q, k=K, n_probes=N_PROBES)
+        gids, X_live = live_items(state)
+        recall = _recall(np.asarray(ids),
+                         _oracle_ids(X_live, gids, Q, ds.metric))
+        qps = _qps(lambda: jq(state, Q, k=K, n_probes=N_PROBES)[1],
+                   n_batches)
+        frac = mutate.delta_fraction(state)
+        rows.append(Row(f"churn/curve/frac={frac:.2f}", 1e6 * QBATCH / qps,
+                        f"recall={recall:.3f};qps={qps:.0f};"
+                        f"delta_used={int(frac * cap)}"))
+    return rows
+
+
+def run(scale: str = "default"):
+    n = dataset_size(scale)
+    ds = get_dataset(f"blobs-euclidean-{n}")
+    n_clusters = 32 if scale == "smoke" else 64
+    iters = 8 if scale == "smoke" else 24
+    n_batches = 5 if scale == "smoke" else 20
+
+    frozen_recall, frozen_qps = _frozen_baseline(ds, n_clusters, n_batches)
+    mut_recall, mut_qps, frac, zero_retraces = _churn_phase(
+        ds, n_clusters, iters)
+    curve_rows = _delta_curve(ds, n_clusters, n_batches)
+
+    ratio = mut_qps / frozen_qps
+    gates = {
+        "interleaved_qps_ge_0.5x_frozen": ratio >= 0.5,
+        "equal_recall_at_10": mut_recall >= frozen_recall - 0.02,
+        "zero_retraces_steady_state": zero_retraces,
+    }
+    rows = [
+        Row("churn/frozen", 1e6 * QBATCH / frozen_qps,
+            f"recall={frozen_recall:.3f};qps={frozen_qps:.0f};"
+            f"n_probes={N_PROBES}"),
+        Row("churn/interleaved", 1e6 * QBATCH / mut_qps,
+            f"recall={mut_recall:.3f};qps={mut_qps:.0f};"
+            f"qps_ratio={ratio:.2f};delta_fraction={frac:.2f};"
+            f"insert_batch={INSERT_BATCH};iters={iters}"),
+    ] + curve_rows
+    rows.append(Row("churn/gates", 0.0,
+                    ";".join(f"{k}={'PASS' if v else 'FAIL'}"
+                             for k, v in gates.items())))
+    extra = {"gates": gates, "qps_ratio": ratio,
+             "frozen": {"recall": frozen_recall, "qps": frozen_qps},
+             "interleaved": {"recall": mut_recall, "qps": mut_qps},
+             "trace_counts": dict(TRACE_COUNTS)}
+    return rows, gates, extra
+
+
+if __name__ == "__main__":
+    import argparse
+
+    p = argparse.ArgumentParser()
+    p.add_argument("--scale", default="default",
+                   choices=["smoke", "default", "full"])
+    p.add_argument("--smoke", action="store_true",
+                   help="shorthand for --scale smoke (CI smoke lane)")
+    args = p.parse_args()
+    scale = "smoke" if args.smoke else args.scale
+    rows, gates, extra = run(scale)
+    print("name,us_per_call,derived")
+    for row in rows:
+        print(row.csv())
+    path = write_bench_json("churn", rows, scale=scale, extra=extra)
+    print(f"wrote {path}")
+    failed = [name for name, ok in gates.items() if not ok]
+    if failed:
+        raise SystemExit(f"churn gates FAILED: {failed}")
+    print(f"churn gates passed: {sorted(gates)}")

@@ -13,6 +13,11 @@ from repro.ann.hnsw import HNSW
 from repro.ann.hamming import (BitsamplingAnnoy, BruteForceHamming,
                                MultiIndexHashing)
 from repro.ann.sharded import ShardedBruteForce, ShardedIVF
+# the mutable (delta-buffered) variants live outside this package but
+# register through the same registries; a plain module import (no name
+# access — repro.mutate imports back into this package) keeps the cycle
+# resolvable from either entry point
+import repro.mutate  # noqa: E402,F401
 
 __all__ = [
     "distances", "topk", "BruteForce", "IVF", "RPForest", "HyperplaneLSH",

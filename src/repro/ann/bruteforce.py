@@ -24,7 +24,7 @@ import jax.numpy as jnp
 from repro.ann import distances as D
 from repro.ann.functional import (FunctionalSpec, IndexState, prepare_points,
                                   prepare_queries, register_functional)
-from repro.ann.topk import topk_smallest
+from repro.ann.topk import topk_smallest, topk_unique
 from repro.core.interface import FunctionalANN
 from repro.core.registry import register
 
@@ -89,10 +89,18 @@ def build(X: np.ndarray, *, metric: str = "euclidean",
     return IndexState("BruteForce", metric, arrays, static)
 
 
-def search(state: IndexState, Q, *, k: int, n_cand=None, max_cand=None):
+def search(state: IndexState, Q, *, k: int, n_cand=None, max_cand=None,
+           live=None, id_map=None):
     """Exact (dists [b, kk], ids [b, kk]) with kk = min(k, n).  Pure and
     jit/vmap/shard-friendly; the pallas backend runs the streaming fused
     kernel, the jnp backend materialises one [b, n] tile.
+
+    ``live`` ([n] bool) masks corpus rows out (tombstones: dead rows are
+    forced to (+inf, -1) so they cannot surface even on distance ties);
+    ``id_map`` ([n] int32) relabels row positions with external ids.
+    Either switches the select to the canonical (dist, id)-ascending
+    ``topk_unique`` over those ids — the contract the streaming-mutation
+    layer (:mod:`repro.mutate`) builds its bitwise-oracle guarantee on.
 
     Quantized builds (``quantize=`` at build time) run the two-stage
     compressed path instead — ADC scan over packed codes, then exact
@@ -111,6 +119,12 @@ def search(state: IndexState, Q, *, k: int, n_cand=None, max_cand=None):
     metric = state.metric
     n = state.stat("n")
     k = min(k, n)
+    masked = live is not None or id_map is not None
+    if masked and (state.static.get("quant") is not None
+                   or state.stat("backend") == "pallas"):
+        raise ValueError(
+            "live=/id_map= need the plain jnp fp32 path (the streaming "
+            "kernel and the ADC scan have no tombstone mask input)")
     if state.static.get("quant") is not None:
         return _search_quantized(state, Q, k=k, n_cand=n_cand,
                                  max_cand=max_cand)
@@ -129,7 +143,15 @@ def search(state: IndexState, Q, *, k: int, n_cand=None, max_cand=None):
         d = D.angular_matrix(Q, state["X"], normalized=False)
     else:
         d = D.hamming_matrix(Q, state["X"])
-    return topk_smallest(d, k)
+    if not masked:
+        return topk_smallest(d, k)
+    ids_row = (jnp.arange(n, dtype=jnp.int32) if id_map is None
+               else id_map.astype(jnp.int32))
+    d = d.astype(jnp.float32)
+    if live is not None:
+        d = jnp.where(live[None, :], d, jnp.inf)
+        ids_row = jnp.where(live, ids_row, -1)
+    return topk_unique(d, jnp.broadcast_to(ids_row[None, :], d.shape), k)
 
 
 def _search_quantized(state: IndexState, Q, *, k: int, n_cand, max_cand):

@@ -113,8 +113,14 @@ def build(X: np.ndarray, *, metric: str = "euclidean",
 def search(state: IndexState, Q, *, k: int, n_probes=1, scan=None,
            n_cand=None, max_probes: Optional[int] = None,
            max_scan: Optional[int] = None,
-           max_cand: Optional[int] = None):
+           max_cand: Optional[int] = None, live=None, id_map=None):
     """Q [b, d] -> (dists [b, kk], ids [b, kk]).  Fully jittable.
+
+    ``live`` ([n] bool, indexed by corpus row) folds tombstones into the
+    rerank's validity mask — dead rows can never surface, even on ties;
+    ``id_map`` ([n] int32) relabels corpus rows with external ids, and the
+    rerank's canonical unique select then orders by those external ids
+    (the :mod:`repro.mutate` bitwise-oracle contract).
 
     Three traced-capable query knobs:
 
@@ -144,6 +150,10 @@ def search(state: IndexState, Q, *, k: int, n_probes=1, scan=None,
     n = state.stat("n")
     pad = state.stat("pad")
     quant = state.static.get("quant")
+    if quant is not None and (live is not None or id_map is not None):
+        raise ValueError(
+            "live=/id_map= need the plain fp32 rerank path (the ADC scan "
+            "has no tombstone mask input)")
     if quant is None and (n_cand is not None or max_cand is not None):
         raise ValueError(
             "n_cand/max_cand are the compressed-domain rerank knobs; "
@@ -178,12 +188,18 @@ def search(state: IndexState, Q, *, k: int, n_probes=1, scan=None,
     if quant is not None:
         return _rerank_quantized(state, Q, cand, valid, k=k,
                                  n_cand=n_cand, max_cand=max_cand)
+    # tombstones: `live` is indexed by corpus row, the gather window by
+    # cluster-major position — translate through the ids permutation
+    if live is not None:
+        valid = valid & live[state["ids"]][cand]
+    rids = state["ids"] if id_map is None \
+        else id_map.astype(jnp.int32)[state["ids"]]
     # 3. exact distances on the candidate set: the shared streaming fold
     #    (optionally the fused Pallas kernel), probe/scan validity masks
     #    flowing in as the fold's mask input
     return rerank_topk(
         Q, state["X"], cand, k=k, metric=state.metric,
-        xsq=state.arrays.get("xsq"), row_ids=state["ids"], valid=valid,
+        xsq=state.arrays.get("xsq"), row_ids=rids, valid=valid,
         block=state.static.get("rerank_block"),
         use_kernel=bool(state.static.get("rerank_kernel", False)))
 

@@ -2,7 +2,7 @@
 it through the serving tier, reporting the paper's metrics (recall vs QPS)
 plus the serving tier's own (p50/p95/p99 latency, timeouts, rejections).
 
-Two modes:
+Three modes:
 
   * ``--mode batch`` (default) — the closed-loop micro-batch path: fixed
     request batches through ``Engine.search``, live recall/QPS per batch.
@@ -10,6 +10,11 @@ Two modes:
     to the :class:`~repro.serve.AsyncEngine` background pump (timeout
     flush, per-request deadlines, bounded-queue admission control), with
     latency percentiles from the serving histogram.
+  * ``--mode churn`` — interleaved streaming mutation: each iteration
+    inserts ``--churn-inserts`` rows, tombstones the batch from two
+    iterations back, and serves a query batch, with recall scored against
+    an exact oracle over the live corpus.  Needs a mutable algorithm
+    (``--algorithm MutableIVF`` / ``MutableBruteForce``).
 
     PYTHONPATH=src python -m repro.launch.serve --dataset blobs-euclidean-20000 \
         --algorithm IVF --build n_clusters=64 --query n_probes=8 \
@@ -117,6 +122,59 @@ def batch_loop(eng: Engine, ds, args) -> float:
     return agg
 
 
+def churn_loop(eng: Engine, ds, args) -> float:
+    """Interleaved insert/delete/search against a mutable index.
+
+    Each iteration inserts ``--churn-inserts`` rows (fresh ids), tombstones
+    the batch inserted two iterations earlier (net live size ~constant once
+    warm), then serves a query batch.  Recall is scored against an exact
+    oracle over the CURRENT live corpus — the dataset's precomputed ground
+    truth goes stale the moment the corpus mutates.  Compaction happens
+    through the Engine's own threshold policy; the count is reported.
+    """
+    from repro import mutate
+    from repro.ann import bruteforce
+
+    if not mutate.is_mutable(eng.state):
+        raise SystemExit(
+            f"[serve] --mode churn needs a mutable algorithm "
+            f"(--algorithm MutableIVF or MutableBruteForce); "
+            f"{eng.state.algo} is frozen")
+    rng = np.random.default_rng(0)
+    k = args.count
+    pending, recalls = [], []
+    total_q, total_t = 0, 0.0
+    for b in range(args.n_batches):
+        rows = ds.train[rng.integers(0, len(ds.train), args.churn_inserts)]
+        pending.append(np.asarray(eng.insert(rows)))
+        if len(pending) > 2:
+            eng.delete(pending.pop(0))
+        idx = rng.integers(0, len(ds.test), args.batch_size)
+        Q = ds.test[idx]
+        t0 = time.perf_counter()
+        _, ids = eng.search(Q)
+        dt = time.perf_counter() - t0
+        gids, X_live = mutate.live_items(eng.state)
+        st = bruteforce.build(np.asarray(X_live), metric=ds.metric)
+        _, orc = bruteforce.search(st, Q, k=k)
+        true = np.asarray(gids)[np.asarray(orc)]
+        hits = sum(len(set(p.tolist()) & set(t.tolist()))
+                   for p, t in zip(np.asarray(ids)[:, :k], true))
+        rec = hits / (len(Q) * k)
+        recalls.append(rec)
+        total_q += len(Q)
+        total_t += dt
+        print(f"  churn {b}: {len(Q) / dt:9.0f} QPS  recall@{k} = "
+              f"{rec:.3f}  live={mutate.live_count(eng.state)}  "
+              f"delta={mutate.delta_fraction(eng.state):.2f}")
+    agg = float(np.mean(recalls))
+    print(f"[serve] aggregate {total_q / total_t:.0f} QPS over "
+          f"{total_q} queries, mean recall@{k} = {agg:.3f}; "
+          f"inserts={eng.stats['inserts']} deletes={eng.stats['deletes']} "
+          f"compactions={eng.stats['compactions']}")
+    return agg
+
+
 def stream_loop(eng: Engine, ds, args) -> float:
     """Open-loop Poisson arrivals through the AsyncEngine pump."""
     k = args.count
@@ -174,8 +232,11 @@ def main(argv=None):
     p = argparse.ArgumentParser()
     p.add_argument("--dataset", default="blobs-euclidean-20000")
     p.add_argument("--algorithm", default="IVF")
-    p.add_argument("--mode", default="batch", choices=["batch", "stream"],
-                   help="closed-loop micro-batches vs open-loop async pump")
+    p.add_argument("--mode", default="batch",
+                   choices=["batch", "stream", "churn"],
+                   help="closed-loop micro-batches, open-loop async pump, "
+                        "or interleaved mutation (needs a Mutable* "
+                        "algorithm)")
     p.add_argument("--args", nargs="*", default=[],
                    help="legacy positional build args")
     p.add_argument("--query-args", nargs="*", default=[],
@@ -200,6 +261,10 @@ def main(argv=None):
                    help="per-request deadline; late answers time out")
     p.add_argument("--max-queue", type=int, default=1024,
                    help="admission bound: reject beyond this queue depth")
+    # churn-mode knobs
+    p.add_argument("--churn-inserts", type=int, default=32,
+                   help="rows inserted (and later deleted) per iteration "
+                        "in --mode churn")
     args = p.parse_args(argv)
 
     ds = get_dataset(args.dataset)
@@ -214,7 +279,8 @@ def main(argv=None):
         qparams.setdefault(name, value)
     eng.query_params.update(qparams)
 
-    loop = stream_loop if args.mode == "stream" else batch_loop
+    loop = {"batch": batch_loop, "stream": stream_loop,
+            "churn": churn_loop}[args.mode]
     agg = loop(eng, ds, args)
     if args.assert_recall is not None and \
             not agg >= args.assert_recall:

@@ -1,0 +1,16 @@
+"""Streaming index mutation: delta buffer + tombstones + compaction.
+
+See :mod:`repro.mutate.delta` for the design notes, and README
+"Streaming mutation" for the serving-level guarantees.
+"""
+
+from repro.mutate.delta import (BRUTEFORCE_SPEC, IVF_SPEC,  # noqa: F401
+                                MUTABLE_ALGOS, DeltaFull, MutableBruteForce,
+                                MutableIVF, compact, delete, delta_fraction,
+                                insert, is_mutable, live_count, live_items)
+
+__all__ = [
+    "BRUTEFORCE_SPEC", "IVF_SPEC", "MUTABLE_ALGOS", "DeltaFull",
+    "MutableBruteForce", "MutableIVF", "compact", "delete",
+    "delta_fraction", "insert", "is_mutable", "live_count", "live_items",
+]

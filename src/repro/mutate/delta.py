@@ -1,0 +1,491 @@
+"""Streaming index mutation: delta buffer + tombstones + compaction.
+
+The paper benchmarks frozen indexes; production corpora churn.  This
+module makes any supported main index *mutable* without giving up the
+functional core's contracts (pure jittable search, zero retraces across
+steady-state mutation, bitwise-canonical ids):
+
+  * **delta buffer** — inserts land in fixed-capacity preallocated device
+    arrays, so an append is a pure ``dynamic_update_slice`` under jit (the
+    buffer's shapes never change, hence no retrace).  At query time the
+    delta is brute-force scanned with the same distance expressions the
+    main index uses and merged with the main index's top-k through
+    :func:`repro.kernels.rerank_topk.merge_topk_unique_rounds` — the
+    unique-by-id merge, because a re-inserted id can transiently appear
+    in both operands and the plain ``merge_topk_rounds`` would emit it
+    twice.
+  * **tombstones** — deletes flip a validity bit on the main index
+    (``main_live``) and the delta (``delta_live``); deleted rows are
+    masked, never compacted out of the arrays, which is exactly the
+    traced validity-mask idiom the fused rerank's ``valid=`` contract
+    established (PR 5) — so a delete is a pure array update with zero
+    retraces.
+  * **compaction** — :func:`compact` rebuilds a fresh main index from the
+    live rows (main survivors + delta survivors) and returns a state with
+    an empty delta.  For a ``MutableBruteForce`` the rebuilt corpus is
+    padded back to the same slot count, so the serving trace survives the
+    swap untouched; a ``MutableIVF`` rebuild re-clusters (its ``pad``
+    static is data-dependent) and retraces once, by design.
+
+Canonical ids: every select in the pipeline — the main index's masked
+search, the delta scan's ``topk_unique``, and the final unique merge —
+orders by (distance, *global id*) ascending.  That is what makes the
+result bitwise-identical to a brute-force oracle rebuilt from the live
+rows, even under distance ties, and what guarantees a deleted id can
+never ride a tie back into the results.
+
+Global ids are stable across the index's lifetime: build rows get
+``0..n-1``, inserts allocate from ``next_id`` (or take explicit ids —
+re-inserting a live id upserts: the old copy is tombstoned in the same
+append).  ``main_ids`` maps the main index's build-input rows to global
+ids; compaction preserves ids, so checkpoints (v4) and oracles agree
+across the swap.
+
+Angular note: the raw (un-normalised) vectors are retained alongside the
+canonical ones (``main_raw``/``delta_raw``) because compaction must feed
+the rebuild *raw* rows — normalising an already-normalised vector is not
+bitwise idempotent, and the normalise-once pipeline is part of the
+bitwise-oracle contract.  Euclidean/hamming canonicalisation is a dtype
+cast (idempotent), so no raw copy is kept.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.ann import distances as D
+from repro.ann.functional import (FunctionalSpec, IndexState, get_functional,
+                                  prepare_points, prepare_queries,
+                                  register_functional)
+from repro.ann.topk import topk_unique
+from repro.core.interface import FunctionalANN
+from repro.core.registry import register
+from repro.kernels.rerank_topk import merge_topk_unique_rounds
+
+#: outer algo name per inner spec.
+MUTABLE_ALGOS = {"BruteForce": "MutableBruteForce", "IVF": "MutableIVF"}
+_INNER_OF = {v: k for k, v in MUTABLE_ALGOS.items()}
+
+
+class DeltaFull(RuntimeError):
+    """The delta buffer has no room for the requested insert; compact
+    (``mutate.compact`` / ``Engine.compact``) to fold the delta into the
+    main index, or rebuild with a larger ``delta_capacity``."""
+
+
+def is_mutable(state: IndexState) -> bool:
+    return state.algo in _INNER_OF
+
+
+def _require_mutable(state: IndexState, what: str) -> None:
+    if not is_mutable(state):
+        raise ValueError(
+            f"{what} needs a mutable index state (one of "
+            f"{sorted(_INNER_OF)}); got {state.algo!r} — build it through "
+            f"the Mutable* spec to get a delta buffer and tombstones")
+
+
+def _raw_dtype(metric: str):
+    return np.uint32 if metric == "hamming" else np.float32
+
+
+# --------------------------------------------------------------------------
+# build
+# --------------------------------------------------------------------------
+
+#: compaction/build indirection point: rebuilds the inner index.  Module
+#: level (not inlined) so crash tests can inject a mid-compaction death
+#: here — after the decision to compact, before the swapped state exists.
+def _inner_build(inner: str, X, metric: str, params: dict) -> IndexState:
+    return get_functional(inner).build(X, metric=metric, **dict(params))
+
+
+def _build_mutable(X, *, metric: str, inner: str,
+                   delta_capacity: int = 1024,
+                   compact_threshold: float = 0.75,
+                   **inner_params) -> IndexState:
+    """Wrap an inner build in the mutable (delta + tombstone) state."""
+    for bad in ("quantize", "streaming"):
+        if inner_params.get(bad):
+            raise ValueError(
+                f"{MUTABLE_ALGOS[inner]} does not support {bad}= (the delta "
+                f"scan and compaction paths need the plain fp32/uint32 "
+                f"corpus); build a frozen {inner} index for that")
+    if inner_params.get("backend") == "pallas":
+        raise ValueError(
+            "MutableBruteForce needs backend='jnp' (the streaming kernel "
+            "has no tombstone mask input yet)")
+    cap = int(delta_capacity)
+    if cap < 1:
+        raise ValueError(f"delta_capacity must be >= 1, got {delta_capacity}")
+    raw = np.asarray(X).astype(_raw_dtype(metric))
+    n, d = raw.shape
+    if inner == "BruteForce":
+        # headroom: pad the corpus with dead slots so a compaction after up
+        # to ``cap`` net inserts rebuilds into the SAME shapes (zero
+        # retraces across the swap)
+        feed = np.concatenate([raw, np.zeros((cap, d), raw.dtype)])
+        ids = np.concatenate([np.arange(n, dtype=np.int32),
+                              np.full(cap, -1, np.int32)])
+        live = np.concatenate([np.ones(n, bool), np.zeros(cap, bool)])
+    else:
+        # IVF: dead pad rows would pollute k-means, so the inner corpus is
+        # exactly the live set (compaction then retraces — documented)
+        feed, ids, live = raw, np.arange(n, dtype=np.int32), np.ones(n, bool)
+    inner_state = _inner_build(inner, feed, metric, inner_params)
+    cdt = jnp.uint32 if metric == "hamming" else jnp.float32
+    arrays = {
+        "main": inner_state,
+        "main_ids": jnp.asarray(ids),
+        "main_live": jnp.asarray(live),
+        "delta_x": jnp.zeros((cap, d), cdt),
+        "delta_ids": jnp.full((cap,), -1, jnp.int32),
+        "delta_live": jnp.zeros((cap,), bool),
+        "count": jnp.asarray(0, jnp.int32),
+        "next_id": jnp.asarray(n, jnp.int32),
+    }
+    if metric == "euclidean":
+        arrays["delta_xsq"] = jnp.zeros((cap,), jnp.float32)
+    if metric == "angular":
+        arrays["main_raw"] = jnp.asarray(feed)
+        arrays["delta_raw"] = jnp.zeros((cap, d), jnp.float32)
+    static = {
+        "inner": inner, "d": int(d), "delta_capacity": cap,
+        "compact_threshold": float(compact_threshold),
+        "build": dict(inner_params),
+    }
+    return IndexState(MUTABLE_ALGOS[inner], metric, arrays, static)
+
+
+def build_bruteforce(X, *, metric: str = "euclidean",
+                     delta_capacity: int = 1024,
+                     compact_threshold: float = 0.75,
+                     **inner_params) -> IndexState:
+    """Mutable exact index: brute-force main + delta buffer."""
+    return _build_mutable(X, metric=metric, inner="BruteForce",
+                          delta_capacity=delta_capacity,
+                          compact_threshold=compact_threshold, **inner_params)
+
+
+def build_ivf(X, *, metric: str = "euclidean", delta_capacity: int = 1024,
+              compact_threshold: float = 0.75,
+              **inner_params) -> IndexState:
+    """Mutable IVF: cluster-probed main + exact delta scan (fresh rows are
+    always found — the delta is scanned exhaustively until compaction
+    folds them into the inverted lists)."""
+    return _build_mutable(X, metric=metric, inner="IVF",
+                          delta_capacity=delta_capacity,
+                          compact_threshold=compact_threshold, **inner_params)
+
+
+# --------------------------------------------------------------------------
+# insert / delete: pure array updates under jit (no shape ever changes)
+# --------------------------------------------------------------------------
+
+@jax.jit
+def _append(arrs, Xc, Xraw, new_ids, start):
+    """Upsert ``m`` rows at delta slots [start, start+m).
+
+    ``arrs`` is the mutable leaf dict (delta + tombstone arrays only — the
+    main corpus rides through by reference, so an insert never copies it).
+    Colliding live copies of the incoming ids — in the main index or in
+    older delta slots — are tombstoned in the same traced step, which is
+    what keeps "one live copy per id" an invariant the merge can rely on.
+    """
+    m = new_ids.shape[0]
+    hit_main = (arrs["main_ids"][:, None] == new_ids[None, :]).any(axis=1)
+    hit_delta = (arrs["delta_ids"][:, None] == new_ids[None, :]).any(axis=1)
+    out = dict(arrs)
+    out["main_live"] = arrs["main_live"] & ~hit_main
+    dlive = arrs["delta_live"] & ~hit_delta
+    out["delta_x"] = jax.lax.dynamic_update_slice(arrs["delta_x"], Xc,
+                                                  (start, 0))
+    if "delta_xsq" in arrs:
+        xsq = jnp.sum(Xc.astype(jnp.float32) ** 2, axis=1)
+        out["delta_xsq"] = jax.lax.dynamic_update_slice(
+            arrs["delta_xsq"], xsq, (start,))
+    if "delta_raw" in arrs:
+        out["delta_raw"] = jax.lax.dynamic_update_slice(
+            arrs["delta_raw"], Xraw, (start, 0))
+    out["delta_ids"] = jax.lax.dynamic_update_slice(
+        arrs["delta_ids"], new_ids, (start,))
+    out["delta_live"] = jax.lax.dynamic_update_slice(
+        dlive, jnp.ones((m,), bool), (start,))
+    out["count"] = arrs["count"] + m
+    out["next_id"] = jnp.maximum(arrs["next_id"], jnp.max(new_ids) + 1)
+    return out
+
+
+@jax.jit
+def _tombstone(arrs, del_ids):
+    dead_main = (arrs["main_ids"][:, None] == del_ids[None, :]).any(axis=1)
+    dead_delta = (arrs["delta_ids"][:, None] == del_ids[None, :]).any(axis=1)
+    return {"main_live": arrs["main_live"] & ~dead_main,
+            "delta_live": arrs["delta_live"] & ~dead_delta}
+
+
+_MUTABLE_LEAVES = ("main_ids", "main_live", "delta_x", "delta_xsq",
+                   "delta_raw", "delta_ids", "delta_live", "count", "next_id")
+
+
+def _leaves(state: IndexState) -> dict:
+    return {k: state.arrays[k] for k in _MUTABLE_LEAVES
+            if k in state.arrays}
+
+
+def insert(state: IndexState, X_new, ids=None):
+    """Append rows to the delta buffer; returns ``(state', new_ids)``.
+
+    ``ids`` assigns explicit global ids (an id already live anywhere in
+    the index is upserted: the old copy is tombstoned); by default fresh
+    ids are allocated from ``next_id``.  Raises :class:`DeltaFull` when
+    the buffer cannot hold the batch — compact first.  One jit trace per
+    batch size ``m``; fixed-size insert batches keep serving trace-free.
+    """
+    _require_mutable(state, "insert()")
+    X_new = np.asarray(X_new)
+    if X_new.ndim == 1:
+        X_new = X_new[None, :]
+    m = X_new.shape[0]
+    cap = state.stat("delta_capacity")
+    used = int(state["count"])
+    if used + m > cap:
+        raise DeltaFull(
+            f"delta buffer holds {used}/{cap} rows; inserting {m} more "
+            f"overflows it — compact() the index (or build with a larger "
+            f"delta_capacity)")
+    if ids is None:
+        start_id = int(state["next_id"])
+        new_ids = np.arange(start_id, start_id + m, dtype=np.int32)
+    else:
+        new_ids = np.asarray(ids, np.int32).reshape(-1)
+        if new_ids.shape[0] != m:
+            raise ValueError(f"ids has {new_ids.shape[0]} entries for "
+                             f"{m} rows")
+        if len(np.unique(new_ids)) != m or (new_ids < 0).any():
+            raise ValueError("explicit ids must be unique and >= 0")
+    raw = X_new.astype(_raw_dtype(state.metric))
+    canon = prepare_points(raw, state.metric)
+    updated = _append(_leaves(state), jnp.asarray(canon), jnp.asarray(raw),
+                      jnp.asarray(new_ids), state["count"])
+    return state.replace(**updated), new_ids
+
+
+def delete(state: IndexState, ids) -> IndexState:
+    """Tombstone global ids everywhere (main + delta).  Idempotent: ids
+    that are absent (or already dead) are silently skipped — a delete is
+    a statement about the corpus, not a lookup."""
+    _require_mutable(state, "delete()")
+    del_ids = np.asarray(ids, np.int32).reshape(-1)
+    if del_ids.size == 0:
+        return state
+    updated = _tombstone(_leaves(state), jnp.asarray(del_ids))
+    return state.replace(**updated)
+
+
+# --------------------------------------------------------------------------
+# search: masked main + exact delta scan + unique merge
+# --------------------------------------------------------------------------
+
+def _delta_scan(state: IndexState, Qp, kk: int):
+    """Exact (dist, global id) top-k over live delta slots — the same
+    distance expressions the main index uses, dead slots forced to
+    (+inf, -1) so they can never surface (even on ties)."""
+    metric = state.metric
+    if metric == "euclidean":
+        dd = D.sq_l2_matrix(Qp, state["delta_x"], state["delta_xsq"])
+    elif metric == "angular":
+        dd = D.angular_matrix(Qp, state["delta_x"], normalized=False)
+    else:
+        dd = D.hamming_matrix(Qp, state["delta_x"])
+    live = state["delta_live"]
+    dd = jnp.where(live[None, :], dd.astype(jnp.float32), jnp.inf)
+    dids = jnp.where(live, state["delta_ids"], -1)
+    kd = min(kk, int(live.shape[0]))
+    return topk_unique(dd, jnp.broadcast_to(dids[None, :], dd.shape), kd)
+
+
+def _merged_search(state: IndexState, Q, *, k: int, knobs=None):
+    from repro.ann import bruteforce, ivf
+
+    inner = state["main"]
+    cap = state.stat("delta_capacity")
+    kk = min(int(k), inner.stat("n") + cap)
+    if state.stat("inner") == "BruteForce":
+        d1, g1 = bruteforce.search(inner, Q, k=kk, live=state["main_live"],
+                                   id_map=state["main_ids"])
+    else:
+        d1, g1 = ivf.search(inner, Q, k=kk, live=state["main_live"],
+                            id_map=state["main_ids"], **(knobs or {}))
+    d2, g2 = _delta_scan(state, prepare_queries(Q, state.metric), kk)
+    cd = jnp.concatenate([d1.astype(jnp.float32),
+                          d2.astype(jnp.float32)], axis=1)
+    ci = jnp.concatenate([g1, g2], axis=1).astype(jnp.int32)
+    # unique merge: a re-inserted id may appear in BOTH operands; the
+    # plain merge_topk_rounds would emit it twice (tests/test_kernels.py
+    # pins that failure mode)
+    return merge_topk_unique_rounds(cd, ci, kk)
+
+
+def search_bruteforce(state: IndexState, Q, *, k: int):
+    """Exact over the live set: masked main scan + delta scan, merged."""
+    return _merged_search(state, Q, k=k)
+
+
+def search_ivf(state: IndexState, Q, *, k: int, n_probes=1, scan=None,
+               max_probes=None, max_scan=None):
+    """IVF probe over the live main rows + exact delta scan, merged.
+    Same traced-knob treatment as the frozen IVF spec (``n_probes`` under
+    ``max_probes``, ``scan`` under ``max_scan``)."""
+    return _merged_search(state, Q, k=k,
+                          knobs=dict(n_probes=n_probes, scan=scan,
+                                     max_probes=max_probes,
+                                     max_scan=max_scan))
+
+
+# --------------------------------------------------------------------------
+# compaction
+# --------------------------------------------------------------------------
+
+def live_count(state: IndexState) -> int:
+    """Host-side count of live rows (main survivors + delta survivors)."""
+    _require_mutable(state, "live_count()")
+    return int(np.asarray(state["main_live"]).sum()
+               + np.asarray(state["delta_live"]).sum())
+
+
+def delta_fraction(state: IndexState) -> float:
+    """Occupied fraction of the delta buffer — the compaction pressure
+    gauge ``compact_threshold`` is compared against."""
+    _require_mutable(state, "delta_fraction()")
+    return int(state["count"]) / state.stat("delta_capacity")
+
+
+def live_items(state: IndexState):
+    """``(global_ids [L], raw_rows [L, d])`` of every live row, main rows
+    first (build-input order) then delta rows (slot order).  The rows are
+    the *raw* vectors — exactly what a fresh build (or the oracle) would
+    be fed."""
+    _require_mutable(state, "live_items()")
+    metric = state.metric
+    ids_m = np.asarray(state["main_ids"])
+    sel_m = np.asarray(state["main_live"]) & (ids_m >= 0)
+    if metric == "angular":
+        Xm = np.asarray(state["main_raw"])
+    elif state.stat("inner") == "BruteForce":
+        Xm = np.asarray(state["main"]["X"])
+    else:
+        # IVF stores the corpus cluster-major; undo the permutation so the
+        # gathered rows line up with main_ids (build-input order)
+        cm = np.asarray(state["main"]["X"])
+        rows = np.asarray(state["main"]["ids"])
+        Xm = np.empty_like(cm)
+        Xm[rows] = cm
+    sel_d = np.asarray(state["delta_live"])
+    Xd = np.asarray(state["delta_raw" if metric == "angular" else "delta_x"])
+    ids = np.concatenate([ids_m[sel_m], np.asarray(state["delta_ids"])[sel_d]])
+    X = np.concatenate([Xm[sel_m], Xd[sel_d]]).astype(_raw_dtype(metric))
+    return ids.astype(np.int32), X
+
+
+def compact(state: IndexState) -> IndexState:
+    """Rebuild the main index from the live rows; empty the delta.
+
+    The returned state answers every query identically to ``state`` (same
+    live set, same global ids, canonical select).  For MutableBruteForce
+    the rebuilt corpus is padded back to the previous slot count whenever
+    the live set fits, so the serving trace is reused as-is (zero
+    retraces across an Engine/AsyncEngine swap); if the live set outgrew
+    the slots, they grow by ``delta_capacity`` headroom and the next
+    search retraces once.  MutableIVF re-clusters (data-dependent ``pad``
+    static) and retraces once, by design.
+
+    Crash consistency: this function is pure — it builds the new state in
+    memory and returns it.  Persisting is the caller's move (atomic
+    tmp-rename in :mod:`repro.serve.checkpoint`), so a death anywhere in
+    here leaves the last checkpoint — delta, tombstones and all —
+    untouched (tests/test_mutate.py kills a child exactly here).
+    """
+    _require_mutable(state, "compact()")
+    metric = state.metric
+    inner_name = state.stat("inner")
+    cap = state.stat("delta_capacity")
+    ids, X = live_items(state)
+    L, d = X.shape[0], state.stat("d")
+    if inner_name == "BruteForce":
+        slots = state["main"].stat("n")
+        if L > slots:
+            slots = L + cap               # grow with headroom (retraces once)
+        pad = slots - L
+        feed = np.concatenate([X, np.zeros((pad, d), X.dtype)])
+        new_ids = np.concatenate([ids, np.full(pad, -1, np.int32)])
+        live = np.concatenate([np.ones(L, bool), np.zeros(pad, bool)])
+    else:
+        feed, new_ids, live = X, ids, np.ones(L, bool)
+    new_inner = _inner_build(inner_name, feed, metric,
+                             dict(state.stat("build")))
+    cdt = jnp.uint32 if metric == "hamming" else jnp.float32
+    arrays = {
+        "main": new_inner,
+        "main_ids": jnp.asarray(new_ids.astype(np.int32)),
+        "main_live": jnp.asarray(live),
+        "delta_x": jnp.zeros((cap, d), cdt),
+        "delta_ids": jnp.full((cap,), -1, jnp.int32),
+        "delta_live": jnp.zeros((cap,), bool),
+        "count": jnp.asarray(0, jnp.int32),
+        "next_id": state["next_id"],
+    }
+    if metric == "euclidean":
+        arrays["delta_xsq"] = jnp.zeros((cap,), jnp.float32)
+    if metric == "angular":
+        arrays["main_raw"] = jnp.asarray(feed)
+        arrays["delta_raw"] = jnp.zeros((cap, d), jnp.float32)
+    return IndexState(state.algo, metric, arrays, state.static)
+
+
+# --------------------------------------------------------------------------
+# registration: functional specs + legacy adapter classes
+# --------------------------------------------------------------------------
+
+BRUTEFORCE_SPEC = register_functional(FunctionalSpec(
+    name="MutableBruteForce", build=build_bruteforce,
+    search=search_bruteforce,
+    supported_metrics=("euclidean", "angular", "hamming"),
+))
+
+IVF_SPEC = register_functional(FunctionalSpec(
+    name="MutableIVF", build=build_ivf, search=search_ivf,
+    query_params=("n_probes", "scan", "max_probes", "max_scan"),
+    query_defaults=(1, None, None, None),
+    static_query_params=("n_probes", "scan", "max_probes", "max_scan"),
+    supported_metrics=("euclidean", "angular"),
+    traced_knobs=(("n_probes", "max_probes"), ("scan", "max_scan")),
+))
+
+
+@register("MutableBruteForce")
+class MutableBruteForce(FunctionalANN):
+    supported_metrics = ("euclidean", "angular", "hamming")
+
+    def __init__(self, metric: str, delta_capacity: int = 1024,
+                 compact_threshold: float = 0.75, **inner_params):
+        super().__init__(metric, build_params=dict(
+            delta_capacity=int(delta_capacity),
+            compact_threshold=float(compact_threshold), **inner_params))
+        self.name = f"MutableBruteForce(cap={int(delta_capacity)})"
+
+
+@register("MutableIVF")
+class MutableIVF(FunctionalANN):
+    supported_metrics = ("euclidean", "angular")
+
+    def __init__(self, metric: str, n_clusters: int = 100,
+                 delta_capacity: int = 1024,
+                 compact_threshold: float = 0.75, **inner_params):
+        super().__init__(metric, build_params=dict(
+            n_clusters=int(n_clusters), delta_capacity=int(delta_capacity),
+            compact_threshold=float(compact_threshold), **inner_params))
+        self.name = (f"MutableIVF(C={int(n_clusters)}, "
+                     f"cap={int(delta_capacity)})")

@@ -324,6 +324,30 @@ class AsyncEngine:
             self.metrics.count("served", tenant=r.tenant)
             self.metrics.observe(done - r.ticket._submitted, tenant=r.tenant)
 
+    # ------------------------------------------------------------- mutation
+    # Thin passthroughs to the tenant Engine's mutation surface.  They are
+    # pump-safe by construction: Engine mutations swap ``eng.state`` with
+    # one attribute write and ``_serve`` reads it exactly once per
+    # micro-batch (via ``eng._run_padded``), so a compaction racing the
+    # pump resolves every admitted ticket against either the old or the
+    # new state — never an error, never a dropped ticket
+    # (tests/test_serving.py hammers submit() against compact()).
+
+    def insert(self, X_new, ids=None, *, tenant: Optional[str] = None,
+               **kwargs):
+        """Append rows to a tenant's mutable index (delta-buffer write)."""
+        return self.engines[self._resolve_tenant(tenant)].insert(
+            X_new, ids, **kwargs)
+
+    def delete(self, ids, *, tenant: Optional[str] = None) -> None:
+        """Tombstone global ids on a tenant's mutable index."""
+        self.engines[self._resolve_tenant(tenant)].delete(ids)
+
+    def compact(self, *, tenant: Optional[str] = None) -> None:
+        """Compact a tenant's mutable index and hot-swap it under the
+        pump without dropping in-flight tickets."""
+        self.engines[self._resolve_tenant(tenant)].compact()
+
     # ---------------------------------------------------------- checkpoints
     def save(self, path):
         """Checkpoint ALL resident tenants into one archive file."""

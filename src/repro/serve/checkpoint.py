@@ -48,7 +48,10 @@ from repro.ann.functional import IndexState
 #: v3: compressed-domain (``quantize=``) states carry ``codes``/
 #: ``codebooks`` leaves and the ``quant`` static descriptor; pre-quant v2
 #: metadata has no codec contract, so v2 is rejected with that explanation.
-CHECKPOINT_VERSION = 3
+#: v4: streaming-mutation (Mutable*) states nest a whole inner IndexState
+#: under the ``main`` leaf plus delta-buffer/tombstone arrays; the v3
+#: array layout is flat-only, so v3 is rejected with that explanation.
+CHECKPOINT_VERSION = 4
 
 #: multi-tenant archive format version (manifest + member layout).
 ARCHIVE_VERSION = 1
@@ -66,6 +69,11 @@ _VERSION_NOTES = {
         "states carry codes/codebooks and a quant descriptor the v2 "
         "metadata cannot express, so a PQ/int8 index restored from it "
         "would search without its codec; rebuild the index (Engine.build) "
+        "and re-save"),
+    3: ("v3 pre-dates streaming mutation: mutable (Mutable*) states nest "
+        "an inner IndexState plus delta-buffer and tombstone leaves the "
+        "flat v3 layout cannot express — pending inserts would be lost "
+        "and deleted rows resurrected; rebuild the index (Engine.build) "
         "and re-save"),
 }
 
@@ -96,30 +104,53 @@ class CheckpointContents(Dict[str, Tuple[IndexState, dict]]):
 # single-state format: IndexState <-> npz bytes
 # --------------------------------------------------------------------------
 
-def _flatten_arrays(arrays: Dict[str, Any]):
-    """name -> array | tuple-of-arrays  ==>  flat {key: np.ndarray}."""
+def _flatten_arrays(arrays: Dict[str, Any], prefix: str = ""):
+    """name -> array | tuple-of-arrays | IndexState  ==>  flat {key: np}.
+
+    A nested :class:`IndexState` value (the mutable indexes' ``main``
+    leaf, v4) recurses with a ``name::`` key prefix; its layout entry
+    records everything needed to rebuild it (algo/metric/static +
+    sub-layout), so arbitrary nesting round-trips.
+    """
     flat: Dict[str, np.ndarray] = {}
     layout: Dict[str, Any] = {}
     for name in sorted(arrays):
         value = arrays[name]
-        if isinstance(value, (tuple, list)):
+        if isinstance(value, IndexState):
+            sub_flat, sub_layout = _flatten_arrays(
+                value.arrays, prefix=f"{prefix}{name}::")
+            flat.update(sub_flat)
+            layout[name] = {"state": {
+                "algo": value.algo, "metric": value.metric,
+                "static": {k: _jsonable(v) for k, v in value.static.items()},
+                "layout": sub_layout,
+            }}
+        elif isinstance(value, (tuple, list)):
             layout[name] = len(value)
             for i, leaf in enumerate(value):
-                flat[f"{name}:{i}"] = np.asarray(leaf)
+                flat[f"{prefix}{name}:{i}"] = np.asarray(leaf)
         else:
             layout[name] = None
-            flat[name] = np.asarray(value)
+            flat[f"{prefix}{name}"] = np.asarray(value)
     return flat, layout
 
 
-def _unflatten_arrays(npz, layout: Dict[str, Any]):
+def _unflatten_arrays(npz, layout: Dict[str, Any], prefix: str = ""):
     arrays: Dict[str, Any] = {}
-    for name, length in layout.items():
-        if length is None:
-            arrays[name] = jnp.asarray(npz[name])
+    for name, entry in layout.items():
+        if isinstance(entry, dict):
+            sub = entry["state"]
+            arrays[name] = IndexState(
+                sub["algo"], sub["metric"],
+                _unflatten_arrays(npz, sub["layout"],
+                                  prefix=f"{prefix}{name}::"),
+                {k: _unjsonable(v) for k, v in sub["static"].items()})
+        elif entry is None:
+            arrays[name] = jnp.asarray(npz[f"{prefix}{name}"])
         else:
             arrays[name] = tuple(
-                jnp.asarray(npz[f"{name}:{i}"]) for i in range(length))
+                jnp.asarray(npz[f"{prefix}{name}:{i}"])
+                for i in range(entry))
     return arrays
 
 

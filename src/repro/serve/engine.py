@@ -179,8 +179,13 @@ class Engine:
         self._pending: list = []    # (Ticket, np.ndarray [d], key, overrides)
         self._results: Dict[int, Ticket] = {}   # legacy result() buffer
         self._next_ticket = 0
+        # serialises insert/delete/compact; the serving path never takes it
+        # (state swaps are a single attribute write, _run_padded reads
+        # self.state exactly once per batch)
+        self._mutate_lock = threading.Lock()
         self.stats = {"queries": 0, "batches": 0, "padded": 0,
-                      "device_time_s": 0.0}
+                      "device_time_s": 0.0, "inserts": 0, "deletes": 0,
+                      "compactions": 0}
 
     # ---------------------------------------------------------- constructors
     @classmethod
@@ -280,6 +285,65 @@ class Engine:
             ids_out.append(np.asarray(ids[:live]))
             dists_out.append(np.asarray(dists[:live]))
         return np.concatenate(dists_out), np.concatenate(ids_out)
+
+    # ------------------------------------------------------------- mutation
+    # All three swap ``self.state`` with a single attribute write — the
+    # serving path (_run_padded, and AsyncEngine's pump through it) reads
+    # the attribute exactly once per micro-batch, so a concurrent query
+    # sees either the old state or the new one, never a mix, and no ticket
+    # is ever dropped.  Mutations serialise on ``_mutate_lock``.
+
+    def insert(self, X_new, ids=None, *, auto_compact: bool = True):
+        """Append rows to a mutable index (delta-buffer write, no retrace).
+
+        Returns the assigned global ids.  With ``auto_compact`` (default)
+        a full delta buffer — or one past the state's
+        ``compact_threshold`` occupancy after the insert — triggers
+        :meth:`compact` inline; with ``auto_compact=False`` a full buffer
+        raises :class:`~repro.mutate.DeltaFull` for the caller to handle
+        (e.g. to schedule compaction off the request path).
+        """
+        from repro import mutate
+
+        with self._mutate_lock:
+            try:
+                state, new_ids = mutate.insert(self.state, X_new, ids)
+            except mutate.DeltaFull:
+                if not auto_compact:
+                    raise
+                self.state = mutate.compact(self.state)
+                self.stats["compactions"] += 1
+                state, new_ids = mutate.insert(self.state, X_new, ids)
+            self.state = state
+            self.stats["inserts"] += len(new_ids)
+            if auto_compact and mutate.delta_fraction(state) \
+                    >= state.stat("compact_threshold"):
+                self.state = mutate.compact(self.state)
+                self.stats["compactions"] += 1
+        return new_ids
+
+    def delete(self, ids) -> None:
+        """Tombstone global ids (masked, not compacted — zero retraces)."""
+        from repro import mutate
+
+        with self._mutate_lock:
+            self.state = mutate.delete(self.state, ids)
+            self.stats["deletes"] += int(np.asarray(ids).reshape(-1).size)
+
+    def compact(self) -> None:
+        """Fold the delta into a fresh main index and hot-swap it in.
+
+        In-flight and concurrently submitted requests are never dropped:
+        the rebuild happens off to the side and the swap is one attribute
+        write (see the section comment).  MutableBruteForce swaps preserve
+        the serving trace (same shapes); MutableIVF re-clusters and
+        retraces once.
+        """
+        from repro import mutate
+
+        with self._mutate_lock:
+            self.state = mutate.compact(self.state)
+            self.stats["compactions"] += 1
 
     # ------------------------------------------------------- request stream
     def submit(self, q, *, deadline_ms: Optional[float] = None,

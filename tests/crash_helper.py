@@ -13,6 +13,29 @@ import numpy as np
 from repro.core.interface import BaseANN
 
 
+def exit_mid_compact(ckpt_path: str, exit_code: int = 7) -> None:
+    """Child-process body for the mid-compaction crash test: load a v4
+    mutable checkpoint, start ``mutate.compact`` on it, and die with a
+    hard process exit at the worst possible moment — after compaction has
+    decided what to rebuild, before the rebuilt state exists (the
+    ``_inner_build`` indirection point).  Nothing is saved, so the
+    on-disk checkpoint must still be the consistent pre-compaction
+    snapshot.
+    """
+    from repro import mutate
+    from repro.mutate import delta
+    from repro.serve import checkpoint
+
+    state, _ = checkpoint.load(ckpt_path).only
+
+    def die(*args, **kwargs):
+        os._exit(int(exit_code))
+
+    delta._inner_build = die
+    mutate.compact(state)
+    raise AssertionError("compact() returned without hitting _inner_build")
+
+
 class ExitInFit(BaseANN):
     """Dies like an OOM-killed container: hard process exit mid-fit, no
     exception, nothing sent back over the result pipe."""

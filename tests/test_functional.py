@@ -42,6 +42,9 @@ CASES = {
                           {"radius": 1}),
     "ShardedBruteForce": ("small_dataset", {}, {}),
     "ShardedIVF": ("small_dataset", {"n_clusters": 30}, {"n_probes": 5}),
+    "MutableBruteForce": ("small_dataset", {"delta_capacity": 64}, {}),
+    "MutableIVF": ("small_dataset", {"n_clusters": 30, "delta_capacity": 64},
+                   {"n_probes": 5}),
 }
 
 

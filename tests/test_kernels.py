@@ -212,3 +212,36 @@ def test_decode_attn_kernel(B, H, KV, S, dh):
         jnp.asarray(qg), jnp.asarray(k), jnp.asarray(v)).reshape(B, H, dh)
     np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
                                rtol=1e-5, atol=1e-5)
+
+
+# --------------------------------------------- top-k merge: duplicate ids
+def test_merge_topk_rounds_emits_duplicates_unique_variant_does_not():
+    """Regression pin for the streaming-mutation merge: when the SAME id
+    appears in both merge operands (main index + delta overlap after a
+    re-insert), the plain positional ``merge_topk_rounds`` emits it twice
+    — one result slot per copy — while ``merge_topk_unique_rounds``
+    retires every copy of a selected id and matches the canonical
+    ``topk_unique`` contract exactly.  This is why repro.mutate routes
+    its main+delta merge through the unique variant."""
+    from repro.ann.topk import topk_unique
+    from repro.kernels.distance_topk.distance_topk import merge_topk_rounds
+    from repro.kernels.rerank_topk import merge_topk_unique_rounds
+
+    # id 7 in both operands (best copy first), plus a distance TIE between
+    # the two copies of id 5 — ties must retire together, not fill 2 slots
+    cand_d = jnp.asarray([[1.0, 2.0, 1.0, 3.0, 4.0, 4.0]], jnp.float32)
+    cand_i = jnp.asarray([[7, 3, 7, 9, 5, 5]], jnp.int32)
+
+    dup_d, dup_i = merge_topk_rounds(cand_d, cand_i, 3)
+    assert np.asarray(dup_i).tolist() == [[7, 7, 3]]      # the bug, pinned
+
+    uniq_d, uniq_i = merge_topk_unique_rounds(cand_d, cand_i, 3)
+    want_d, want_i = topk_unique(cand_d, cand_i, 3)
+    np.testing.assert_array_equal(np.asarray(uniq_i), np.asarray(want_i))
+    np.testing.assert_array_equal(np.asarray(uniq_d), np.asarray(want_d))
+    assert np.asarray(uniq_i).tolist() == [[7, 3, 9]]
+
+    # wider than the distinct-id count: unique pads with (+inf, -1)
+    pad_d, pad_i = merge_topk_unique_rounds(cand_d, cand_i, 6)
+    assert np.asarray(pad_i).tolist() == [[7, 3, 9, 5, -1, -1]]
+    assert np.isinf(np.asarray(pad_d)[0, 4:]).all()

@@ -1,0 +1,433 @@
+"""Streaming mutation (repro.mutate): churn oracle property, tombstone
+semantics, zero-retrace guarantees, checkpoint v4, crash recovery.
+
+The load-bearing invariant: after ANY interleaved insert/delete stream,
+search ids are bitwise-identical to a fresh brute-force build over the
+live rows, selected canonically by (distance, global id) — so deleted ids
+can never appear, even under exact distance ties.  Test vectors are drawn
+from small integer grids, which makes every float operation exact and
+order-independent: bitwise-id assertions are then robust rather than
+luck-of-the-ulp.
+"""
+
+import os
+import subprocess
+import sys
+from pathlib import Path
+
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro import mutate
+from repro.ann import bruteforce
+from repro.ann.functional import TRACE_COUNTS
+
+SRC = str(Path(__file__).resolve().parents[1] / "src")
+TESTS = str(Path(__file__).resolve().parent)
+
+METRICS = ("euclidean", "angular", "hamming")
+
+
+def _vectors(rng, m, d, metric):
+    """Exact-arithmetic test rows: small-integer floats (every distance
+    expression is then exact in fp32) or packed uint32 words."""
+    if metric == "hamming":
+        return rng.integers(0, 2**31, size=(m, d),
+                            dtype=np.int64).astype(np.uint32)
+    return rng.integers(-8, 8, size=(m, d)).astype(np.float32)
+
+
+def _oracle(state, Q, k):
+    """The ground truth the churn property compares against: a FRESH
+    brute-force index over the live rows, selected canonically on the
+    global ids."""
+    gids, rows = mutate.live_items(state)
+    ost = bruteforce.build(rows, metric=state.metric)
+    return bruteforce.search(ost, Q, k=k,
+                             live=jnp.ones(len(gids), bool),
+                             id_map=jnp.asarray(gids))
+
+
+def _assert_matches_oracle(state, Q, k, **knobs):
+    od, oi = _oracle(state, Q, k)
+    spec = (mutate.BRUTEFORCE_SPEC if state.algo == "MutableBruteForce"
+            else mutate.IVF_SPEC)
+    d, i = spec.search(state, Q, k=k, **knobs)
+    oi, i = np.asarray(oi), np.asarray(i)
+    # widths may differ when the live set is smaller than k: the mutable
+    # path pads to min(k, slots + capacity), the oracle to min(k, live)
+    w = oi.shape[1]
+    assert np.array_equal(i[:, :w], oi), (i[:2], oi[:2])
+    assert (i[:, w:] == -1).all()
+    np.testing.assert_array_equal(np.asarray(d)[:, :w], np.asarray(od))
+
+
+def _exhaustive_knobs(state):
+    if state.algo == "MutableIVF":
+        return {"n_probes": state["main"].stat("n_clusters")}
+    return {}
+
+
+# --------------------------------------------------------------------------
+# scripted churn streams (deterministic; the hypothesis sweep is below)
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("metric", METRICS)
+def test_churn_stream_matches_oracle(metric):
+    """Interleaved insert/delete stream, oracle-checked after EVERY op."""
+    rng = np.random.default_rng(3)
+    d = 8 if metric == "hamming" else 16
+    X = _vectors(rng, 40, d, metric)
+    Q = _vectors(rng, 9, d, metric)
+    st = mutate.BRUTEFORCE_SPEC.build(X, metric=metric, delta_capacity=32)
+    script = [
+        ("insert", 5), ("delete", [0, 1, 41]), ("insert", 3),
+        ("delete", [43, 44, 7, 7]), ("insert", 1), ("compact", None),
+        ("insert", 4), ("delete", [10, 48]),
+    ]
+    for op, arg in script:
+        if op == "insert":
+            st, _ = mutate.insert(st, _vectors(rng, arg, d, metric))
+        elif op == "delete":
+            st = mutate.delete(st, arg)
+        else:
+            st = mutate.compact(st)
+        _assert_matches_oracle(st, Q, 10)
+
+
+@pytest.mark.parametrize("metric", METRICS)
+def test_deleted_ids_never_appear_under_exact_ties(metric):
+    """Duplicate rows tie EXACTLY; deleting one copy must not let the
+    tombstoned id ride the tie back in (canonical-id select, not
+    positional)."""
+    rng = np.random.default_rng(5)
+    d = 4 if metric == "hamming" else 8
+    base = _vectors(rng, 10, d, metric)
+    X = np.concatenate([base, base])          # ids 0..9 == ids 10..19
+    st = mutate.BRUTEFORCE_SPEC.build(X, metric=metric, delta_capacity=8)
+    st, _ = mutate.insert(st, base[:4])       # ids 20..23: third copies
+    st = mutate.delete(st, [0, 10, 21, 3])
+    _, ids = mutate.BRUTEFORCE_SPEC.search(st, base, k=20)
+    ids = np.asarray(ids)
+    assert not np.isin(ids, [0, 10, 21, 3]).any()
+    # the surviving exact copies DO appear, smallest id first among ties
+    assert 20 in ids[0] and 11 in ids[1]
+    _assert_matches_oracle(st, base, 20)
+
+
+def test_mutable_ivf_churn_matches_oracle_exhaustive():
+    """MutableIVF probing every list == exact over live rows, bitwise."""
+    rng = np.random.default_rng(11)
+    X = _vectors(rng, 60, 12, "euclidean")
+    Q = _vectors(rng, 7, 12, "euclidean")
+    st = mutate.IVF_SPEC.build(X, metric="euclidean", n_clusters=6,
+                               delta_capacity=16)
+    st, _ = mutate.insert(st, _vectors(rng, 6, 12, "euclidean"))
+    st = mutate.delete(st, [0, 5, 62])
+    _assert_matches_oracle(st, Q, 10, **_exhaustive_knobs(st))
+    st = mutate.compact(st)                   # re-clusters the live set
+    _assert_matches_oracle(st, Q, 10, **_exhaustive_knobs(st))
+
+
+def test_upsert_tombstones_the_old_copy():
+    rng = np.random.default_rng(2)
+    X = _vectors(rng, 20, 8, "euclidean")
+    st = mutate.BRUTEFORCE_SPEC.build(X, metric="euclidean",
+                                      delta_capacity=8)
+    moved = X[3:4] + 64.0
+    st, ids = mutate.insert(st, moved, ids=[3])
+    assert list(ids) == [3]
+    gids, rows = mutate.live_items(st)
+    assert (gids == 3).sum() == 1 and len(gids) == 20
+    np.testing.assert_array_equal(rows[gids == 3], moved)
+    # re-upsert while the id lives in the DELTA: still exactly one copy
+    st, _ = mutate.insert(st, X[3:4], ids=[3])
+    gids, rows = mutate.live_items(st)
+    assert (gids == 3).sum() == 1
+    np.testing.assert_array_equal(rows[gids == 3], X[3:4])
+    _assert_matches_oracle(st, X[:5], 6)
+
+
+def test_delete_is_idempotent_and_unknown_ids_are_noops():
+    rng = np.random.default_rng(4)
+    st = mutate.BRUTEFORCE_SPEC.build(_vectors(rng, 15, 8, "euclidean"),
+                                      metric="euclidean", delta_capacity=4)
+    st = mutate.delete(st, [2, 2, 99, -5])
+    st = mutate.delete(st, [2])               # already dead: fine
+    assert mutate.live_count(st) == 14
+    st = mutate.delete(st, [])
+    assert mutate.live_count(st) == 14
+
+
+def test_delta_full_raises_actionable_error():
+    rng = np.random.default_rng(6)
+    st = mutate.BRUTEFORCE_SPEC.build(_vectors(rng, 10, 8, "euclidean"),
+                                      metric="euclidean", delta_capacity=4)
+    st, _ = mutate.insert(st, _vectors(rng, 3, 8, "euclidean"))
+    with pytest.raises(mutate.DeltaFull, match=r"3/4 .*compact"):
+        mutate.insert(st, _vectors(rng, 2, 8, "euclidean"))
+    # compaction clears the pressure
+    st = mutate.compact(st)
+    st, _ = mutate.insert(st, _vectors(rng, 4, 8, "euclidean"))
+    assert mutate.delta_fraction(st) == 1.0
+
+
+def test_explicit_id_validation():
+    rng = np.random.default_rng(8)
+    st = mutate.BRUTEFORCE_SPEC.build(_vectors(rng, 10, 8, "euclidean"),
+                                      metric="euclidean", delta_capacity=8)
+    with pytest.raises(ValueError, match="unique"):
+        mutate.insert(st, _vectors(rng, 2, 8, "euclidean"), ids=[5, 5])
+    with pytest.raises(ValueError, match="unique"):
+        mutate.insert(st, _vectors(rng, 1, 8, "euclidean"), ids=[-1])
+    with pytest.raises(ValueError, match="2 entries"):
+        mutate.insert(st, _vectors(rng, 1, 8, "euclidean"), ids=[1, 2])
+    # fresh allocation continues past the largest explicit id
+    st, _ = mutate.insert(st, _vectors(rng, 1, 8, "euclidean"), ids=[50])
+    st, ids = mutate.insert(st, _vectors(rng, 1, 8, "euclidean"))
+    assert list(ids) == [51]
+
+
+def test_mutation_rejects_frozen_states():
+    rng = np.random.default_rng(9)
+    frozen = bruteforce.build(_vectors(rng, 10, 8, "euclidean"),
+                              metric="euclidean")
+    with pytest.raises(ValueError, match="mutable"):
+        mutate.insert(frozen, _vectors(rng, 1, 8, "euclidean"))
+    with pytest.raises(ValueError, match="mutable"):
+        mutate.delete(frozen, [0])
+    with pytest.raises(ValueError, match="mutable"):
+        mutate.compact(frozen)
+
+
+def test_mutable_rejects_quantized_and_pallas_inner():
+    rng = np.random.default_rng(10)
+    X = _vectors(rng, 32, 16, "euclidean")
+    with pytest.raises(ValueError, match="quantize"):
+        mutate.BRUTEFORCE_SPEC.build(X, metric="euclidean", quantize="int8")
+    with pytest.raises(ValueError, match="backend"):
+        mutate.BRUTEFORCE_SPEC.build(X, metric="euclidean",
+                                     backend="pallas")
+
+
+# --------------------------------------------------------------------------
+# zero-retrace guarantees
+# --------------------------------------------------------------------------
+
+def test_bruteforce_steady_state_mutation_zero_retraces():
+    """Inserts (fixed batch size), deletes, and compaction all reuse the
+    ONE serving trace: shapes never change (delta preallocated, tombstones
+    masked, compaction pads back to the same slot count)."""
+    rng = np.random.default_rng(12)
+    X = _vectors(rng, 30, 8, "euclidean")
+    Q = _vectors(rng, 4, 8, "euclidean")
+    st = mutate.BRUTEFORCE_SPEC.build(X, metric="euclidean",
+                                      delta_capacity=8)
+    jq = mutate.BRUTEFORCE_SPEC.jit_search()
+    jq(st, Q, k=5)                            # warm the trace
+    before = dict(TRACE_COUNTS)
+    for _ in range(3):
+        st, _ = mutate.insert(st, _vectors(rng, 2, 8, "euclidean"))
+        st = mutate.delete(st, [int(rng.integers(0, 30))])
+        jq(st, Q, k=5)
+    st = mutate.compact(st)                   # live fits: same slot count
+    assert st["main"].stat("n") == 38         # 30 + delta_capacity
+    jq(st, Q, k=5)
+    assert dict(TRACE_COUNTS) == before
+    _assert_matches_oracle(st, Q, 5)
+
+
+def test_compact_grows_slots_when_live_outgrows_them():
+    rng = np.random.default_rng(13)
+    st = mutate.BRUTEFORCE_SPEC.build(_vectors(rng, 6, 8, "euclidean"),
+                                      metric="euclidean", delta_capacity=4)
+    assert st["main"].stat("n") == 10         # 6 + delta_capacity headroom
+    for _ in range(3):                        # net growth past 6 + 4 slots
+        st, _ = mutate.insert(st, _vectors(rng, 4, 8, "euclidean"))
+        st = mutate.compact(st)
+    assert mutate.live_count(st) == 18
+    # the 14-live compact outgrew the 10 slots -> regrown to 14 + cap = 18
+    assert st["main"].stat("n") == 18
+    Q = _vectors(rng, 3, 8, "euclidean")
+    _assert_matches_oracle(st, Q, 10)
+
+
+def test_mutable_ivf_traced_knob_sweep_zero_retraces():
+    """n_probes traced under max_probes sweeps the mutable index's
+    recall/QPS knob with ONE trace, bitwise-equal to the static path —
+    across live mutation."""
+    rng = np.random.default_rng(14)
+    X = _vectors(rng, 80, 12, "euclidean")
+    Q = _vectors(rng, 6, 12, "euclidean")
+    st = mutate.IVF_SPEC.build(X, metric="euclidean", n_clusters=8,
+                               delta_capacity=16)
+    st, _ = mutate.insert(st, _vectors(rng, 5, 12, "euclidean"))
+    st = mutate.delete(st, [3, 81])
+    jq = mutate.IVF_SPEC.jit_search(traced=("n_probes",))
+    jq(st, Q, k=5, n_probes=1, max_probes=8)
+    before = dict(TRACE_COUNTS)
+    for p in (1, 3, 8):
+        _, got = jq(st, Q, k=5, n_probes=p, max_probes=8)
+        _, want = mutate.IVF_SPEC.search(st, Q, k=5, n_probes=p,
+                                         max_probes=8)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+    st, _ = mutate.insert(st, _vectors(rng, 5, 12, "euclidean"))
+    jq(st, Q, k=5, n_probes=4, max_probes=8)
+    assert dict(TRACE_COUNTS) == before
+
+
+# --------------------------------------------------------------------------
+# checkpoint v4 + crash recovery
+# --------------------------------------------------------------------------
+
+def _mutated_state(rng):
+    X = _vectors(rng, 25, 8, "euclidean")
+    st = mutate.BRUTEFORCE_SPEC.build(X, metric="euclidean",
+                                      delta_capacity=8)
+    st, _ = mutate.insert(st, _vectors(rng, 4, 8, "euclidean"))
+    return mutate.delete(st, [1, 26])
+
+
+def test_checkpoint_v4_roundtrips_delta_and_tombstones(tmp_path):
+    from repro.serve import checkpoint as ckpt
+
+    rng = np.random.default_rng(15)
+    st = _mutated_state(rng)
+    Q = _vectors(rng, 5, 8, "euclidean")
+    d0, i0 = mutate.BRUTEFORCE_SPEC.search(st, Q, k=8)
+    path = tmp_path / "mut.ckpt"
+    ckpt.save(path, st, extra={"k": 8})
+    st2, extra = ckpt.load(path).only
+    assert extra == {"k": 8}
+    assert int(st2["count"]) == 4 and int(st2["next_id"]) == 29
+    gids_a, rows_a = mutate.live_items(st)
+    gids_b, rows_b = mutate.live_items(st2)
+    np.testing.assert_array_equal(gids_a, gids_b)
+    np.testing.assert_array_equal(rows_a, rows_b)
+    d1, i1 = mutate.BRUTEFORCE_SPEC.search(st2, Q, k=8)
+    np.testing.assert_array_equal(np.asarray(i0), np.asarray(i1))
+    np.testing.assert_array_equal(np.asarray(d0), np.asarray(d1))
+
+
+def test_v3_checkpoint_of_mutated_index_rejected(tmp_path, monkeypatch):
+    """A mutated index persisted by a pre-mutation build must refuse to
+    load, with the distinct v3 explanation (silent acceptance would lose
+    pending inserts and resurrect deleted rows)."""
+    from repro.serve import checkpoint as ckpt
+
+    st = _mutated_state(np.random.default_rng(16))
+    path = tmp_path / "old.ckpt"
+    monkeypatch.setattr(ckpt, "CHECKPOINT_VERSION", 3)
+    ckpt.save(path, st)
+    monkeypatch.undo()
+    with pytest.raises(ckpt.CheckpointError,
+                       match=r"version 3.*version 4.*pre-dates streaming "
+                             r"mutation.*deleted rows resurrected"):
+        ckpt.load(path)
+
+
+def test_crash_mid_compaction_recovers_pre_compaction_state(tmp_path):
+    """Kill an isolated child at the worst moment of compact() — after
+    the live-set gather, before the rebuilt state exists — then reload
+    the v4 checkpoint and assert it still serves the pre-compaction live
+    set exactly.  Compaction is pure + checkpoint writes are atomic, so
+    the crash must be invisible."""
+    from repro.serve import checkpoint as ckpt
+
+    rng = np.random.default_rng(17)
+    st = _mutated_state(rng)
+    Q = _vectors(rng, 6, 8, "euclidean")
+    want_d, want_i = _oracle(st, Q, 10)
+    path = tmp_path / "churn.ckpt"
+    ckpt.save(path, st)
+    ref_bytes = path.read_bytes()
+
+    child = (f"import crash_helper\n"
+             f"crash_helper.exit_mid_compact({str(path)!r}, 7)\n")
+    out = subprocess.run(
+        [sys.executable, "-c", child], capture_output=True, text=True,
+        env={"PYTHONPATH": f"{SRC}{os.pathsep}{TESTS}",
+             "PATH": "/usr/bin:/bin", "HOME": "/root",
+             "JAX_PLATFORMS": "cpu"}, timeout=600)
+    assert out.returncode == 7, (out.returncode, out.stderr[-2000:])
+
+    assert path.read_bytes() == ref_bytes     # nothing half-written
+    st2, _ = ckpt.load(path).only
+    got_d, got_i = mutate.BRUTEFORCE_SPEC.search(st2, Q, k=10)
+    np.testing.assert_array_equal(np.asarray(got_i), np.asarray(want_i))
+    np.testing.assert_array_equal(np.asarray(got_d), np.asarray(want_d))
+    # and the recovered state is fully live: compaction works post-crash
+    st3 = mutate.compact(st2)
+    _assert_matches_oracle(st3, Q, 10)
+
+
+# --------------------------------------------------------------------------
+# hypothesis: arbitrary interleaved streams vs the oracle
+# --------------------------------------------------------------------------
+
+try:
+    from hypothesis import given, settings, strategies as st_
+    HAVE_HYPOTHESIS = True
+except ImportError:                                    # pragma: no cover
+    HAVE_HYPOTHESIS = False
+
+
+def _property_stream(data, metric, seed):
+    """An ARBITRARY interleaved insert/delete/search stream returns
+    bitwise-identical ids to a brute-force oracle rebuilt from the live
+    rows at every step — all three metrics, ties included (the integer
+    grid plus duplicated rows makes ties common, not incidental)."""
+    rng = np.random.default_rng(seed)
+    d = 4 if metric == "hamming" else 6
+    n0 = data.draw(st_.integers(4, 20), label="n0")
+    cap = data.draw(st_.integers(4, 12), label="delta_capacity")
+    X = _vectors(rng, n0, d, metric)
+    Q = _vectors(rng, 4, d, metric)
+    state = mutate.BRUTEFORCE_SPEC.build(X, metric=metric,
+                                         delta_capacity=cap)
+    known = list(range(n0))
+    n_ops = data.draw(st_.integers(1, 8), label="n_ops")
+    for _ in range(n_ops):
+        op = data.draw(st_.sampled_from(
+            ["insert", "insert_dup", "delete", "compact"]))
+        if op == "compact":
+            state = mutate.compact(state)
+        elif op == "delete":
+            dels = data.draw(st_.lists(
+                st_.sampled_from(known + [10**6]), max_size=4))
+            state = mutate.delete(state, np.asarray(dels, np.int32)
+                                  if dels else [])
+        else:
+            m = data.draw(st_.integers(1, 3), label="m")
+            if op == "insert_dup" and known:
+                # duplicate LIVE rows: exact ties across main/delta
+                gids, rows = mutate.live_items(state)
+                take = rng.choice(len(rows), size=min(m, len(rows)),
+                                  replace=False)
+                batch = rows[take]
+            else:
+                batch = _vectors(rng, m, d, metric)
+            try:
+                state, new_ids = mutate.insert(state, batch)
+            except mutate.DeltaFull:
+                state = mutate.compact(state)
+                state, new_ids = mutate.insert(state, batch)
+            known.extend(int(i) for i in new_ids)
+        k = data.draw(st_.integers(1, 12), label="k")
+        _assert_matches_oracle(state, Q, k)
+
+
+if HAVE_HYPOTHESIS:
+    @settings(max_examples=12, deadline=None)
+    @given(data=st_.data(),
+           metric=st_.sampled_from(list(METRICS)),
+           seed=st_.integers(0, 2**31 - 1))
+    def test_property_churn_stream_matches_oracle(data, metric, seed):
+        _property_stream(data, metric, seed)
+else:                                                  # pragma: no cover
+    @pytest.mark.skip(
+        reason="hypothesis not installed (see requirements-dev)")
+    def test_property_churn_stream_matches_oracle():
+        raise AssertionError("unreachable: skipped without hypothesis")

@@ -179,6 +179,86 @@ def test_async_mixed_overrides_zero_retraces(small_dataset):
     assert dict(functional.TRACE_COUNTS) == before, "pump retraced"
 
 
+def test_async_compaction_swap_under_fire(small_dataset):
+    """A background thread hammers submit() while compact() hot-swaps the
+    state: every admitted ticket resolves with a valid answer (old or new
+    state — never an error, never dropped), and for a MutableBruteForce
+    swap the serving trace is reused (zero retraces: same shapes, same
+    static).  The satellite contract of the streaming-mutation PR."""
+    import threading
+
+    from repro.ann import functional
+
+    rng = np.random.default_rng(21)
+    X = rng.standard_normal((400, small_dataset.train.shape[1])) \
+        .astype(np.float32)
+    eng = Engine.build("MutableBruteForce", X, metric="euclidean",
+                       build_params={"delta_capacity": 64},
+                       k=10, batch_size=16)
+    # churn the delta/tombstones so every compaction really rebuilds
+    eng.insert(rng.standard_normal((32, X.shape[1])).astype(np.float32),
+               auto_compact=False)
+    eng.delete(np.arange(0, 40, 7))
+    eng.search(X[:1])                              # warm the ONE trace
+    before = dict(functional.TRACE_COUNTS)
+
+    results, errors = [], []
+    stop = threading.Event()
+
+    def hammer():
+        while not stop.is_set():
+            try:
+                t = eng_srv.submit(
+                    rng.standard_normal(X.shape[1]).astype(np.float32))
+                results.append(t)
+            except AdmissionError:
+                time.sleep(0.001)          # shed, retry: not a failure
+
+    with AsyncEngine(eng, max_wait_ms=1.0, max_queue=256) as eng_srv:
+        thread = threading.Thread(target=hammer, daemon=True)
+        thread.start()
+        try:
+            for _ in range(5):             # five swaps under fire
+                time.sleep(0.01)
+                eng_srv.compact()
+        finally:
+            stop.set()
+            thread.join(timeout=10)
+    # close() drained: every admitted ticket must now be resolved, and
+    # none may hold an error
+    assert len(results) > 0
+    for t in results:
+        assert t.done(), "ticket dropped across a swap"
+        d, ids = t.result(timeout=0)
+        assert ids.shape == (10,) and np.all(ids >= 0)
+        errors.append(t._error)
+    assert all(e is None for e in errors)
+    assert eng.stats["compactions"] == 5
+    assert int(eng.state["count"]) == 0            # delta folded in
+    assert dict(functional.TRACE_COUNTS) == before, \
+        "compaction swap retraced the serving path"
+
+
+def test_engine_insert_delete_visible_to_serving(small_dataset):
+    """Engine.insert/delete change what search() returns, bitwise-equal
+    to the functional mutate path on the same state."""
+    from repro import mutate
+
+    rng = np.random.default_rng(22)
+    X = rng.standard_normal((200, 16)).astype(np.float32)
+    eng = Engine.build("MutableBruteForce", X, metric="euclidean",
+                       build_params={"delta_capacity": 16},
+                       k=5, batch_size=8)
+    q = X[3:4] + 0.01
+    new_ids = eng.insert(X[3:4])                   # duplicate-ish row
+    assert list(new_ids) == [200]
+    eng.delete([3])
+    d, ids = eng.search(q)
+    assert 3 not in ids and 200 in ids[0]
+    want_d, want_i = mutate.BRUTEFORCE_SPEC.search(eng.state, q, k=5)
+    np.testing.assert_array_equal(ids, np.asarray(want_i))
+
+
 def test_async_submit_rejects_override_above_cap(engine, small_dataset):
     with AsyncEngine(engine, max_wait_ms=5.0) as srv:
         with pytest.raises(ValueError, match="exceeds the engine's static"):
@@ -253,7 +333,7 @@ def test_version_negotiation_messages(engine, tmp_path, monkeypatch):
     engine.save(v1)
     monkeypatch.undo()
     with pytest.raises(CheckpointError,
-                       match=r"version 1.*version 3.*xsq"):
+                       match=r"version 1.*version 4.*xsq"):
         Engine.load(v1)
     newer = tmp_path / "newer.ckpt"
     monkeypatch.setattr(ckpt, "CHECKPOINT_VERSION",
@@ -278,14 +358,14 @@ def test_pre_quant_checkpoint_of_pq_index_rejected(small_dataset, tmp_path,
     ckpt.save(v2, state)
     monkeypatch.undo()
     with pytest.raises(CheckpointError,
-                       match=r"version 2.*version 3.*pre-dates "
+                       match=r"version 2.*version 4.*pre-dates "
                              r"compressed-domain.*quantize=.*rebuild") as ei:
         ckpt.load(v2)
     assert "xsq" not in str(ei.value)       # not the v1 note
     # and the same file at the current version round-trips the codec
-    v3 = tmp_path / "v3-pq.ckpt"
-    ckpt.save(v3, state)
-    restored, _ = ckpt.load(v3).only
+    v4 = tmp_path / "v4-pq.ckpt"
+    ckpt.save(v4, state)
+    restored, _ = ckpt.load(v4).only
     assert restored.stat("quant") == state.stat("quant")
     np.testing.assert_array_equal(np.asarray(restored["codes"]),
                                   np.asarray(state["codes"]))

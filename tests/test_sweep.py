@@ -50,6 +50,8 @@ SWEEP_CASES = {
     "MultiIndexHashing": ("small_hamming", {"n_chunks": 16, "cap": 64},
                           (0, 1, 2), {}),
     "ShardedIVF": ("small_dataset", {"n_clusters": 30}, (1, 4, 12, 30), {}),
+    "MutableIVF": ("small_dataset", {"n_clusters": 30, "delta_capacity": 64},
+                   (1, 4, 12, 30), {}),
 }
 
 # name -> cartesian grid over BOTH traced knob pairs (>= 2 knobs x >= 3
