@@ -1,11 +1,19 @@
 """Distributed substrate: logical-axis sharding helpers, explicit
-collectives, and gradient compression.
+collectives, wire codecs, and the generic sharded-index layer.
 
 Modules:
     sharding.py     logical -> physical mesh-axis mapping (``constrain``,
-                    ``named_sharding``, spec trees)
-    collectives.py  explicit collective ops (row-sharded embedding lookup)
+                    ``named_sharding``, spec trees, ``rows_sharding``)
+    collectives.py  explicit collective ops (row-sharded embedding lookup,
+                    ``tree_merge_topk`` — the compressed hierarchical
+                    top-k merge behind every sharded ANN search)
+    wire.py         merge-tree distance codecs (f32/bf16/u16/int8) and the
+                    wire-byte models the sharded bench gates on
+    shard_state.py  shard any registered ``IndexState`` over a mesh recipe
+                    (``ShardPlan`` registry, ``shard_index`` / ``reshard``
+                    / ``ensure_servable``, the cached shard_map search)
     grad_compression.py  error-feedback gradient quantisation + all-reduce
-                    (the wire codec — corpus vector codecs live in
-                    ``repro.quant``); ``compression.py`` is the import shim
+                    (the training wire codec — corpus vector codecs live
+                    in ``repro.quant``); ``compression.py`` is its
+                    deprecated import shim
 """

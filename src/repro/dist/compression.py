@@ -1,12 +1,21 @@
-"""Compatibility shim: the gradient wire codec moved to
+"""Deprecated compatibility shim: the gradient wire codec moved to
 :mod:`repro.dist.grad_compression` when :mod:`repro.quant` (corpus vector
 codecs) arrived — two "compression" modules with one ambiguous name was a
-recurring mis-import.  Import from ``repro.dist.grad_compression``
-directly in new code.
+recurring mis-import (and the ANN merge-tree wire codecs now live in
+:mod:`repro.dist.wire`, a third would-be claimant).  Import from
+``repro.dist.grad_compression`` directly; this module will be removed.
 """
+
+import warnings
 
 from repro.dist.grad_compression import (_quantize_int8,  # noqa: F401
                                          compress_gradients,
                                          init_error_state)
+
+warnings.warn(
+    "repro.dist.compression is deprecated: import from "
+    "repro.dist.grad_compression (gradient codec) or repro.dist.wire "
+    "(ANN merge-tree codecs) instead",
+    DeprecationWarning, stacklevel=2)
 
 __all__ = ["compress_gradients", "init_error_state"]

@@ -75,6 +75,13 @@ def spec_tree_to_shardings(spec_tree, mesh: Mesh):
                         is_leaf=is_axes_leaf)
 
 
+def rows_sharding(mesh: Mesh, axes: Sequence[str]) -> NamedSharding:
+    """Sharding for index arrays with a leading ``[n_shards, ...]`` dim:
+    dim 0 laid out jointly over ``axes`` (the ``repro.dist.shard_state``
+    corpus layout), every trailing dim replicated."""
+    return NamedSharding(mesh, P(tuple(axes)))
+
+
 def mesh_axes_size(mesh: Mesh, axes: Sequence[str]) -> int:
     size = 1
     for a in axes:

@@ -89,6 +89,7 @@ def _prep_queries(Q, mode: str, bq: int, bd: int):
 
 
 def stream_topk(Q, X, *, k: int, metric: str = "euclidean",
+                row_ids=None, valid=None,
                 bq: int | None = None, bn: int | None = None,
                 bd: int | None = None, interpret: bool | None = None):
     """(dists [nq,k], ids [nq,k]) of the k nearest corpus rows per query.
@@ -96,6 +97,11 @@ def stream_topk(Q, X, *, k: int, metric: str = "euclidean",
     ``metric="angular"`` expects pre-normalised inputs (the index layer
     normalises at fit time).  Exact in every mode: padded corpus rows carry
     a +inf penalty through the kernel's xsq operand and can never win.
+
+    ``valid`` (optional [n] bool) masks corpus rows through the same
+    penalty channel — a sharded index's pad rows ride in here without any
+    kernel change.  ``row_ids`` (optional [n] int32) remaps the returned
+    row indices to global ids (-1 for empty / masked-out slots).
     """
     interpret = INTERPRET if interpret is None else interpret
     mode = _METRIC_TO_MODE[metric]
@@ -107,9 +113,18 @@ def stream_topk(Q, X, *, k: int, metric: str = "euclidean",
     bq, bn, bd = _resolve_tiles(nq, n, d, k, bq, bn, bd)
     Qp, qsq = _prep_queries(Q, mode, bq, bd)
     Xp, xsq = _prep_corpus(X, mode, bn, bd)
+    if valid is not None:
+        keep = jnp.zeros(Xp.shape[0], bool).at[:n].set(
+            jnp.asarray(valid, bool))
+        xsq = jnp.where(keep[None, :], xsq, jnp.inf)
     vals, idx = stream_topk_pallas(Qp, Xp, qsq, xsq, mode=mode, k=k,
                                    bq=bq, bn=bn, bd=bd, interpret=interpret)
-    return vals[:nq], idx[:nq]
+    vals, idx = vals[:nq], idx[:nq]
+    if row_ids is not None:
+        alive = jnp.isfinite(vals)
+        gl = jnp.asarray(row_ids, jnp.int32)[jnp.clip(idx, 0, n - 1)]
+        idx = jnp.where(alive, gl, -1)
+    return vals, idx
 
 
 def stream_topk_batched(Q, X, *, k: int, metric: str = "euclidean",

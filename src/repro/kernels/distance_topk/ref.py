@@ -7,8 +7,8 @@ Two references:
     fori_loop over corpus tiles folding each tile's local top-k into a
     running (dist, id) state via ``merge_topk``.  Same O(nq * k) memory
     model as the kernel, fully jit-compatible.  The sharded serving path
-    runs the same fold per shard (``ann/sharded.local_topk_streaming``,
-    which additionally carries global ids, sentinel norms, and the hamming
+    runs the same fold per shard (``ann/sharded._row_local_plain``, which
+    additionally carries global ids, sentinel norms, and the hamming
     metric).
 """
 

@@ -52,6 +52,33 @@ _coerce = coerce
 _kv = parse_kv
 
 
+def apply_shards(args) -> None:
+    """``--shards N``: serve the sharded variant of the algorithm over N
+    devices (BruteForce -> ShardedBruteForce, IVF -> ShardedIVF; already-
+    sharded algorithms just get ``n_shards`` pinned)."""
+    if args.shards is None:
+        return
+    import jax
+
+    from repro.dist import shard_state as SS
+
+    n = int(args.shards)
+    if n > jax.device_count():
+        raise SystemExit(
+            f"[serve] --shards {n} needs {n} devices but only "
+            f"{jax.device_count()} are visible; set XLA_FLAGS="
+            f"--xla_force_host_platform_device_count={n} to simulate")
+    plan = SS.SHARD_PLANS.get(args.algorithm)
+    if plan is not None:
+        args.algorithm = plan.sharded_algo
+    elif args.algorithm not in SS.sharded_algos():
+        raise SystemExit(
+            f"[serve] --shards: no sharded variant of {args.algorithm} "
+            f"(shardable: {sorted(SS.SHARD_PLANS)}, "
+            f"sharded: {list(SS.sharded_algos())})")
+    args.build = list(args.build) + [f"n_shards={n}"]
+
+
 def build_or_restore(args, ds) -> Engine:
     spec = get_functional(args.algorithm)
     if args.index_cache:
@@ -245,6 +272,9 @@ def main(argv=None):
                    help="build params as key=value (comma-separable)")
     p.add_argument("--query", nargs="*", default=[],
                    help="query params as key=value (comma-separable)")
+    p.add_argument("--shards", type=int, default=None,
+                   help="serve the sharded variant of --algorithm over N "
+                        "devices (compressed hierarchical top-k merge)")
     p.add_argument("--count", type=int, default=10)
     p.add_argument("--batch-size", type=int, default=256)
     p.add_argument("--n-batches", type=int, default=8)
@@ -267,6 +297,7 @@ def main(argv=None):
                         "in --mode churn")
     args = p.parse_args(argv)
 
+    apply_shards(args)
     ds = get_dataset(args.dataset)
     eng = build_or_restore(args, ds)
 

@@ -25,6 +25,15 @@ the file has, which this build reads, and — for known historical versions
 so euclidean E2LSH/RPForest states would load and then fail at query
 time) versus the generic stale/newer messages.  All failure modes raise
 :class:`CheckpointError`.
+
+**Mesh portability**: sharded states (``Sharded*``) are saved exactly like
+any other state — their arrays gather to host and their ``static`` dict
+carries the mesh *recipe* (``shard_axes`` + ``mesh_shape``) as plain JSON.
+No device topology is baked into the file, so v4 checkpoints restore on
+any host: a compatible recipe re-lays the arrays out over the local mesh
+on first search, an oversized one is either rejected by ``search`` with
+the reshard instruction or adapted automatically by
+``repro.dist.shard_state.ensure_servable`` (the ``Engine`` restore path).
 """
 
 from __future__ import annotations

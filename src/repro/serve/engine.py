@@ -199,7 +199,15 @@ class Engine:
     @classmethod
     def from_checkpoint_entry(cls, state: IndexState, extra: dict,
                               **overrides) -> "Engine":
-        """Engine from one ``checkpoint.load`` entry (state + extras)."""
+        """Engine from one ``checkpoint.load`` entry (state + extras).
+
+        Sharded states carry their mesh *recipe* in ``static``, so a
+        checkpoint written on one host serves on another: if the recipe
+        fits the visible devices it is used as-is, otherwise the state is
+        resharded onto all local devices (``ensure_servable``)."""
+        from repro.dist.shard_state import ensure_servable
+
+        state = ensure_servable(state)
         kwargs = {"k": extra.get("k", 10),
                   "batch_size": extra.get("batch_size", 256),
                   "query_params": extra.get("query_params") or {},

@@ -207,3 +207,148 @@ def test_sharded_ivf_multi_device():
         print("OK")
     """)
     assert "OK" in out
+
+
+def test_tree_merge_codecs_multi_axis_bitwise_ids():
+    """ISSUE 9 tentpole: the compressed hierarchical merge returns ids
+    bitwise-identical to the single-device index on a 2-axis mesh, for
+    every wire codec, every metric, and fan_in 2 and 4."""
+    out = run_sub("""
+        import numpy as np, jax
+        from repro.ann import bruteforce, sharded
+        rng = np.random.default_rng(0)
+        X = rng.standard_normal((900, 24)).astype(np.float32)
+        Q = rng.standard_normal((16, 24)).astype(np.float32)
+        mesh = jax.make_mesh((4, 2), ("data", "model"))
+        for metric in ("euclidean", "angular"):
+            inner = bruteforce.build(X, metric=metric)
+            _, want = bruteforce.search(inner, Q, k=10)
+            for codec in ("f32", "bf16", "int8"):
+                for fan_in in (2, 4):
+                    st = sharded.bruteforce_build(
+                        X, metric=metric, mesh=mesh, wire_codec=codec,
+                        fan_in=fan_in)
+                    _, got = sharded.bruteforce_search(st, Q, k=10)
+                    assert np.array_equal(np.asarray(got),
+                                          np.asarray(want)), \
+                        (metric, codec, fan_in)
+        # hamming rides the lossless u16 codec
+        Xh = rng.integers(0, 2, (700, 64)).astype(np.uint8)
+        Qh = rng.integers(0, 2, (8, 64)).astype(np.uint8)
+        inner = bruteforce.build(Xh, metric="hamming")
+        _, want = bruteforce.search(inner, Qh, k=10)
+        st = sharded.bruteforce_build(Xh, metric="hamming", mesh=mesh)
+        assert st.stat("wire_codec") == "u16"
+        _, got = sharded.bruteforce_search(st, Qh, k=10)
+        assert np.array_equal(np.asarray(got), np.asarray(want))
+        print("OK")
+    """)
+    assert "OK" in out
+
+
+def test_sharded_quantized_states_and_streaming_kernel():
+    """Per-shard local passes: the PQ ADC scan (BruteForce + IVF) and the
+    fused distance_topk kernel both feed the merge tree."""
+    out = run_sub("""
+        import numpy as np, jax
+        from repro.ann import bruteforce, sharded
+        rng = np.random.default_rng(1)
+        X = rng.standard_normal((800, 16)).astype(np.float32)
+        Q = rng.standard_normal((8, 16)).astype(np.float32)
+        _, want = bruteforce.search(bruteforce.build(X, metric="euclidean"),
+                                    Q, k=10)
+        def recall(got):
+            return np.mean([len(set(a.tolist()) & set(b.tolist())) / 10
+                            for a, b in zip(np.asarray(got),
+                                            np.asarray(want))])
+        st = sharded.bruteforce_build(X, metric="euclidean", n_shards=4,
+                                      quantize={"pq": {"m": 8}})
+        _, got = sharded.bruteforce_search(st, Q, k=10)
+        assert recall(got) > 0.9, recall(got)
+        st = sharded.ivf_build(X, metric="euclidean", n_clusters=16,
+                               n_shards=4, quantize={"pq": {"m": 8}})
+        _, got = sharded.ivf_search(st, Q, k=10, n_probes=16)
+        assert recall(got) > 0.9, recall(got)
+        # fp32 local pass through the fused Pallas kernel (interpret mode)
+        st = sharded.bruteforce_build(X, metric="euclidean", n_shards=4)
+        _, got = sharded.bruteforce_search(st, Q, k=10, use_kernel=True)
+        assert np.array_equal(np.asarray(got), np.asarray(want))
+        print("OK")
+    """)
+    assert "OK" in out
+
+
+def test_sharded_checkpoint_mesh_portable(tmp_path):
+    """Satellite: a sharded state saved under one mesh recipe round-trips
+    through checkpoint v4 and serves under a different compatible mesh."""
+    out = run_sub(f"""
+        import numpy as np, jax
+        from repro.ann import bruteforce, sharded
+        from repro.dist import shard_state as SS
+        from repro.serve import checkpoint
+        rng = np.random.default_rng(2)
+        X = rng.standard_normal((600, 16)).astype(np.float32)
+        Q = rng.standard_normal((8, 16)).astype(np.float32)
+        _, want = bruteforce.search(bruteforce.build(X, metric="euclidean"),
+                                    Q, k=10)
+        st8 = sharded.bruteforce_build(X, metric="euclidean", n_shards=8)
+        checkpoint.save({str(tmp_path / "sh8.npz")!r}, st8)
+        restored, _ = checkpoint.load({str(tmp_path / "sh8.npz")!r}).only
+        assert tuple(restored.stat("mesh_shape")) == (8,)
+        _, got = sharded.bruteforce_search(restored, Q, k=10)
+        assert np.array_equal(np.asarray(got), np.asarray(want))
+        # reshard the restored state onto a different compatible mesh
+        mesh42 = jax.make_mesh((4, 2), ("data", "model"))
+        st42 = SS.reshard(restored, mesh=mesh42,
+                          shard_axes=("data", "model"))
+        _, got = sharded.bruteforce_search(st42, Q, k=10)
+        assert np.array_equal(np.asarray(got), np.asarray(want))
+        print("OK")
+    """)
+    assert "OK" in out
+
+
+def test_sharded_checkpoint_oversized_recipe_rejected(tmp_path):
+    """An 8-shard recipe on a 2-device host: search rejects with the
+    reshard instruction; ensure_servable (the Engine restore path) adapts
+    it automatically."""
+    run_sub(f"""
+        import numpy as np
+        from repro.ann import sharded
+        from repro.serve import checkpoint
+        rng = np.random.default_rng(3)
+        X = rng.standard_normal((600, 16)).astype(np.float32)
+        st = sharded.bruteforce_build(X, metric="euclidean", n_shards=8)
+        checkpoint.save({str(tmp_path / "big.npz")!r}, st)
+    """, devices=8)
+    out = run_sub(f"""
+        import numpy as np, jax
+        from repro.ann import bruteforce, sharded
+        from repro.dist.shard_state import ShardingError, ensure_servable
+        from repro.serve import checkpoint
+        from repro.serve.engine import Engine
+        assert jax.device_count() == 2
+        restored, _ = checkpoint.load({str(tmp_path / "big.npz")!r}).only
+        try:
+            sharded.bruteforce_search(restored, np.zeros((1, 16),
+                                                         np.float32), k=5)
+            raise AssertionError("oversized recipe was not rejected")
+        except ShardingError as e:
+            msg = str(e)
+            assert "8 devices" in msg and "reshard" in msg, msg
+        served = ensure_servable(restored)
+        assert tuple(served.stat("mesh_shape")) == (2,)
+        rng = np.random.default_rng(3)
+        X = rng.standard_normal((600, 16)).astype(np.float32)
+        Q = rng.standard_normal((4, 16)).astype(np.float32)
+        _, want = bruteforce.search(bruteforce.build(X, metric="euclidean"),
+                                    Q, k=10)
+        _, got = sharded.bruteforce_search(served, Q, k=10)
+        assert np.array_equal(np.asarray(got), np.asarray(want))
+        # the Engine restore path applies ensure_servable itself
+        eng = Engine.load({str(tmp_path / "big.npz")!r}, k=10)
+        _, ids = eng.search(Q)
+        assert np.array_equal(np.asarray(ids), np.asarray(want))
+        print("OK")
+    """, devices=2)
+    assert "OK" in out

@@ -100,6 +100,55 @@ def test_stream_topk_ties_stable_ids():
     np.testing.assert_array_equal(np.asarray(i), np.asarray(ri))
 
 
+@pytest.mark.parametrize("metric", ["euclidean", "angular"])
+def test_stream_topk_valid_mask_and_row_ids(metric):
+    """Shard-local plumbing (ISSUE 9): masked rows ride the existing xsq
+    penalty channel and never appear, ``row_ids`` remaps winners to global
+    ids — bit-parity with a brute-force scan of the kept subset."""
+    from repro.kernels.distance_topk import stream_topk
+
+    rng = np.random.default_rng(11)
+    X = rng.standard_normal((300, 24)).astype(np.float32)
+    Q = rng.standard_normal((7, 24)).astype(np.float32)
+    if metric == "angular":
+        Q /= np.linalg.norm(Q, axis=1, keepdims=True)
+        X /= np.linalg.norm(X, axis=1, keepdims=True)
+    valid = rng.random(300) < 0.5
+    gids = rng.permutation(10_000)[:300].astype(np.int32)
+    v, i = stream_topk(jnp.asarray(Q), jnp.asarray(X), k=10, metric=metric,
+                       row_ids=jnp.asarray(gids), valid=jnp.asarray(valid),
+                       bn=128)
+    # oracle: scan only the kept rows
+    kept = np.flatnonzero(valid)
+    if metric == "euclidean":
+        D = ((Q[:, None, :] - X[None, kept]) ** 2).sum(-1)
+    else:
+        D = 1.0 - Q @ X[kept].T
+    order = np.argsort(D, axis=1)[:, :10]
+    want = gids[kept][order]
+    assert np.array_equal(np.sort(np.asarray(i)), np.sort(want))
+    assert not np.isin(np.asarray(i), gids[~valid]).any()
+
+
+def test_stream_topk_valid_mask_underfull():
+    """Fewer valid rows than k: losing slots pad with (+inf, -1)."""
+    from repro.kernels.distance_topk import stream_topk
+
+    rng = np.random.default_rng(12)
+    X = rng.standard_normal((64, 8)).astype(np.float32)
+    Q = rng.standard_normal((3, 8)).astype(np.float32)
+    valid = np.zeros(64, bool)
+    valid[:4] = True
+    v, i = stream_topk(jnp.asarray(Q), jnp.asarray(X), k=10,
+                       metric="euclidean", row_ids=jnp.arange(64,
+                                                             dtype=np.int32),
+                       valid=jnp.asarray(valid))
+    v, i = np.asarray(v), np.asarray(i)
+    assert (np.sort(i[:, :4], axis=1) == np.arange(4)).all()
+    assert (i[:, 4:] == -1).all()
+    assert np.isinf(v[:, 4:]).all()
+
+
 def test_stream_topk_scan_ref_matches_exact():
     """The pure-JAX streaming scan (the shard-local serving path) is exact."""
     from repro.kernels.distance_topk import (stream_topk_ref,

@@ -203,3 +203,25 @@ def test_tune_plot_png(tuned, tmp_path):
 
     out = tune_plot_png(tuned, tmp_path / "tuned.png")
     assert out.exists() and out.stat().st_size > 0
+
+
+def test_grid_search_sharded_ivf_frontier(request):
+    """Satellite (ISSUE 9): sharded operating points show up on tuner
+    frontiers — the replicated n_probes scalar keeps the sweep on one
+    trace, and recall stays monotone in the probe knob."""
+    ds = request.getfixturevalue("small_dataset")
+    spec = get_functional("ShardedIVF")
+    state = spec.build(ds.train, metric=ds.metric, n_clusters=30)
+    functional.TRACE_COUNTS.clear()
+    res = tune.grid_search(state, ds.test[:NQ], ds.distances[:NQ], k=K,
+                           knob_grid={"n_probes": (1, 4, 12, 30)},
+                           constraint=tune.Constraint.min_recall(0.9),
+                           repetitions=1)
+    assert len(res.points) == 4
+    by_probe = sorted(res.points, key=lambda p: p.params["n_probes"])
+    recalls = [p.recall for p in by_probe]
+    assert recalls == sorted(recalls)
+    assert res.best is not None and res.best.recall >= 0.9
+    assert res.pareto
+    # quality pass (1 vmapped trace) + timing pass (1 traced-cap trace)
+    assert functional.TRACE_COUNTS["ShardedIVF"] <= 2
