@@ -1,0 +1,156 @@
+"""Chaos / availability benchmark (ISSUE 10 acceptance): seeded faults
+against the sharded serving tier, gated on availability — not latency.
+
+An 8-shard ShardedBruteForce engine serves an open request stream through
+the AsyncEngine pump while a seeded :class:`~repro.serve.faults.FaultPlan`
+injects a 10% per-shard drop rate plus occasional whole-call transient
+raises.  Dropped shards degrade the merge (the failed shard's lane enters
+the butterfly as the ``(+inf, -1)`` sentinel channel, so answers stay
+exact over the survivors and responses carry ``coverage < 1``); transient
+raises retry under the pump's :class:`~repro.serve.retry.RetryPolicy`.
+
+Gates (CI chaos lane):
+
+  * **all_admitted_resolve** — 100% of admitted tickets resolve (served
+    or typed error); nothing hangs under any seeded fault.
+  * **availability_ge_99** — served / admitted >= 99% with retries on
+    (transient raises are absorbed by backoff, only a triple-fault in a
+    row can fail a request).
+  * **degraded_report_coverage** — faults really fired, and every
+    degraded response reports ``0 <= coverage < 1`` on its ticket, with
+    the metrics counter agreeing.
+  * **zero_retraces** — the whole measured chaos loop rides the traces
+    warmed before it (``functional.TRACE_COUNTS`` unchanged): degraded
+    masks are traced inputs, never new programs.
+
+    PYTHONPATH=src python benchmarks/bench_availability.py [--scale smoke]
+
+Writes ``BENCH_availability.json`` and exits non-zero if any gate fails.
+"""
+
+from __future__ import annotations
+
+import os
+
+# Force an 8-device host platform BEFORE jax initialises.
+_flags = os.environ.get("XLA_FLAGS", "")
+if "xla_force_host_platform_device_count" not in _flags:
+    os.environ["XLA_FLAGS"] = (
+        _flags + " --xla_force_host_platform_device_count=8").strip()
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+import numpy as np
+
+try:
+    from benchmarks.common import Row, dataset_size, write_bench_json
+except ModuleNotFoundError:          # direct script invocation
+    import pathlib
+    import sys
+    sys.path.insert(0, str(pathlib.Path(__file__).resolve().parents[1]))
+    from benchmarks.common import Row, dataset_size, write_bench_json
+from repro.ann.functional import TRACE_COUNTS
+from repro.data import get_dataset
+from repro.serve import (AsyncEngine, Engine, FaultPlan, RetryPolicy,
+                         ServeError, faults)
+
+K = 10
+BATCH = 16
+N_SHARDS = 8
+SHARD_DROP = 0.10                 # per (call, shard): degraded responses
+SHARD_RAISE = 0.05                # per call: transient, retried
+
+
+def run(scale: str = "default"):
+    n = dataset_size(scale)
+    ds = get_dataset(f"blobs-euclidean-{n}")
+    n_requests = 240 if scale == "smoke" else 640
+    eng = Engine.build("ShardedBruteForce", ds.train, metric=ds.metric,
+                       build_params={"n_shards": N_SHARDS},
+                       k=K, batch_size=BATCH)
+    srv = AsyncEngine(eng, max_wait_ms=5.0, max_queue=2 * n_requests,
+                      retry=RetryPolicy(max_attempts=3, base_ms=1.0,
+                                        jitter=0.5, seed=0))
+    # fault-free warmup traces the ONE program (mask is a traced input)
+    d_ref, i_ref = srv.search(ds.test[:BATCH])
+    traces_before = dict(TRACE_COUNTS)
+
+    plan = FaultPlan(seed=0, shard_drop=SHARD_DROP, shard_raise=SHARD_RAISE)
+    rng = np.random.default_rng(1)
+    sels = rng.integers(0, len(ds.test), n_requests)
+    with faults.injected(plan):
+        tickets = [srv.submit(ds.test[int(s)]) for s in sels]
+        served = failed = hung = 0
+        degraded, bad_coverage = [], 0
+        for t in tickets:
+            try:
+                t.result(timeout=120)
+                served += 1
+                if t.partial:
+                    degraded.append(t.coverage)
+                    if not 0.0 <= t.coverage < 1.0:
+                        bad_coverage += 1
+            except ServeError:
+                failed += 1
+            if not t.done():
+                hung += 1
+    chaos_traces = dict(TRACE_COUNTS)
+
+    # fault-free epilogue: the tier recovered — bitwise the warmup answer
+    d_post, i_post = srv.search(ds.test[:BATCH])
+    recovered = bool(np.array_equal(i_post, i_ref)
+                     and np.array_equal(d_post, d_ref))
+    srv.close()
+    snap = srv.metrics.snapshot()
+    counters = snap["counters"]
+    availability = served / max(1, len(tickets))
+    cov5 = snap["coverage"]["p5"]
+
+    gates = {
+        "all_admitted_resolve": hung == 0
+            and served + failed == len(tickets),
+        "availability_ge_99": availability >= 0.99,
+        "degraded_report_coverage": len(degraded) > 0
+            and bad_coverage == 0
+            and counters.get("degraded", 0) == len(degraded),
+        "zero_retraces": chaos_traces == traces_before,
+        "faultfree_recovery_bitwise": recovered,
+    }
+    rows = [
+        Row("availability/outcomes", 0.0,
+            f"admitted={len(tickets)};served={served};failed={failed};"
+            f"hung={hung};availability={availability:.4f};"
+            f"retried={counters.get('retried', 0)};"
+            f"shard_events={plan.events('shard_drop')}"),
+        Row("availability/degraded", 0.0,
+            f"degraded={len(degraded)};"
+            f"degraded_frac={len(degraded) / max(1, served):.3f};"
+            f"coverage_p5={cov5:.3f};"
+            f"coverage_min={min(degraded) if degraded else 1.0:.3f}"),
+        Row("availability/gates", 0.0,
+            ";".join(f"{k}={'PASS' if v else 'FAIL'}"
+                     for k, v in gates.items())),
+    ]
+    extra = {"gates": gates, "metrics": snap,
+             "plan": plan.describe(),
+             "trace_counts": chaos_traces}
+    return rows, gates, extra
+
+
+if __name__ == "__main__":
+    import argparse
+
+    p = argparse.ArgumentParser()
+    p.add_argument("--scale", default="default",
+                   choices=["smoke", "default", "full"])
+    args = p.parse_args()
+    rows, gates, extra = run(args.scale)
+    print("name,us_per_call,derived")
+    for row in rows:
+        print(row.csv())
+    path = write_bench_json("availability", rows, scale=args.scale,
+                            extra=extra)
+    print(f"wrote {path}")
+    failed = [name for name, ok in gates.items() if not ok]
+    if failed:
+        raise SystemExit(f"availability gates FAILED: {failed}")
+    print(f"availability gates passed: {sorted(gates)}")

@@ -354,20 +354,23 @@ def bruteforce_build(X: np.ndarray, *, metric: str = "euclidean",
 
 def bruteforce_search(state: IndexState, Q, *, k: int,
                       mesh: Optional[Mesh] = None, n_cand=None,
-                      use_kernel: bool = False, exact_vals: bool = True):
+                      use_kernel: bool = False, exact_vals: bool = True,
+                      shard_ok=None):
     """Exact sharded top-k: streaming per-shard scan + compressed merge
     tree, rebuilt (and cached) from the state's mesh recipe unless
     ``mesh`` is given.  ``n_cand`` narrows the quantized builds' local
     rerank window; ``use_kernel`` routes the fp32 local scan through the
     fused ``distance_topk`` Pallas kernel; ``exact_vals=False`` drops the
     full-precision root tiebreak (minimum wire bytes, wire-precision
-    distances out)."""
+    distances out).  ``shard_ok`` is the degraded-mode keep-mask
+    (see :func:`repro.dist.shard_state.sharded_search`)."""
     k = min(int(k), state.stat("n"))
     env_extra = {"use_kernel": bool(use_kernel)}
     if n_cand is not None:
         env_extra["sharded_n_cand"] = int(n_cand)
     return SS.sharded_search(state, Q, k=k, mesh=mesh,
-                             env_extra=env_extra, exact_vals=exact_vals)
+                             env_extra=env_extra, exact_vals=exact_vals,
+                             shard_ok=shard_ok)
 
 
 register_functional(FunctionalSpec(
@@ -455,11 +458,13 @@ def ivf_build(X: np.ndarray, *, metric: str = "euclidean",
 def ivf_search(state: IndexState, Q, *, k: int, n_probes=1,
                max_probes: Optional[int] = None,
                mesh: Optional[Mesh] = None, n_cand=None,
-               exact_vals: bool = True):
+               exact_vals: bool = True, shard_ok=None):
     """``max_probes`` (static) sizes the probed window; ``n_probes`` may
     then be a traced runtime value (same contract as single-device IVF —
     it crosses into ``shard_map`` as a replicated scalar, so one trace
-    serves every probe count <= the cap)."""
+    serves every probe count <= the cap).  ``shard_ok`` is the
+    degraded-mode keep-mask
+    (see :func:`repro.dist.shard_state.sharded_search`)."""
     C = state.stat("n_clusters")
     k = min(int(k), state.stat("n"))
     if max_probes is None:
@@ -471,7 +476,8 @@ def ivf_search(state: IndexState, Q, *, k: int, n_probes=1,
     if n_cand is not None:
         env_extra["sharded_n_cand"] = int(n_cand)
     return SS.sharded_search(state, Q, k=k, mesh=mesh, knobs=(n_probes,),
-                             env_extra=env_extra, exact_vals=exact_vals)
+                             env_extra=env_extra, exact_vals=exact_vals,
+                             shard_ok=shard_ok)
 
 
 register_functional(FunctionalSpec(

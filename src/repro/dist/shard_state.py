@@ -200,9 +200,25 @@ def shard_index(inner, *, mesh: Optional[Mesh] = None,
     return IndexState(plan.sharded_algo, inner.metric, arrays, static)
 
 
+def shard_coverage(state, keep) -> float:
+    """Fraction of the index's live rows owned by the surviving shards.
+
+    ``keep`` is a ``[n_shards]`` bool mask.  Both registered plans keep
+    the global-id map in the ``ids`` shard array (``[S, L]`` with ``-1``
+    padding), so per-shard live-row counts fall out of ``ids >= 0`` —
+    this is the ``coverage`` a degraded response reports."""
+    ids = np.asarray(jax.device_get(state["ids"]))
+    live = (ids.reshape(ids.shape[0], -1) >= 0).sum(axis=1)
+    total = int(live.sum())
+    if total == 0:
+        return 1.0
+    return float(live[np.asarray(keep, bool).reshape(-1)].sum()) / total
+
+
 def sharded_search(state, Q, *, k: int, mesh: Optional[Mesh] = None,
                    knobs: Sequence = (), env_extra: Optional[dict] = None,
-                   cache_extra: tuple = (), exact_vals: bool = True):
+                   cache_extra: tuple = (), exact_vals: bool = True,
+                   shard_ok=None):
     """Replicated exact top-k over a sharded state: per-shard
     ``plan.local_topk`` + the compressed butterfly merge, compiled once
     per (mesh, k, statics) and cached.  ``knobs`` are the plan's traced
@@ -215,13 +231,47 @@ def sharded_search(state, Q, *, k: int, mesh: Optional[Mesh] = None,
     k-selection happens in f32, so results are order-identical to the
     single-device index.  Turning it off saves the root psum's ~carry * 8
     wire bytes and returns wire-precision distances (ids still exact up
-    to the carry tie budget)."""
+    to the carry tie budget).
+
+    ``shard_ok`` is an optional ``[n_shards]`` bool keep-mask: a masked
+    shard's local results are forced to the merge tree's ``(+inf, -1)``
+    sentinel channel, so the merge stays *exact over the surviving
+    shards* — the degraded-mode mechanism (results equal a single-device
+    search over only the survivors' rows).  The mask is an ordinary
+    traced array input of the one cached program: masked and unmasked
+    calls share the trace, and the all-True default is the identity."""
     from repro.ann.functional import _freeze, prepare_queries
 
     plan = plan_for(state)
     mesh, axes = resolve_mesh(state, mesh)
     sizes = tuple(int(mesh.shape[a]) for a in axes)
+    S = int(np.prod(sizes))
     k = int(k)
+
+    # ---- fault-injection hook (repro.serve.faults; no-op unless a plan
+    # is installed).  Under an outer jit — the Engine's fixed-shape
+    # serving trace — Q/shard_ok are tracers and the hook is skipped
+    # here: the Engine calls it host-side per micro-batch and threads
+    # the mask in as the traced ``shard_ok`` argument instead.
+    tracing = isinstance(Q, jax.core.Tracer) \
+        or isinstance(shard_ok, jax.core.Tracer)
+    if not tracing:
+        from repro.serve import faults as _faults
+
+        mask = _faults.shard_events(S)     # may raise ShardFault / sleep
+        if shard_ok is not None:
+            sk = np.asarray(shard_ok, bool).reshape(-1)
+            if sk.shape[0] != S:
+                raise ShardingError(
+                    f"shard_ok has {sk.shape[0]} entries for {S} shards")
+            mask = sk if mask is None else (mask & sk)
+        if mask is not None and not mask.all():
+            _faults.note_degraded(
+                shard_coverage(state, mask),
+                tuple(int(s) for s in np.flatnonzero(~mask)))
+        ok_arg = np.ones(S, bool) if mask is None else mask
+    else:
+        ok_arg = shard_ok if shard_ok is not None else np.ones(S, bool)
     carry_s = state.static.get("carry")
     carry = 2 * k if carry_s is None else max(k, int(carry_s))
     codec = state.stat("wire_codec")
@@ -241,11 +291,17 @@ def sharded_search(state, Q, *, k: int, mesh: Optional[Mesh] = None,
     prep_names = plan.prep_names if prep_on else ()
 
     def build():
-        def local(q, kv, rep_t, shard_t):
+        def local(q, kv, ok_t, rep_t, shard_t):
             loc = {nm: a[0] for nm, a in zip(shard_names, shard_t)}
             rep = dict(zip(rep_names + prep_names, rep_t))
             kn = dict(zip(plan.knob_names, kv))
             vals, ids = plan.local_topk(q, kn, loc, rep, env, metric, carry)
+            # a dead shard presents every candidate as the merge tree's
+            # (+inf, -1) sentinel — exactly a shard with zero valid rows,
+            # so the fold stays exact over the survivors
+            alive = ok_t[0]
+            vals = jnp.where(alive, vals, jnp.inf)
+            ids = jnp.where(alive, ids, -1)
             return tree_merge_topk(
                 vals, ids, axes=axes, axis_sizes=sizes, k=k,
                 codec=codec, carry=carry, fan_in=fan_in,
@@ -254,23 +310,24 @@ def sharded_search(state, Q, *, k: int, mesh: Optional[Mesh] = None,
         n_rep = len(rep_names) + len(prep_names)
         shm = shard_map(
             local, mesh=mesh,
-            in_specs=(P(), (P(),) * len(plan.knob_names),
+            in_specs=(P(), (P(),) * len(plan.knob_names), P(axes),
                       (P(),) * n_rep, (P(axes),) * len(shard_names)),
             out_specs=(P(), P()), check_rep=False)
 
-        def outer(q, kv, rep_t, shard_t):
+        def outer(q, kv, ok, rep_t, shard_t):
             if prep_names:
                 extra = plan.prep(q, dict(zip(rep_names, rep_t)), env,
                                   metric)
                 rep_t = rep_t + tuple(extra[nm] for nm in prep_names)
-            return shm(q, kv, rep_t, shard_t)
+            return shm(q, kv, ok, rep_t, shard_t)
 
         return jax.jit(outer)
 
     fn = cached_fn(key, build)
     Qp = prepare_queries(Q, metric)
     kv = tuple(jnp.asarray(v, jnp.int32) for v in knobs)
-    return fn(Qp, kv, tuple(state[nm] for nm in rep_names),
+    return fn(Qp, kv, jnp.asarray(ok_arg),
+              tuple(state[nm] for nm in rep_names),
               tuple(state[nm] for nm in shard_names))
 
 

@@ -44,7 +44,8 @@ from repro.core.metrics import recall_from_arrays
 from repro.data import get_dataset
 from repro.launch.knobs import coerce, parse_build, parse_kv
 from repro.serve import (AdmissionError, AsyncEngine, CheckpointError,
-                         DeadlineExceeded, Engine)
+                         DeadlineExceeded, Engine, FaultPlan, RetryPolicy,
+                         ServeError, faults)
 
 # pre-ISSUE-6 import surface (repro.launch.tune used to pull these from
 # here); the canonical home is repro.launch.knobs.
@@ -203,7 +204,11 @@ def churn_loop(eng: Engine, ds, args) -> float:
 
 
 def stream_loop(eng: Engine, ds, args) -> float:
-    """Open-loop Poisson arrivals through the AsyncEngine pump."""
+    """Open-loop Poisson arrivals through the AsyncEngine pump.
+
+    ``--faults`` installs a seeded :class:`FaultPlan` for the duration of
+    the stream (chaos mode: degraded responses, transient retries);
+    ``--retry`` tunes the pump's :class:`RetryPolicy`."""
     k = args.count
     rng = np.random.default_rng(0)
     rate = args.rate
@@ -215,41 +220,66 @@ def stream_loop(eng: Engine, ds, args) -> float:
         eng.search(ds.test[:eng.batch_size])
         svc = time.perf_counter() - t0
         rate = 0.5 * eng.batch_size / max(svc, 1e-6)
+    plan = FaultPlan.from_spec(args.faults) if args.faults else None
+    retry = RetryPolicy.from_spec(args.retry) if args.retry else None
     print(f"[serve] stream: {args.n_requests} requests, Poisson "
           f"{rate:.0f}/s, max_wait={args.max_wait_ms} ms, "
-          f"deadline={args.deadline_ms} ms, max_queue={args.max_queue}")
+          f"deadline={args.deadline_ms} ms, max_queue={args.max_queue}"
+          + (f", faults={plan.describe()}" if plan else ""))
     srv = AsyncEngine(eng, max_wait_ms=args.max_wait_ms,
                       max_queue=args.max_queue,
-                      default_deadline_ms=args.deadline_ms)
+                      default_deadline_ms=args.deadline_ms,
+                      retry=retry)
     gaps = rng.exponential(1.0 / rate, args.n_requests)
     sels = rng.integers(0, len(ds.test), args.n_requests)
-    inflight, rejected = [], 0
-    for sel, gap in zip(sels, gaps):
-        try:
-            inflight.append((srv.submit(ds.test[sel]), int(sel)))
-        except AdmissionError:
-            rejected += 1
-        time.sleep(gap)
-    answered_ids, answered_sel, timed_out = [], [], 0
-    for ticket, sel in inflight:
-        try:
-            _, ids = ticket.result(timeout=60)
-        except DeadlineExceeded:
-            timed_out += 1
-            continue
-        answered_ids.append(ids)
-        answered_sel.append(sel)
+    if plan is not None:
+        faults.install(plan)
+    try:
+        inflight, rejected = [], 0
+        for sel, gap in zip(sels, gaps):
+            try:
+                inflight.append((srv.submit(ds.test[sel]), int(sel)))
+            except AdmissionError:
+                rejected += 1
+            time.sleep(gap)
+        answered_ids, answered_sel = [], []
+        timed_out = failed = degraded = 0
+        for ticket, sel in inflight:
+            try:
+                _, ids = ticket.result(timeout=60)
+            except DeadlineExceeded:
+                timed_out += 1
+                continue
+            except ServeError as e:
+                failed += 1            # e.g. RetriesExhausted under chaos
+                print(f"[serve] request failed: {type(e).__name__}: {e}")
+                continue
+            if ticket.partial:
+                degraded += 1
+                continue               # partial answers skew recall; report
+            answered_ids.append(ids)
+            answered_sel.append(sel)
+    finally:
+        if plan is not None:
+            faults.clear()
     srv.close()
     agg = float("nan")
     if answered_ids:
         ids = np.stack(answered_ids)
         sel = np.asarray(answered_sel)
         agg = float(np.mean(_recall_rows(ds, ds.test[sel], ids, sel, k)))
-    lat = srv.metrics.snapshot()["latency_ms"]
+    snap = srv.metrics.snapshot()
+    lat = snap["latency_ms"]
     print(f"[serve] answered {len(answered_ids)}/{args.n_requests} "
-          f"(timed out {timed_out}, rejected {rejected}) in "
+          f"(timed out {timed_out}, rejected {rejected}, failed {failed}, "
+          f"degraded {degraded}) in "
           f"{srv.metrics.counter('batches')} micro-batches; "
-          f"mean recall@{k} = {agg:.3f}")
+          f"mean full-coverage recall@{k} = {agg:.3f}")
+    if degraded or failed:
+        cov = snap["coverage"]
+        print(f"[serve] chaos: retried={srv.metrics.counter('retried')} "
+              f"coverage p5={cov['p5']:.3f} p50={cov['p50']:.3f} "
+              f"min={cov['min']:.3f}")
     print(f"[serve] latency ms: p50={lat['p50']:.2f} p95={lat['p95']:.2f} "
           f"p99={lat['p99']:.2f} max={lat['max']:.2f}")
     return agg
@@ -291,6 +321,14 @@ def main(argv=None):
                    help="per-request deadline; late answers time out")
     p.add_argument("--max-queue", type=int, default=1024,
                    help="admission bound: reject beyond this queue depth")
+    p.add_argument("--faults", default=None,
+                   help="chaos mode: seeded fault plan for the stream, "
+                        "e.g. 'seed=7,shard_drop=0.1,shard_raise=0.05' "
+                        "(see repro.serve.faults.FaultPlan.from_spec)")
+    p.add_argument("--retry", default=None,
+                   help="retry policy for transient faults, e.g. "
+                        "'attempts=4,base_ms=2,jitter=0.5' "
+                        "(see repro.serve.retry.RetryPolicy.from_spec)")
     # churn-mode knobs
     p.add_argument("--churn-inserts", type=int, default=32,
                    help="rows inserted (and later deleted) per iteration "

@@ -409,6 +409,12 @@ def compact(state: IndexState) -> IndexState:
     untouched (tests/test_mutate.py kills a child exactly here).
     """
     _require_mutable(state, "compact()")
+    # fault-injection point: an installed FaultPlan with compact_fault
+    # scheduled raises CompactionError HERE, before any new state exists,
+    # so the caller's serving state is provably untouched (lazy import —
+    # repro.mutate must stay importable without the serve package loaded)
+    from repro.serve import faults as _faults
+    _faults.compaction_attempt()
     metric = state.metric
     inner_name = state.stat("inner")
     cap = state.stat("delta_capacity")

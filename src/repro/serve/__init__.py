@@ -1,30 +1,44 @@
 """Serving tier over the functional index core.
 
-Three layers, composing upward:
+Layers, composing upward:
 
   * :mod:`repro.serve.engine` — the synchronous micro-batching
-    :class:`Engine` (one fixed padded trace per resident IndexState) and
-    the :class:`Ticket` request future.
+    :class:`Engine` (one fixed padded trace per resident IndexState), the
+    :class:`Ticket` request future, and background :class:`Compaction`
+    handles.
   * :mod:`repro.serve.async_engine` — the SLO-aware background pump
     (:class:`AsyncEngine`): timeout-based flush, per-request deadlines,
-    admission control, multi-tenant routing, latency percentiles.
+    admission control, multi-tenant routing, latency percentiles, plus
+    the fault-tolerance surface (retries, degraded coverage, pump
+    supervisor).
   * :mod:`repro.serve.checkpoint` — the one checkpoint surface
     (single-state ``.npz`` + multi-tenant archives, explicit version
-    negotiation).
+    negotiation, corrupt-file hardening).
+  * :mod:`repro.serve.retry` — :class:`RetryPolicy`: exponential backoff
+    with deterministic jitter for transient faults.
+  * :mod:`repro.serve.faults` — deterministic fault injection
+    (:class:`FaultPlan`) for chaos tests and the availability benchmark.
 """
 
+from repro.serve import faults
 from repro.serve.async_engine import DEFAULT_TENANT, AsyncEngine
 from repro.serve.checkpoint import (ARCHIVE_VERSION, CHECKPOINT_VERSION,
                                     CheckpointError, load_state, save_state)
-from repro.serve.engine import Engine, Ticket
-from repro.serve.errors import (AdmissionError, DeadlineExceeded,
-                                EngineClosed, ServeError)
+from repro.serve.engine import Compaction, Engine, Ticket
+from repro.serve.errors import (AdmissionError, CompactionError,
+                                DeadlineExceeded, EngineClosed,
+                                EngineDegraded, RetriesExhausted,
+                                ServeError, ShardFault, TransientFault)
+from repro.serve.faults import FaultPlan, PumpFault
 from repro.serve.metrics import LatencyHistogram, ServeMetrics
+from repro.serve.retry import RetryPolicy
 
 __all__ = [
-    "Engine", "Ticket", "AsyncEngine", "DEFAULT_TENANT",
+    "Engine", "Ticket", "Compaction", "AsyncEngine", "DEFAULT_TENANT",
     "ServeMetrics", "LatencyHistogram",
     "ServeError", "AdmissionError", "DeadlineExceeded", "EngineClosed",
+    "EngineDegraded", "TransientFault", "ShardFault", "RetriesExhausted",
+    "CompactionError", "PumpFault", "FaultPlan", "RetryPolicy", "faults",
     "CheckpointError", "CHECKPOINT_VERSION", "ARCHIVE_VERSION",
     "save_state", "load_state",
 ]

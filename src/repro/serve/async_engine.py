@@ -33,6 +33,13 @@ needs — one process, one pump thread, many resident indexes:
     lands in a :class:`~repro.serve.metrics.ServeMetrics` histogram
     (p50/p95/p99 per tenant and overall), the numbers the
     ``bench_serving`` CI gate enforces.
+  * **fault tolerance** — transient shard faults retry with exponential
+    backoff and deterministic jitter
+    (:class:`~repro.serve.retry.RetryPolicy`); degraded sharded answers
+    resolve with ``ticket.coverage < 1`` instead of failing; and a pump
+    supervisor fails every outstanding ticket with
+    :class:`~repro.serve.errors.EngineDegraded` if the pump thread ever
+    dies, so ``ticket.result()`` can never hang on a dead pump.
 
 The pump is a plain daemon thread (the device work releases the GIL
 inside jax, and a thread needs no event-loop plumbing in callers); each
@@ -51,9 +58,12 @@ from typing import Dict, Mapping, Optional, Tuple, Union
 import numpy as np
 
 from repro.serve import checkpoint as _ckpt
+from repro.serve import faults as _faults
 from repro.serve.engine import Engine, Ticket, _override_key
-from repro.serve.errors import AdmissionError, EngineClosed
+from repro.serve.errors import (AdmissionError, EngineClosed,
+                                EngineDegraded, RetriesExhausted)
 from repro.serve.metrics import ServeMetrics
+from repro.serve.retry import RetryPolicy
 
 #: tenant name used when an AsyncEngine wraps a single Engine.
 DEFAULT_TENANT = "default"
@@ -94,7 +104,8 @@ class AsyncEngine:
                  max_batch: Optional[int] = None,
                  max_queue: int = 1024,
                  default_deadline_ms: Optional[float] = None,
-                 metrics: Optional[ServeMetrics] = None):
+                 metrics: Optional[ServeMetrics] = None,
+                 retry: Optional[RetryPolicy] = None):
         if isinstance(engines, Engine):
             engines = {DEFAULT_TENANT: engines}
         self.engines: Dict[str, Engine] = dict(engines)
@@ -111,13 +122,22 @@ class AsyncEngine:
         self.default_deadline_s = (None if default_deadline_ms is None
                                    else float(default_deadline_ms) / 1e3)
         self.metrics = metrics if metrics is not None else ServeMetrics()
+        # transient faults (ShardFault etc.) retry under this policy;
+        # RetryPolicy(max_attempts=1) disables retrying
+        self.retry = retry if retry is not None else RetryPolicy()
         self.last_service_s = 0.0     # most recent micro-batch device+host
         self._queue: deque = deque()
         self._lock = threading.Lock()
         self._cond = threading.Condition(self._lock)
         self._closed = False
+        self._degraded: Optional[BaseException] = None
+        # the batch the pump popped but has not resolved yet — only the
+        # pump thread touches it, and the supervisor (which also runs on
+        # the pump thread, as its last act) fails it on pump death so no
+        # admitted ticket can ever be left hanging
+        self._inflight: list = []
         self._seq = 0
-        self._pump = threading.Thread(target=self._pump_loop,
+        self._pump = threading.Thread(target=self._pump_main,
                                       name="repro-serve-pump", daemon=True)
         self._pump.start()
 
@@ -133,11 +153,15 @@ class AsyncEngine:
 
         Every ticket admitted before close() is resolved — answered, or
         :class:`DeadlineExceeded` if its deadline lapses during the drain
-        — before the pump thread exits.  Idempotent."""
+        — before the pump thread exits.  Any in-flight background
+        compactions are joined too, so no daemon rebuild thread outlives
+        the tier.  Idempotent."""
         with self._cond:
             self._closed = True
             self._cond.notify_all()
         self._pump.join(timeout)
+        for eng in self.engines.values():
+            eng.join_compactions(timeout)
 
     @property
     def closed(self) -> bool:
@@ -185,6 +209,13 @@ class AsyncEngine:
                       else deadline_ms / 1e3)
         q = np.asarray(q)
         with self._cond:
+            if self._degraded is not None:
+                raise EngineDegraded(
+                    "the pump thread died "
+                    f"({type(self._degraded).__name__}: {self._degraded}); "
+                    "this AsyncEngine no longer serves — rebuild it "
+                    "(outstanding tickets were failed, not hung)"
+                ) from self._degraded
             if self._closed:
                 raise EngineClosed("submit() after close(); the pump no "
                                    "longer admits requests")
@@ -267,6 +298,41 @@ class AsyncEngine:
         self._queue = keep
         return take
 
+    def _pump_main(self) -> None:
+        """Pump thread entry: supervise :meth:`_pump_loop`.
+
+        If the loop ever escapes with an exception (a bug, or an injected
+        :class:`~repro.serve.faults.PumpFault`), the tier must not hang
+        every outstanding ``ticket.result()`` forever — the supervisor
+        marks the engine degraded and fails every admitted-but-unresolved
+        ticket with :class:`EngineDegraded` before the thread exits."""
+        try:
+            self._pump_loop()
+        except BaseException as e:                  # noqa: BLE001
+            self._mark_degraded(e)
+
+    def _mark_degraded(self, cause: BaseException) -> None:
+        """Fail every outstanding ticket and refuse future admission.
+
+        Runs on the (dying) pump thread, so ``_inflight`` — touched only
+        by the pump — needs no lock; the queue sweep happens under
+        ``_cond`` so no concurrent ``submit()`` can slip a ticket in
+        between the sweep and the degraded flag."""
+        with self._cond:
+            self._degraded = cause
+            queued = list(self._queue)
+            self._queue = deque()
+            self._cond.notify_all()
+        victims = self._inflight + queued
+        self._inflight = []
+        err = EngineDegraded(
+            f"pump thread died: {type(cause).__name__}: {cause}")
+        err.__cause__ = cause
+        for r in victims:
+            if not r.ticket.done():
+                r.ticket._fail(err)
+                self.metrics.count("failed", tenant=r.tenant)
+
     def _pump_loop(self) -> None:
         while True:
             with self._cond:
@@ -283,12 +349,31 @@ class AsyncEngine:
                 r.ticket._time_out()
                 self.metrics.count("timed_out", tenant=r.tenant)
             if batch:
+                self._inflight = batch
+                # deliberately OUTSIDE _serve's try: an injected pump
+                # death must kill the loop (exercising the supervisor),
+                # not be absorbed as a per-batch failure
+                _faults.pump_tick()
                 self._serve(batch)
+                self._inflight = []
             if done:
                 return
 
+    def _retry_viable(self, live: list, delay_s: float,
+                      now: float) -> bool:
+        """Another attempt is worth it only if some live ticket could
+        still meet its deadline after sleeping ``delay_s``."""
+        return any(r.ticket._deadline is None
+                   or r.ticket._deadline > now + delay_s for r in live)
+
     def _serve(self, batch: list) -> None:
-        """One micro-batch through the tenant's fixed-shape trace."""
+        """One micro-batch through the tenant's fixed-shape trace.
+
+        Transient faults (:class:`~repro.serve.errors.TransientFault`,
+        e.g. a shard raising mid-search) retry under ``self.retry`` with
+        exponential backoff and deterministic jitter, but only while some
+        live ticket's deadline can still be met; exhausted budgets fail
+        the batch's tickets with :class:`RetriesExhausted`."""
         eng = self.engines[batch[0].tenant]
         t0 = time.perf_counter()
         # re-check deadlines at service time (they may have lapsed between
@@ -303,26 +388,57 @@ class AsyncEngine:
                 live.append(r)
         if not live:
             return
-        try:
-            Qb = np.stack([r.q for r in live])
-            dists, ids = eng._run_padded(eng._pad_batch(Qb), len(live),
-                                         live[0].overrides)
-            dists, ids = np.asarray(dists), np.asarray(ids)
-        except Exception as e:                      # noqa: BLE001
-            # the pump must survive a poisoned batch (e.g. a bad query
-            # vector): fail ITS tickets, keep serving everyone else
-            for r in live:
-                r.ticket._fail(e)
-            return
+        tenant = live[0].tenant
+        token = int(live[0].ticket)   # keys the deterministic jitter
+        attempt = 0
+        while True:
+            attempt += 1
+            try:
+                Qb = np.stack([r.q for r in live])
+                dists, ids, coverage = eng._run_padded(
+                    eng._pad_batch(Qb), len(live), live[0].overrides)
+                dists, ids = np.asarray(dists), np.asarray(ids)
+                break
+            except Exception as e:                  # noqa: BLE001
+                if self.retry.retryable(e) \
+                        and attempt < self.retry.max_attempts:
+                    delay = self.retry.backoff_s(attempt, token=token)
+                    if self._retry_viable(live, delay,
+                                          time.perf_counter()):
+                        self.metrics.count("retried", tenant=tenant)
+                        time.sleep(delay)
+                        continue
+                    cause = e
+                    e = RetriesExhausted(
+                        f"attempt {attempt}/{self.retry.max_attempts} "
+                        f"failed ({type(cause).__name__}: {cause}) and no "
+                        f"live deadline survives the {delay * 1e3:.2f} ms "
+                        f"backoff")
+                    e.__cause__ = cause
+                elif self.retry.retryable(e):
+                    cause = e
+                    e = RetriesExhausted(
+                        f"all {self.retry.max_attempts} attempts failed; "
+                        f"last: {type(cause).__name__}: {cause}")
+                    e.__cause__ = cause
+                # the pump must survive a poisoned batch (e.g. a bad query
+                # vector): fail ITS tickets, keep serving everyone else
+                for r in live:
+                    r.ticket._fail(e)
+                    self.metrics.count("failed", tenant=r.tenant)
+                return
         done = time.perf_counter()
         self.last_service_s = done - t0
-        self.metrics.count("batches", tenant=live[0].tenant)
+        self.metrics.count("batches", tenant=tenant)
         self.metrics.count("padded", eng.batch_size - len(live),
-                           tenant=live[0].tenant)
+                           tenant=tenant)
+        if coverage < 1.0:
+            self.metrics.count("degraded", len(live), tenant=tenant)
         for i, r in enumerate(live):
-            r.ticket._resolve(dists[i], ids[i])
+            r.ticket._resolve(dists[i], ids[i], coverage=coverage)
             self.metrics.count("served", tenant=r.tenant)
             self.metrics.observe(done - r.ticket._submitted, tenant=r.tenant)
+            self.metrics.observe_coverage(coverage, tenant=r.tenant)
 
     # ------------------------------------------------------------- mutation
     # Thin passthroughs to the tenant Engine's mutation surface.  They are
@@ -343,10 +459,30 @@ class AsyncEngine:
         """Tombstone global ids on a tenant's mutable index."""
         self.engines[self._resolve_tenant(tenant)].delete(ids)
 
-    def compact(self, *, tenant: Optional[str] = None) -> None:
+    def compact(self, *, tenant: Optional[str] = None,
+                background: bool = False):
         """Compact a tenant's mutable index and hot-swap it under the
-        pump without dropping in-flight tickets."""
-        self.engines[self._resolve_tenant(tenant)].compact()
+        pump without dropping in-flight tickets.
+
+        ``background=True`` runs the rebuild on a worker thread and
+        returns a :class:`~repro.serve.engine.Compaction` handle
+        immediately — serving continues off the OLD state until the
+        hot-swap; a failed rebuild leaves serving untouched and lands in
+        ``metrics`` as ``compaction_failed``."""
+        name = self._resolve_tenant(tenant)
+
+        def on_done(error):
+            self.metrics.count(
+                "compaction_failed" if error is not None else "compactions",
+                tenant=name)
+
+        try:
+            return self.engines[name].compact(background=background,
+                                              on_done=on_done)
+        except Exception as e:
+            # foreground failure raises before Engine calls on_done
+            on_done(e)
+            raise
 
     # ---------------------------------------------------------- checkpoints
     def save(self, path):

@@ -41,6 +41,7 @@ from __future__ import annotations
 import io
 import json
 import zipfile
+import zlib
 from pathlib import Path
 from typing import Any, Dict, Mapping, Optional, Tuple
 
@@ -207,7 +208,13 @@ def _check_version(what: str, version) -> None:
         f"version {CHECKPOINT_VERSION}; {hint}")
 
 
-def _state_from_npz(file_like, what: str) -> Tuple[IndexState, dict]:
+def _state_from_npz(file_like, what: str,
+                    nbytes: Optional[int] = None) -> Tuple[IndexState, dict]:
+    """Parse one single-state npz; every way a truncated or bit-flipped
+    file can fail (bad zip directory, short member, zlib CRC, mangled
+    JSON, missing array key) surfaces as :class:`CheckpointError` naming
+    the file and its byte size — never a raw decoder traceback."""
+    size = "" if nbytes is None else f" ({nbytes} bytes on disk)"
     try:
         with np.load(file_like) as z:
             if _META_KEY not in z:
@@ -217,8 +224,13 @@ def _state_from_npz(file_like, what: str) -> Tuple[IndexState, dict]:
             meta = json.loads(bytes(z[_META_KEY].tobytes()).decode())
             _check_version(what, meta.get("version"))
             arrays = _unflatten_arrays(z, meta["layout"])
-    except (zipfile.BadZipFile, ValueError) as e:
-        raise CheckpointError(f"unreadable checkpoint {what}: {e}") from e
+    except (zipfile.BadZipFile, zlib.error, ValueError, OSError,
+            EOFError, KeyError) as e:
+        raise CheckpointError(
+            f"unreadable or corrupt checkpoint {what}{size}: "
+            f"{type(e).__name__}: {e} — the file is likely truncated or "
+            f"bit-flipped; restore from a good copy (save() writes "
+            f"atomically, so a crashed writer cannot produce this)") from e
     static = {k: _unjsonable(v) for k, v in meta["static"].items()}
     state = IndexState(meta["algo"], meta["metric"], arrays, static)
     return state, meta.get("extra", {})
@@ -263,6 +275,15 @@ def save(path, target, *, extra: Optional[dict] = None) -> Path:
     else:
         raise TypeError(f"cannot checkpoint {type(target).__name__}; "
                         f"pass an IndexState or a tenant mapping")
+    # fault-injection point: a FaultPlan with ckpt_truncate scheduled
+    # chops the TMP file before the atomic rename, simulating a torn
+    # write that somehow got renamed (e.g. a dying disk acking early) —
+    # load() must answer with CheckpointError, never a decoder traceback
+    from repro.serve import faults as _faults
+    keep = _faults.checkpoint_keep_bytes(tmp.stat().st_size)
+    if keep is not None:
+        with open(tmp, "r+b") as f:
+            f.truncate(keep)
     tmp.replace(path)
     return path
 
@@ -277,6 +298,7 @@ def load(path) -> CheckpointContents:
     path = Path(path)
     if not path.exists():
         raise CheckpointError(f"no checkpoint at {path}")
+    nbytes = path.stat().st_size
     try:
         with zipfile.ZipFile(path) as zf:
             names = set(zf.namelist())
@@ -286,9 +308,12 @@ def load(path) -> CheckpointContents:
                 raise CheckpointError(
                     f"{path} is not an Engine checkpoint (missing metadata "
                     f"record; was it written by the old pickle path?)")
-    except zipfile.BadZipFile as e:
-        raise CheckpointError(f"unreadable checkpoint {path}: {e}") from e
-    state, extra = _state_from_npz(path, str(path))
+    except (zipfile.BadZipFile, EOFError, OSError) as e:
+        raise CheckpointError(
+            f"unreadable or corrupt checkpoint {path} ({nbytes} bytes on "
+            f"disk): {type(e).__name__}: {e} — the file is likely "
+            f"truncated or bit-flipped; restore from a good copy") from e
+    state, extra = _state_from_npz(path, str(path), nbytes=nbytes)
     return CheckpointContents(default=(state, extra))
 
 
@@ -313,7 +338,14 @@ def _load_archive(path: Path, zf: zipfile.ZipFile) -> CheckpointContents:
             raise CheckpointError(
                 f"archive {path} names member {member!r} for tenant "
                 f"{tenant!r} but it is missing") from e
-        out[tenant] = _state_from_npz(io.BytesIO(blob), what)
+        except (zipfile.BadZipFile, zlib.error, OSError, EOFError) as e:
+            raise CheckpointError(
+                f"archive member {member!r} for tenant {tenant!r} in "
+                f"{path} is unreadable ({type(e).__name__}: {e}) — the "
+                f"archive is likely truncated or bit-flipped; restore "
+                f"from a good copy") from e
+        out[tenant] = _state_from_npz(io.BytesIO(blob), what,
+                                      nbytes=len(blob))
     if not out:
         raise CheckpointError(f"archive {path} holds no tenant states")
     return out

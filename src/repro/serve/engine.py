@@ -58,6 +58,7 @@ from repro.serve.checkpoint import (ARCHIVE_VERSION,          # noqa: F401
                                     CHECKPOINT_VERSION, CheckpointError,
                                     load_state, save_state)
 from repro.serve.errors import DeadlineExceeded
+from repro.serve import faults as _faults
 
 
 class Ticket(int):
@@ -87,7 +88,16 @@ class Ticket(int):
         t._deadline = (None if deadline_s is None
                        else t._submitted + deadline_s)
         t.tenant = tenant
+        t.coverage: Optional[float] = None   # set at resolve; 1.0 = full
         return t
+
+    @property
+    def partial(self) -> bool:
+        """True if the answer is degraded: it was computed over a subset
+        of the index's shards (``coverage < 1``).  The merge is exact
+        over the surviving shards — these are the best answers the live
+        part of the index can give, flagged rather than hidden."""
+        return self.coverage is not None and self.coverage < 1.0
 
     # ----------------------------------------------------------- client side
     def done(self) -> bool:
@@ -116,7 +126,9 @@ class Ticket(int):
         return (now if now is not None else time.perf_counter()) \
             > self._deadline
 
-    def _resolve(self, dists: np.ndarray, ids: np.ndarray) -> None:
+    def _resolve(self, dists: np.ndarray, ids: np.ndarray,
+                 coverage: float = 1.0) -> None:
+        self.coverage = float(coverage)
         self._value = (dists, ids)
         self._event.set()
 
@@ -130,6 +142,45 @@ class Ticket(int):
         self._fail(DeadlineExceeded(
             f"request {int(self)} missed its {budget:.1f} ms deadline "
             f"({waited:.1f} ms elapsed before its micro-batch ran)"))
+
+
+# --------------------------------------------------------------------------
+# background compaction handle
+# --------------------------------------------------------------------------
+
+class Compaction:
+    """Handle for one ``Engine.compact(background=True)`` run.
+
+    ``join()`` waits for it; ``error`` is the rebuild's exception (None
+    on success).  A failed background compaction never touches the
+    serving state — the rebuild is pure and the swap only happens on
+    success — so ``error`` is a report, not a recovery problem.
+    """
+
+    def __init__(self):
+        self._event = threading.Event()
+        self.error: Optional[BaseException] = None
+
+    def done(self) -> bool:
+        return self._event.is_set()
+
+    @property
+    def ok(self) -> bool:
+        """True once finished successfully (state swapped)."""
+        return self._event.is_set() and self.error is None
+
+    def join(self, timeout: Optional[float] = None) -> "Compaction":
+        """Wait for the rebuild; raises ``TimeoutError`` if it is still
+        running after ``timeout`` (the rebuild itself is NOT cancelled —
+        it finishes or fails under the mutation lock either way)."""
+        if not self._event.wait(timeout):
+            raise TimeoutError(
+                f"background compaction still running after {timeout}s")
+        return self
+
+    def _finish(self, error: Optional[BaseException]) -> None:
+        self.error = error
+        self._event.set()
 
 
 # --------------------------------------------------------------------------
@@ -183,9 +234,22 @@ class Engine:
         # (state swaps are a single attribute write, _run_padded reads
         # self.state exactly once per batch)
         self._mutate_lock = threading.Lock()
+        # outstanding background-compaction handles (close() drains them)
+        self._compactions: list = []
+        # sharded states always thread a [n_shards] keep-mask through the
+        # serving trace (all-True normally) so a degraded call — some
+        # shards masked by the fault layer — rides the SAME compiled
+        # program: zero retraces under faults, identity without them
+        shard_axes = state.static.get("shard_axes")
+        self._n_shards = (int(state.stat("n_shards")) if shard_axes
+                          else 0)
+        self._shard_all_ok = (np.ones(self._n_shards, bool)
+                              if self._n_shards else None)
+        self.last_coverage = 1.0     # min coverage of the last search()
         self.stats = {"queries": 0, "batches": 0, "padded": 0,
                       "device_time_s": 0.0, "inserts": 0, "deletes": 0,
-                      "compactions": 0}
+                      "compactions": 0, "compaction_failures": 0,
+                      "degraded": 0}
 
     # ---------------------------------------------------------- constructors
     @classmethod
@@ -251,10 +315,27 @@ class Engine:
                     f"rebuild the Engine with a larger {cap}")
 
     def _run_padded(self, Qb: np.ndarray, n_live: int, overrides):
-        """One fixed-shape device call: Qb is already [batch_size, d]."""
+        """One fixed-shape device call: Qb is already [batch_size, d].
+
+        Returns ``(dists, ids, coverage)``; coverage < 1 means the state
+        is sharded and the fault layer masked some shards for this batch
+        (the answers are exact over the surviving shards).  The fault
+        hook runs HERE, host-side, because ``self._search`` is the outer
+        jit — inside it the hook in ``sharded_search`` sees tracers and
+        defers to the mask we pass in."""
         params = dict(self.query_params)
         params.update(overrides)
         self._check_caps(params)
+        coverage = 1.0
+        if self._n_shards:
+            mask = _faults.shard_events(self._n_shards)  # raises/sleeps per plan
+            if mask is None:
+                mask = self._shard_all_ok
+            else:
+                from repro.dist.shard_state import shard_coverage
+                coverage = shard_coverage(self.state, mask)
+                self.stats["degraded"] += n_live
+            params["shard_ok"] = mask
         t0 = time.perf_counter()
         dists, ids = self._search(self.state, Qb, k=self.k, **params)
         ids = jax.block_until_ready(ids)
@@ -262,7 +343,7 @@ class Engine:
         self.stats["batches"] += 1
         self.stats["queries"] += n_live
         self.stats["padded"] += Qb.shape[0] - n_live
-        return dists, ids
+        return dists, ids, coverage
 
     def _pad_batch(self, Q: np.ndarray) -> np.ndarray:
         pad = self.batch_size - Q.shape[0]
@@ -285,11 +366,13 @@ class Engine:
             return (np.empty((0, self.k), np.float32),
                     np.empty((0, self.k), np.int32))
         ids_out, dists_out = [], []
+        self.last_coverage = 1.0
         for s in range(0, nq, self.batch_size):
             blk = Q[s:s + self.batch_size]
             live = blk.shape[0]
-            dists, ids = self._run_padded(self._pad_batch(blk), live,
-                                          overrides)
+            dists, ids, cov = self._run_padded(self._pad_batch(blk), live,
+                                               overrides)
+            self.last_coverage = min(self.last_coverage, cov)
             ids_out.append(np.asarray(ids[:live]))
             dists_out.append(np.asarray(dists[:live]))
         return np.concatenate(dists_out), np.concatenate(ids_out)
@@ -338,7 +421,8 @@ class Engine:
             self.state = mutate.delete(self.state, ids)
             self.stats["deletes"] += int(np.asarray(ids).reshape(-1).size)
 
-    def compact(self) -> None:
+    def compact(self, *, background: bool = False,
+                on_done=None) -> Optional[Compaction]:
         """Fold the delta into a fresh main index and hot-swap it in.
 
         In-flight and concurrently submitted requests are never dropped:
@@ -346,12 +430,65 @@ class Engine:
         write (see the section comment).  MutableBruteForce swaps preserve
         the serving trace (same shapes); MutableIVF re-clusters and
         retraces once.
+
+        ``background=True`` runs the rebuild on its own thread — still
+        under the mutation lock (inserts/deletes queue behind it; the
+        serving path never blocks) — and returns a :class:`Compaction`
+        handle immediately.  On success the new state hot-swaps in; on
+        failure (including an injected
+        :class:`~repro.serve.errors.CompactionError`) the serving state
+        is untouched, ``stats["compaction_failures"]`` increments, and
+        the error lands on the handle (and ``on_done(error)``, if given)
+        — never on the serving threads.  A foreground failure raises.
         """
         from repro import mutate
 
-        with self._mutate_lock:
-            self.state = mutate.compact(self.state)
-            self.stats["compactions"] += 1
+        if not background:
+            with self._mutate_lock:
+                try:
+                    new_state = mutate.compact(self.state)
+                except BaseException:
+                    self.stats["compaction_failures"] += 1
+                    raise
+                self.state = new_state
+                self.stats["compactions"] += 1
+            if on_done is not None:
+                on_done(None)
+            return None
+
+        handle = Compaction()
+        self._compactions.append(handle)
+
+        def run():
+            error = None
+            try:
+                with self._mutate_lock:
+                    new_state = mutate.compact(self.state)
+                    self.state = new_state
+                    self.stats["compactions"] += 1
+            except BaseException as e:          # noqa: BLE001
+                error = e
+                self.stats["compaction_failures"] += 1
+            handle._finish(error)
+            if on_done is not None:
+                on_done(error)
+
+        threading.Thread(target=run, name="repro-serve-compact",
+                         daemon=True).start()
+        return handle
+
+    def join_compactions(self, timeout: Optional[float] = None) -> bool:
+        """Drain outstanding background compactions (True if all
+        finished within ``timeout``).  Finished handles are pruned."""
+        deadline = (None if timeout is None
+                    else time.perf_counter() + timeout)
+        for handle in list(self._compactions):
+            remaining = (None if deadline is None
+                         else max(0.0, deadline - time.perf_counter()))
+            if not handle._event.wait(remaining):
+                return False
+        self._compactions = [h for h in self._compactions if not h.done()]
+        return True
 
     # ------------------------------------------------------- request stream
     def submit(self, q, *, deadline_ms: Optional[float] = None,
@@ -412,13 +549,13 @@ class Engine:
                 continue
             Qb = np.stack([q for _, q, _, _ in live_items])
             live = Qb.shape[0]
-            dists, ids = self._run_padded(self._pad_batch(Qb), live,
-                                          live_items[0][3])
+            dists, ids, cov = self._run_padded(self._pad_batch(Qb), live,
+                                               live_items[0][3])
             self._pending = rest
             ids = np.asarray(ids)
             dists = np.asarray(dists)
             for i, (ticket, _, _, _) in enumerate(live_items):
-                ticket._resolve(dists[i], ids[i])
+                ticket._resolve(dists[i], ids[i], coverage=cov)
                 self._results[int(ticket)] = ticket
 
     def _realise(self, ticket: Ticket, timeout) -> None:

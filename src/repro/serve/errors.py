@@ -13,6 +13,16 @@ load-generator gates in ``benchmarks/bench_serving.py``) discriminate by
     ``ticket.result()`` raises this instead of returning stale answers.
     Subclasses :class:`TimeoutError` so generic timeout handling works.
   * :class:`EngineClosed` — ``submit()`` after the pump was shut down.
+  * :class:`EngineDegraded` — the pump thread died; its supervisor failed
+    every outstanding ticket with this (so ``ticket.result()`` can never
+    hang on a dead pump) and ``submit()`` refuses new work.
+  * :class:`TransientFault` / :class:`ShardFault` — retryable failures;
+    the pump's :class:`~repro.serve.retry.RetryPolicy` retries these with
+    backoff before they surface.
+  * :class:`RetriesExhausted` — a transient fault outlived the retry
+    budget (attempts, or every live deadline); wraps the last cause.
+  * :class:`CompactionError` — a compaction rebuild failed (including an
+    injected fault); the serving state is guaranteed untouched.
 
 :class:`~repro.serve.checkpoint.CheckpointError` lives with the
 checkpoint code; it is re-exported from :mod:`repro.serve` alongside
@@ -36,3 +46,33 @@ class DeadlineExceeded(ServeError, TimeoutError):
 
 class EngineClosed(ServeError):
     """Request submitted to a pump that has been shut down."""
+
+
+class EngineDegraded(ServeError):
+    """The pump thread died: outstanding tickets were failed with this
+    and ``submit()`` refuses new requests — build a fresh AsyncEngine
+    (the resident Engines and their states are still intact)."""
+
+
+class TransientFault(ServeError):
+    """A retryable serving failure (the fault may pass on a retry).
+
+    The async pump retries these under its
+    :class:`~repro.serve.retry.RetryPolicy`; only an exhausted budget
+    surfaces, as :class:`RetriesExhausted`."""
+
+
+class ShardFault(TransientFault):
+    """A sharded search attempt failed outright (e.g. an injected shard
+    crash before dispatch) — transient, distinct from graceful
+    degradation where the merge proceeds over the surviving shards."""
+
+
+class RetriesExhausted(ServeError):
+    """A transient fault persisted past the retry budget (max attempts,
+    or no live request deadline could absorb another backoff)."""
+
+
+class CompactionError(ServeError):
+    """A compaction rebuild failed; the pre-compaction serving state is
+    untouched (the rebuild is pure — nothing swaps until it succeeds)."""

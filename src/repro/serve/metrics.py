@@ -29,8 +29,13 @@ from typing import Dict, Optional
 
 #: counter names ServeMetrics tracks; anything else is rejected so typos
 #: in instrumentation fail loudly instead of minting a new silent counter.
+#: degraded / retried / failed / compaction* are the fault-tolerance
+#: layer's accounting: degraded = served with coverage < 1 (a shard was
+#: down), retried = micro-batch retry attempts, failed = tickets resolved
+#: to a typed error other than deadline/admission.
 COUNTERS = ("submitted", "served", "timed_out", "rejected", "batches",
-            "padded")
+            "padded", "degraded", "retried", "failed", "compactions",
+            "compaction_failed")
 
 #: aggregate key for the cross-tenant histogram / counters.
 ALL_TENANTS = "__all__"
@@ -119,6 +124,12 @@ class ServeMetrics:
         self._counters: Dict[str, Counter] = {ALL_TENANTS: Counter()}
         self._hists: Dict[str, LatencyHistogram] = {
             ALL_TENANTS: LatencyHistogram()}
+        # coverage fraction per served request (1.0 = every shard
+        # answered); the histogram machinery is unit-agnostic, the
+        # [1e-3, 1] range spans "one shard of a thousand survived" to
+        # "full coverage" with the usual ~2.4% bucket error.
+        self._coverage: Dict[str, LatencyHistogram] = {
+            ALL_TENANTS: LatencyHistogram(lo_s=1e-3, hi_s=1.0)}
 
     def _tenant_counter(self, tenant: Optional[str]) -> Counter:
         if tenant is None:
@@ -146,6 +157,22 @@ class ServeMetrics:
                     self._hists[tenant] = LatencyHistogram()
                 self._hists[tenant].record(seconds)
 
+    def observe_coverage(self, coverage: float,
+                         tenant: Optional[str] = None) -> None:
+        """Record one served request's shard coverage (1.0 = full).
+
+        Recorded for EVERY served request, not just degraded ones, so the
+        per-tenant percentiles mean "the coverage the p-th worst request
+        actually got" — the number an availability SLO is written
+        against."""
+        with self._lock:
+            self._coverage[ALL_TENANTS].record(coverage)
+            if tenant is not None:
+                if tenant not in self._coverage:
+                    self._coverage[tenant] = LatencyHistogram(
+                        lo_s=1e-3, hi_s=1.0)
+                self._coverage[tenant].record(coverage)
+
     # ------------------------------------------------------------- reading
     def counter(self, name: str, tenant: Optional[str] = None) -> int:
         with self._lock:
@@ -158,21 +185,46 @@ class ServeMetrics:
             hist = self._hists.get(tenant or ALL_TENANTS)
             return hist.percentile(p) if hist else math.nan
 
+    def coverage_percentile(self, p: float,
+                            tenant: Optional[str] = None) -> float:
+        """p-th percentile of served coverage (nan when empty).  Low
+        percentiles are the interesting tail: p5 is the coverage the 5%
+        worst-covered requests got."""
+        with self._lock:
+            hist = self._coverage.get(tenant or ALL_TENANTS)
+            return hist.percentile(p) if hist else math.nan
+
+    @staticmethod
+    def _coverage_snapshot(hist: LatencyHistogram) -> Dict[str, float]:
+        return {
+            "count": hist.count,
+            "mean": hist.mean_s,
+            "p5": hist.percentile(5),
+            "p50": hist.percentile(50),
+            "min": hist.min_s if hist.count else math.nan,
+        }
+
     def snapshot(self) -> dict:
         """One JSON-able dict: overall counters + latency (ms) +
-        the same pair per tenant — what launchers print and
-        ``bench_serving`` writes into ``BENCH_serving.json``."""
+        coverage percentiles + the same per tenant — what launchers
+        print and ``bench_serving`` writes into ``BENCH_serving.json``."""
         with self._lock:
             out = {
                 "counters": dict(self._counters[ALL_TENANTS]),
                 "latency_ms": self._hists[ALL_TENANTS].snapshot_ms(),
+                "coverage": self._coverage_snapshot(
+                    self._coverage[ALL_TENANTS]),
                 "tenants": {},
             }
             for tenant, hist in self._hists.items():
                 if tenant == ALL_TENANTS:
                     continue
-                out["tenants"][tenant] = {
+                entry = {
                     "counters": dict(self._counters.get(tenant, Counter())),
                     "latency_ms": hist.snapshot_ms(),
                 }
+                if tenant in self._coverage:
+                    entry["coverage"] = self._coverage_snapshot(
+                        self._coverage[tenant])
+                out["tenants"][tenant] = entry
             return out

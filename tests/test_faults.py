@@ -1,0 +1,522 @@
+"""Fault tolerance: injection plans, degraded merges, retries, the pump
+supervisor, background compaction, and corrupt-checkpoint hardening.
+
+Single-device tests use a 1-shard sharded state (the degraded machinery
+is shard-count agnostic); the multi-shard degraded-merge property runs on
+8 forced host devices in a subprocess (the test_dist.py pattern)."""
+
+import subprocess
+import sys
+import textwrap
+import threading
+import time
+import zipfile
+from pathlib import Path
+
+import numpy as np
+import pytest
+
+from repro.serve import (AsyncEngine, CheckpointError, CompactionError,
+                         Engine, EngineDegraded, FaultPlan, PumpFault,
+                         RetriesExhausted, RetryPolicy, ShardFault,
+                         checkpoint, faults)
+
+SRC = str(Path(__file__).resolve().parents[1] / "src")
+
+
+def run_sub(code: str, devices: int = 8) -> str:
+    prog = ("import os\n"
+            f"os.environ['XLA_FLAGS'] = "
+            f"'--xla_force_host_platform_device_count={devices}'\n"
+            + textwrap.dedent(code))
+    out = subprocess.run(
+        [sys.executable, "-c", prog], capture_output=True, text=True,
+        env={"PYTHONPATH": SRC, "PATH": "/usr/bin:/bin",
+             "HOME": "/root", "JAX_PLATFORMS": "cpu"}, timeout=600)
+    assert out.returncode == 0, out.stderr[-4000:]
+    return out.stdout
+
+
+@pytest.fixture(autouse=True)
+def _no_leaked_plan():
+    """Every test starts and ends with no installed fault plan."""
+    faults.clear()
+    faults.clear_degraded()
+    yield
+    faults.clear()
+
+
+def _sharded_engine(rng, n=300, d=16, **kw):
+    X = rng.standard_normal((n, d)).astype(np.float32)
+    kw.setdefault("k", 5)
+    kw.setdefault("batch_size", 8)
+    return X, Engine.build("ShardedBruteForce", X, metric="euclidean",
+                           build_params={"n_shards": 1}, **kw)
+
+
+# ---------------------------------------------------------------- the plan
+
+def test_fault_plan_deterministic_and_seed_sensitive():
+    decisions = [FaultPlan(seed=7, shard_drop=0.3)._roll("shard_drop", n)
+                 for n in range(50)]
+    again = [FaultPlan(seed=7, shard_drop=0.3)._roll("shard_drop", n)
+             for n in range(50)]
+    other = [FaultPlan(seed=8, shard_drop=0.3)._roll("shard_drop", n)
+             for n in range(50)]
+    assert decisions == again
+    assert decisions != other
+    # per-shard draws differ within one event
+    p = FaultPlan(seed=7)
+    assert p._roll("shard_drop", 0, extra=1) != p._roll("shard_drop", 0,
+                                                        extra=2)
+
+
+def test_fault_plan_spec_and_validation():
+    p = FaultPlan.from_spec("seed=7, shard_drop=0.1, slow_ms=5")
+    assert p.seed == 7 and p.shard_drop == 0.1 and p.slow_ms == 5.0
+    with pytest.raises(ValueError, match="unknown fault knob"):
+        FaultPlan.from_spec("shard_dorp=0.1")
+    with pytest.raises(ValueError, match="not a rate"):
+        FaultPlan(shard_raise=1.5)
+    with pytest.raises(ValueError, match="truncate_frac"):
+        FaultPlan(truncate_frac=0.0)
+    assert "shard_drop=0.1" in FaultPlan(shard_drop=0.1).describe()
+
+
+def test_injected_scoping_restores_previous_plan():
+    outer = FaultPlan(seed=1)
+    faults.install(outer)
+    with faults.injected(FaultPlan(seed=2)) as inner:
+        assert faults.active_plan() is inner
+    assert faults.active_plan() is outer
+    faults.clear()
+    assert faults.active_plan() is None
+    # hooks are no-ops with no plan
+    assert faults.shard_events(4) is None
+    faults.pump_tick()
+    faults.compaction_attempt()
+    assert faults.checkpoint_keep_bytes(100) is None
+
+
+def test_retry_policy_backoff_and_spec():
+    pol = RetryPolicy(max_attempts=4, base_ms=2.0, multiplier=2.0,
+                      max_ms=5.0, jitter=0.5, seed=3)
+    # deterministic per (token, attempt); exponential then capped
+    assert pol.backoff_s(1, token=9) == pol.backoff_s(1, token=9)
+    assert pol.backoff_s(1, token=9) != pol.backoff_s(1, token=10)
+    nojit = RetryPolicy(base_ms=2.0, multiplier=2.0, max_ms=5.0, jitter=0.0)
+    assert nojit.backoff_s(1) == pytest.approx(0.002)
+    assert nojit.backoff_s(2) == pytest.approx(0.004)
+    assert nojit.backoff_s(3) == pytest.approx(0.005)      # capped
+    # jitter stays within ±50%
+    s = pol.backoff_s(2, token=1)
+    assert 0.002 <= s <= 0.006
+    assert pol.retryable(ShardFault("x")) and not pol.retryable(ValueError())
+    assert RetryPolicy.from_spec("attempts=4,base_ms=2").max_attempts == 4
+    with pytest.raises(ValueError, match="unknown retry knob"):
+        RetryPolicy.from_spec("atempts=4")
+    with pytest.raises(ValueError, match="max_attempts"):
+        RetryPolicy(max_attempts=0)
+
+
+# ------------------------------------------------------- degraded serving
+
+def test_engine_degraded_coverage_and_zero_retrace():
+    from repro.ann import functional
+
+    rng = np.random.default_rng(0)
+    X, eng = _sharded_engine(rng)
+    d0, i0 = eng.search(X[:4])                     # warm the ONE trace
+    before = dict(functional.TRACE_COUNTS)
+    # event 0 under the plan drops the only shard -> coverage 0, all
+    # answers are the merge sentinel, and the SAME compiled program ran
+    with faults.injected(FaultPlan(shard_drop_at=((0, 0),))):
+        d1, i1 = eng.search(X[:4])
+    assert eng.last_coverage == 0.0
+    assert np.all(np.asarray(i1) == -1)
+    assert eng.stats["degraded"] == 4
+    # and a fault-free call afterwards is bitwise what it was before
+    d2, i2 = eng.search(X[:4])
+    assert eng.last_coverage == 1.0
+    np.testing.assert_array_equal(np.asarray(i2), np.asarray(i0))
+    np.testing.assert_array_equal(np.asarray(d2), np.asarray(d0))
+    assert dict(functional.TRACE_COUNTS) == before, \
+        "degraded serving must ride the SAME trace (zero retraces)"
+
+
+def test_ticket_carries_coverage_and_partial():
+    rng = np.random.default_rng(1)
+    X, eng = _sharded_engine(rng)
+    eng.search(X[:1])
+    with AsyncEngine(eng, max_wait_ms=1.0) as srv:
+        full = srv.submit(X[0])
+        full.result(timeout=30)
+        assert full.coverage == 1.0 and not full.partial
+        with faults.injected(FaultPlan(shard_drop_at=((0, 0),))):
+            part = srv.submit(X[1])
+            d, ids = part.result(timeout=30)       # degraded, NOT failed
+        assert part.coverage == 0.0 and part.partial
+        assert np.all(ids == -1)
+        m = srv.metrics
+        assert m.counter("degraded") == 1
+        assert m.coverage_percentile(5) < 1.0
+        snap = m.snapshot()
+        assert snap["coverage"]["count"] == 2
+        assert snap["counters"]["served"] == 2
+
+
+def test_direct_sharded_search_notes_degradation():
+    from repro.ann import sharded
+
+    rng = np.random.default_rng(2)
+    X = rng.standard_normal((200, 16)).astype(np.float32)
+    st = sharded.bruteforce_build(X, metric="euclidean", n_shards=1)
+    with faults.injected(FaultPlan(shard_drop_at=((0, 0),))):
+        _, ids = sharded.bruteforce_search(st, X[:2], k=3)
+    assert np.all(np.asarray(ids) == -1)
+    cov, failed = faults.last_degraded()
+    assert cov == 0.0 and failed == (0,)
+
+
+# ------------------------------------------------------------------ retries
+
+def test_transient_shard_fault_retries_then_succeeds():
+    rng = np.random.default_rng(3)
+    X, eng = _sharded_engine(rng)
+    eng.search(X[:1])
+    pol = RetryPolicy(max_attempts=3, base_ms=0.1, jitter=0.0)
+    with AsyncEngine(eng, max_wait_ms=1.0, retry=pol) as srv:
+        with faults.injected(FaultPlan(shard_raise_at=(0,))):
+            t = srv.submit(X[0])
+            d, ids = t.result(timeout=30)          # attempt 2 succeeds
+        assert np.all(ids >= 0)
+        assert srv.metrics.counter("retried") == 1
+        assert srv.metrics.counter("served") == 1
+        assert srv.metrics.counter("failed") == 0
+
+
+def test_retries_exhausted_is_typed_and_counted():
+    rng = np.random.default_rng(4)
+    X, eng = _sharded_engine(rng)
+    eng.search(X[:1])
+    pol = RetryPolicy(max_attempts=2, base_ms=0.1, jitter=0.0)
+    with AsyncEngine(eng, max_wait_ms=1.0, retry=pol) as srv:
+        with faults.injected(FaultPlan(shard_raise=1.0)):
+            t = srv.submit(X[0])
+            with pytest.raises(RetriesExhausted) as exc:
+                t.result(timeout=30)
+        assert isinstance(exc.value.__cause__, ShardFault)
+        assert srv.metrics.counter("failed") == 1
+        assert srv.metrics.counter("retried") == 1
+        # the pump survived: a later fault-free request is served
+        d, ids = srv.submit(X[1]).result(timeout=30)
+        assert np.all(ids >= 0)
+
+
+def test_deadline_aware_retry_budget_gives_up_early():
+    rng = np.random.default_rng(5)
+    X, eng = _sharded_engine(rng)
+    eng.search(X[:1])
+    # huge backoff vs a tiny deadline: the first failure must surface as
+    # RetriesExhausted immediately instead of sleeping past the deadline
+    pol = RetryPolicy(max_attempts=5, base_ms=10_000.0, max_ms=10_000.0,
+                      jitter=0.0)
+    with AsyncEngine(eng, max_wait_ms=1.0, retry=pol) as srv:
+        with faults.injected(FaultPlan(shard_raise_at=(0,))):
+            t = srv.submit(X[0], deadline_ms=200.0)
+            t0 = time.perf_counter()
+            with pytest.raises(RetriesExhausted, match="no live deadline"):
+                t.result(timeout=30)
+            assert time.perf_counter() - t0 < 5.0
+        assert srv.metrics.counter("retried") == 0
+
+
+# ----------------------------------------------------------- pump supervisor
+
+def test_pump_death_fails_tickets_instead_of_hanging():
+    """The regression this PR exists for: pump dies between admission and
+    service -> every outstanding ticket.result() must raise typed, fast."""
+    rng = np.random.default_rng(6)
+    X, eng = _sharded_engine(rng)
+    eng.search(X[:1])
+    srv = AsyncEngine(eng, max_wait_ms=5.0, max_queue=64)
+    try:
+        with faults.injected(FaultPlan(pump_death_at=(0,))):
+            tickets = [srv.submit(X[i]) for i in range(6)]
+            for t in tickets:
+                with pytest.raises(EngineDegraded, match="pump thread died"):
+                    t.result(timeout=30)           # typed, never a hang
+        assert all(t.done() for t in tickets)
+        # the tier refuses new work with the same typed error
+        with pytest.raises(EngineDegraded):
+            srv.submit(X[0])
+        assert srv.metrics.counter("failed") == 6
+        assert not srv._pump.is_alive()
+    finally:
+        srv.close(timeout=5.0)
+
+
+def test_pump_death_cause_is_preserved():
+    rng = np.random.default_rng(7)
+    X, eng = _sharded_engine(rng)
+    eng.search(X[:1])
+    srv = AsyncEngine(eng, max_wait_ms=1.0)
+    try:
+        with faults.injected(FaultPlan(pump_death_at=(0,))):
+            t = srv.submit(X[0])
+            with pytest.raises(EngineDegraded) as exc:
+                t.result(timeout=30)
+        assert isinstance(exc.value.__cause__, PumpFault)
+    finally:
+        srv.close(timeout=5.0)
+
+
+# ------------------------------------------------------ background compaction
+
+def _mutable_engine(rng, n=200, d=16):
+    X = rng.standard_normal((n, d)).astype(np.float32)
+    eng = Engine.build("MutableBruteForce", X, metric="euclidean",
+                       build_params={"delta_capacity": 32},
+                       k=5, batch_size=8)
+    eng.insert(rng.standard_normal((8, d)).astype(np.float32),
+               auto_compact=False)
+    eng.delete(np.arange(0, 20, 3))
+    return X, eng
+
+
+def test_background_compaction_success_swaps_state():
+    rng = np.random.default_rng(8)
+    X, eng = _mutable_engine(rng)
+    want_d, want_i = eng.search(X[:4])
+    handle = eng.compact(background=True)
+    assert handle.join(timeout=60).ok and handle.error is None
+    assert eng.stats["compactions"] == 1
+    assert int(eng.state["count"]) == 0            # delta folded in
+    got_d, got_i = eng.search(X[:4])
+    np.testing.assert_array_equal(got_i, want_i)   # same answers post-swap
+    assert eng.join_compactions(timeout=1.0)
+    assert eng._compactions == []                  # handle pruned
+
+
+def test_background_compaction_failure_leaves_serving_untouched():
+    rng = np.random.default_rng(9)
+    X, eng = _mutable_engine(rng)
+    state_before = eng.state
+    want_d, want_i = eng.search(X[:4])
+    with faults.injected(FaultPlan(compact_fault_at=(0,))):
+        handle = eng.compact(background=True)
+        handle.join(timeout=60)
+    assert handle.done() and not handle.ok
+    assert isinstance(handle.error, CompactionError)
+    assert eng.state is state_before               # provably untouched
+    assert eng.stats["compaction_failures"] == 1
+    assert eng.stats["compactions"] == 0
+    got_d, got_i = eng.search(X[:4])
+    np.testing.assert_array_equal(got_i, want_i)
+    # and the NEXT compaction (event 1, not scheduled) succeeds
+    assert eng.compact(background=True).join(timeout=60).ok
+    assert eng.stats["compactions"] == 1
+
+
+def test_foreground_compaction_failure_raises_and_counts():
+    rng = np.random.default_rng(10)
+    X, eng = _mutable_engine(rng)
+    state_before = eng.state
+    with faults.injected(FaultPlan(compact_fault_at=(0,))):
+        with pytest.raises(CompactionError, match="serving state untouched"):
+            eng.compact()
+    assert eng.state is state_before
+    assert eng.stats["compaction_failures"] == 1
+
+
+def test_async_compact_passthrough_counts_metrics():
+    rng = np.random.default_rng(11)
+    X, eng = _mutable_engine(rng)
+    with AsyncEngine(eng, max_wait_ms=1.0) as srv:
+        handle = srv.compact(background=True)
+        assert handle.join(timeout=60).ok
+        assert srv.metrics.counter("compactions") == 1
+        eng.insert(rng.standard_normal((4, X.shape[1])).astype(np.float32),
+                   auto_compact=False)
+        with faults.injected(FaultPlan(compact_fault_at=(0,))):
+            with pytest.raises(CompactionError):
+                srv.compact()
+        assert srv.metrics.counter("compaction_failed") == 1
+
+
+def test_async_close_joins_inflight_background_compaction(monkeypatch):
+    """close() racing a slow background compact(): close must drain the
+    rebuild thread, and the compaction still lands (or fails typed) —
+    never a half-swapped state or a leaked daemon thread."""
+    from repro.mutate import delta
+
+    rng = np.random.default_rng(12)
+    X, eng = _mutable_engine(rng)
+    real_build = delta._inner_build
+    entered = threading.Event()
+
+    def slow_build(*a, **kw):
+        entered.set()
+        time.sleep(0.25)                    # hold the rebuild mid-flight
+        return real_build(*a, **kw)
+
+    monkeypatch.setattr(delta, "_inner_build", slow_build)
+    srv = AsyncEngine(eng, max_wait_ms=1.0)
+    t = srv.submit(X[0])
+    t.result(timeout=30)
+    handle = srv.compact(background=True)
+    assert entered.wait(timeout=10), "rebuild never started"
+    srv.close(timeout=60)                   # races the sleeping rebuild
+    assert handle.done(), "close() returned with the rebuild still running"
+    assert handle.ok
+    assert eng.stats["compactions"] == 1
+    assert int(eng.state["count"]) == 0
+
+
+# ------------------------------------------------------ checkpoint hardening
+
+def _small_state(rng):
+    X = rng.standard_normal((80, 8)).astype(np.float32)
+    from repro.ann import bruteforce
+    return bruteforce.build(X, metric="euclidean")
+
+
+def test_truncated_checkpoint_raises_typed(tmp_path):
+    rng = np.random.default_rng(13)
+    path = tmp_path / "ck.npz"
+    checkpoint.save(path, _small_state(rng))
+    blob = path.read_bytes()
+    for frac in (0.1, 0.5, 0.9, 0.999):
+        path.write_bytes(blob[:int(len(blob) * frac)])
+        with pytest.raises(CheckpointError, match="truncated or bit-flip"):
+            checkpoint.load(path)
+        # the message names the file and its size
+        with pytest.raises(CheckpointError, match=str(path.name)):
+            checkpoint.load(path)
+
+
+def test_bitflipped_checkpoint_raises_typed(tmp_path):
+    rng = np.random.default_rng(14)
+    path = tmp_path / "ck.npz"
+    checkpoint.save(path, _small_state(rng))
+    blob = bytearray(path.read_bytes())
+    # flip a byte in the middle of the archive (zip member data); any
+    # decoder failure must surface as CheckpointError, and a silent
+    # corruption (stored data, no CRC check on this path) must at worst
+    # load — never crash with a raw traceback
+    blob[len(blob) // 2] ^= 0xFF
+    path.write_bytes(bytes(blob))
+    try:
+        checkpoint.load(path)
+    except CheckpointError:
+        pass
+
+
+def test_truncated_archive_member_raises_typed(tmp_path):
+    rng = np.random.default_rng(15)
+    path = tmp_path / "multi.npz"
+    checkpoint.save(path, {"a": _small_state(rng),
+                           "b": _small_state(rng)})
+    # rewrite the archive with one member chopped mid-blob
+    out = tmp_path / "cut.npz"
+    with zipfile.ZipFile(path) as zin, \
+            zipfile.ZipFile(out, "w", zipfile.ZIP_STORED) as zout:
+        for info in zin.infolist():
+            data = zin.read(info.filename)
+            if info.filename.endswith("0.npz"):
+                data = data[:len(data) // 2]
+            zout.writestr(info.filename, data)
+    with pytest.raises(CheckpointError, match="bytes on disk"):
+        checkpoint.load(out)
+
+
+def test_injected_truncation_roundtrip(tmp_path):
+    rng = np.random.default_rng(16)
+    state = _small_state(rng)
+    good, bad = tmp_path / "good.npz", tmp_path / "bad.npz"
+    # event 0 truncates, event 1 saves intact
+    with faults.injected(FaultPlan(ckpt_truncate_at=(0,),
+                                   truncate_frac=0.4)):
+        checkpoint.save(bad, state)
+        checkpoint.save(good, state)
+    with pytest.raises(CheckpointError, match="truncated or bit-flip"):
+        checkpoint.load(bad)
+    restored, _ = checkpoint.load(good).only
+    np.testing.assert_array_equal(np.asarray(restored["X"]),
+                                  np.asarray(state["X"]))
+
+
+# ------------------------------------------- degraded merge == survivors
+
+MASK_PROPERTY_BODY = """
+    import numpy as np, jax
+    from repro.ann import bruteforce, sharded
+
+    def oracle(X, ids_per_shard, mask, Q, k, metric):
+        alive = [ids_per_shard[s] for s in range(len(mask)) if mask[s]]
+        keep = (np.concatenate(alive) if alive
+                else np.empty(0, np.int32))
+        keep = np.sort(keep[keep >= 0])
+        if keep.size == 0:
+            return np.full((Q.shape[0], k), -1, np.int32)
+        inner = bruteforce.build(X[keep], metric=metric)
+        _, loc = bruteforce.search(inner, Q, k=k)
+        loc = np.asarray(loc)
+        out = np.where(loc >= 0, keep[np.clip(loc, 0, None)], -1)
+        return out.astype(np.int32)
+
+    def check(metric, X, Q, masks):
+        st = sharded.bruteforce_build(X, metric=metric, n_shards=4)
+        ids_per_shard = np.asarray(st["ids"]).reshape(4, -1)
+        for mask in masks:
+            mask = np.asarray(mask, bool)
+            _, got = sharded.bruteforce_search(st, Q, k=8,
+                                               shard_ok=mask)
+            want = oracle(X, ids_per_shard, mask, Q, 8, metric)
+            assert np.array_equal(np.asarray(got), want), \\
+                (metric, mask.tolist())
+
+    rng = np.random.default_rng(0)
+    Xe = rng.standard_normal((640, 16)).astype(np.float32)
+    Qe = rng.standard_normal((8, 16)).astype(np.float32)
+    Xh = rng.integers(0, 2, (512, 64)).astype(np.uint8)
+    Qh = rng.integers(0, 2, (6, 64)).astype(np.uint8)
+"""
+
+
+def test_masked_merge_matches_survivors_all_metrics():
+    """Any subset of shards masked: the merged ids are bitwise-identical
+    to a single-device search over the surviving shards' rows, on all
+    three metrics (the degraded-mode exactness contract)."""
+    run_sub(MASK_PROPERTY_BODY + """
+    # every mask of 4 shards, including none-alive and all-alive
+    masks = [[(m >> s) & 1 for s in range(4)] for m in range(16)]
+    check("euclidean", Xe, Qe, masks)
+    check("angular", Xe / np.linalg.norm(Xe, axis=1, keepdims=True),
+          Qe, masks)
+    check("hamming", Xh, Qh, masks)
+    print("OK")
+    """)
+
+
+def test_masked_merge_property_hypothesis():
+    """Hypothesis drives random subsets + random data through the same
+    bitwise contract (skips where hypothesis is not installed)."""
+    pytest.importorskip(
+        "hypothesis", reason="hypothesis not installed (see requirements-dev)")
+    run_sub(MASK_PROPERTY_BODY + """
+    from hypothesis import given, settings, strategies as st
+    settings.register_profile("sub", max_examples=15, deadline=None)
+    settings.load_profile("sub")
+
+    @given(mask=st.lists(st.booleans(), min_size=4, max_size=4),
+           seed=st.integers(0, 2**16))
+    def prop(mask, seed):
+        r = np.random.default_rng(seed)
+        X = r.standard_normal((320, 12)).astype(np.float32)
+        Q = r.standard_normal((4, 12)).astype(np.float32)
+        check("euclidean", X, Q, [mask])
+
+    prop()
+    print("OK")
+    """)
